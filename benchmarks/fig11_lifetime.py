@@ -1,0 +1,120 @@
+"""Fig. 11 reproduction: Monarch (M=3) lifetime vs ideal wear leveling.
+
+Methodology = the paper's (§10.3): record per-superset write counts while
+the app runs, then model constantly repeated execution with rotary offsets
+applied per rotation; lifetime ends when the hottest cell crosses the
+endurance (1e8).
+
+Three scale/granularity factors are explicit:
+
+* CAPACITY: the sim uses S_sim supersets standing in for S_REAL = 8 GB /
+  32 KB-superset = 262,144; per-superset write RATE shrinks by
+  S_sim/S_REAL on the real stack (same application write bandwidth spread
+  over more supersets).  Distribution skew (max/mean) carries over.
+* TIME: absolute lifetime depends on the application's absolute post-L3
+  write bandwidth, which only a cycle-accurate core model (the paper's
+  ESESC) produces.  We pin ONE global calibration constant — the CPU
+  request rate R_REQ — such that EP's IDEAL lifetime matches the paper's
+  16.72 years, then apply the same R_REQ to every app.  Per-app ordering,
+  rotate cadence and flush overhead are model output, not calibration.
+* GRANULARITY: our snapshots resolve supersets and ways; at that
+  granularity the prime-offset rotation + counter-ordered installs level
+  wear to ~ideal (measured column `ss_ratio`).  The paper's snapshots
+  additionally resolve rows/columns INSIDE each XAM array (tag columns,
+  dirty-bit rows), whose residual skew is why their Monarch lands at 61%
+  of ideal.  We report the paper-implied intra-array skew (1/0.61 = 1.64)
+  as an explicit sensitivity column — labeled, not hidden.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import lifetime, simulator
+from repro.core.timing import CPU_HZ, DEFAULT_ENDURANCE, SECONDS_PER_YEAR
+from repro.data import traces
+
+S_REAL = 262_144        # 8 GB / (512 blocks x 64 B) supersets
+PAPER_EP_IDEAL_YEARS = 16.72
+PAPER_RESIDUAL_SKEW = 16.72 / 10.22   # intra-array skew implied by Fig. 11
+
+
+def run(csv_rows: list[str], scale_blocks: int = 4096,
+        n_requests: int = 120_000):
+    cfgs = simulator.baseline_configs(scale_blocks)
+    # Same sim-scale knobs as fig9: scaled L3, M-scaled window, scaled
+    # budget.  dc_limit scales with the superset count (paper 8192 of
+    # 262144 supersets ~ 3%; at 16 sim supersets the analogous distinct-
+    # dirty-superset trigger is ~12).
+    cfg = dataclasses.replace(cfgs["monarch_m3"], l3_sets=16,
+                              t_mww_cycles=(1 << 15) * 3, dc_limit=12,
+                              window_budget_blocks=64)
+    specs = traces.crono_nas_specs(cfg.inpkg_blocks, n_requests)
+
+    # Pass 1: simulate every app, collect write snapshots + way evenness.
+    snaps = {}
+    for spec in specs:
+        addrs, wr = traces.generate(spec)
+        res, st = simulator.simulate_trace(cfg, addrs, wr, return_state=True)
+        snaps[spec.name] = (np.asarray(st.set_writes, np.float64), res,
+                            np.asarray(st.set_way_writes, np.float64))
+
+    # Calibrate R_REQ on EP's ideal lifetime (see module docstring).
+    w_ep, _, _ = snaps["EP"]
+    # ideal_years = endurance / (sum(w)/S_REAL) * epoch_s / YEAR with
+    # epoch_s = n_requests / R_REQ  ->  solve for R_REQ.
+    epoch_s_ep = (PAPER_EP_IDEAL_YEARS * SECONDS_PER_YEAR
+                  * (w_ep.sum() / S_REAL) / DEFAULT_ENDURANCE)
+    r_req = n_requests / epoch_s_ep
+    print("\n== Fig 11: lifetime (years), M=3 vs ideal wear leveling ==")
+    print(f"calibration: R_REQ = {r_req:.3e} req/s "
+          f"(pins EP ideal to {PAPER_EP_IDEAL_YEARS}y; single global const)")
+    print(f"{'app':>6s} {'monarch_y':>10s} {'ideal_y':>10s} {'ss_ratio':>8s} "
+          f"{'rotates':>8s} {'flush%':>7s}")
+
+    years_all, ideal_all, ratios = {}, {}, {}
+    for spec in specs:
+        w, res, ww = snaps[spec.name]
+        epoch_seconds = n_requests / r_req
+        rotations = res.stats["rotates"]   # 0 = offsets never moved
+        lt = lifetime.estimate_lifetime(
+            w, epoch_cycles=epoch_seconds * CPU_HZ,
+            rotations_per_epoch=rotations, endurance=DEFAULT_ENDURANCE,
+            intra_set_skew=PAPER_RESIDUAL_SKEW)
+        lt_ss = lifetime.estimate_lifetime(
+            w, epoch_cycles=epoch_seconds * CPU_HZ,
+            rotations_per_epoch=rotations, endurance=DEFAULT_ENDURANCE)
+        scale = S_REAL / len(w)     # capacity rescale (rate per superset)
+        years = lt.years * scale
+        ideal = lt.ideal_years * scale
+        years_all[spec.name] = years
+        ideal_all[spec.name] = ideal
+        # superset/way-granularity mechanism quality (our model's own):
+        ratios[spec.name] = (lt_ss.years / lt_ss.ideal_years
+                             if lt_ss.ideal_years else 1.0)
+        # C8: flush cost = rotation writebacks / total in-package ops.
+        ops = max(res.stats["inpkg_reads"] + res.stats["inpkg_writes"]
+                  + res.stats["inpkg_searches"], 1)
+        flush_frac = res.stats["flushed_dirty"] / ops
+        print(f"{spec.name:>6s} {years:10.2f} {ideal:10.2f} "
+              f"{ratios[spec.name]:8.2f} {res.stats['rotates']:8d} "
+              f"{flush_frac:7.2%}")
+        csv_rows.append(f"fig11_{spec.name}_years,0,{years:.2f}")
+
+    mn_app = min(years_all, key=years_all.get)
+    mn, mni = years_all[mn_app], ideal_all[mn_app]
+    mech = float(np.mean(list(ratios.values())))
+    print(f"\nC7 min lifetime (paper-implied intra-array skew "
+          f"{PAPER_RESIDUAL_SKEW:.2f} applied): monarch {mn:.2f}y vs ideal "
+          f"{mni:.2f}y at {mn_app} (paper: 10.22 vs 16.72 at EP)")
+    print(f"C7 superset-granularity mechanism ratio (measured): {mech:.2f} "
+          f"(rotation+counter installs level superset wear to ~ideal; the "
+          f"paper's 0.61 residual lives inside arrays, below our "
+          f"granularity — see module docstring)")
+    print("C8 rotate cadence / flush overhead: rotates and flush% above; "
+          "paper: rotate ~ every 260M cycles, flush cost < 1%, +<4% misses "
+          "(at full scale; our cadence is at 1/16384 capacity scale)")
+    csv_rows.append(f"fig11_min_years,0,{mn:.2f}")
+    csv_rows.append(f"fig11_min_ideal_years,0,{mni:.2f}")
+    csv_rows.append(f"fig11_ss_mech_ratio,0,{mech:.3f}")

@@ -1,0 +1,89 @@
+"""Fig. 9 + Fig. 10 reproduction: hardware-managed cache mode.
+
+Runs the lax.scan trace simulator (paper timing tables, §7 cache
+organization, §8 durability machinery) over CRONO/NAS-signature traces for
+the paper's systems: D-Cache, D-Cache(Ideal), S-Cache, RC-Unbound,
+Monarch-Unbound, Monarch M=1..4.  Reports speedup vs D-Cache (Fig. 9) and
+in-package hit rates (Fig. 10), and validates claims C1-C4.
+
+Capacity scale: 4 GB DRAM -> `scale_blocks` 64B blocks (default 4096,
+= 1/16384 scale); all capacity RATIOS and every timing parameter are
+unscaled.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulator
+from repro.data import traces
+
+
+def run(csv_rows: list[str], scale_blocks: int = 4096,
+        n_requests: int = 120_000, systems: list[str] | None = None):
+    cfgs = simulator.baseline_configs(scale_blocks)
+    # L3 scaled with the in-package capacity (paper ratio 8 MB : 4 GB); a
+    # full-size L3 would absorb the reuse that belongs in-package.
+    import dataclasses
+    for name in list(cfgs):
+        cfgs[name] = dataclasses.replace(cfgs[name], l3_sets=16)
+    # Write-window scaled for the sim horizon so t_MWW actually binds.
+    # Per the paper the window LENGTH scales with M (t_MWW = M*T_Life/n_W)
+    # while the budget is M writes/block: larger M tolerates larger bursts
+    # but locks the superset for longer when it is exceeded.
+    for name in list(cfgs):
+        if cfgs[name].wear_enabled:
+            import dataclasses
+            cfgs[name] = dataclasses.replace(
+                cfgs[name],
+                t_mww_cycles=(1 << 15) * cfgs[name].m_writes, dc_limit=512,
+                window_budget_blocks=64)
+    systems = systems or list(cfgs)
+    inpkg_blocks = cfgs["monarch_unbound"].inpkg_blocks
+    specs = traces.crono_nas_specs(inpkg_blocks, n_requests)
+
+    speedups = {s: [] for s in systems}
+    hitrates = {s: [] for s in systems}
+    writes_saved = []
+    print("\n== Fig 9/10: cache-mode performance (speedup vs D-Cache) ==")
+    print(f"{'app':>6s} " + " ".join(f"{s:>15s}" for s in systems))
+    for spec in specs:
+        addrs, wr = traces.generate(spec)
+        res = {}
+        for s in systems:
+            res[s] = simulator.simulate_trace(cfgs[s], addrs, wr)
+        base = res["d_cache"].total_cycles
+        row = []
+        for s in systems:
+            sp = base / res[s].total_cycles
+            speedups[s].append(sp)
+            hitrates[s].append(res[s].inpkg_hit_rate)
+            row.append(f"{sp:15.3f}")
+        print(f"{spec.name:>6s} " + " ".join(row))
+        mu = res["monarch_unbound"].stats
+        total_ev = max(mu["l3_evictions"], 1)
+        writes_saved.append(mu["writes_filtered"] / total_ev)
+
+    print(f"{'gmean':>6s} " + " ".join(
+        f"{float(np.exp(np.mean(np.log(np.maximum(speedups[s], 1e-9))))):15.3f}"
+        for s in systems))
+    print("\nhit rates (mean):",
+          {s: round(float(np.mean(hitrates[s])), 3) for s in systems})
+
+    unb = float(np.mean(speedups["monarch_unbound"]))
+    ideal = float(np.mean(speedups["d_cache_ideal"]))
+    m_means = {m: float(np.mean(speedups[f"monarch_m{m}"]))
+               for m in (1, 2, 3, 4) if f"monarch_m{m}" in systems}
+    wsave = float(np.mean(writes_saved))
+    print(f"\nC1 Monarch-unbound vs D-Cache: {unb:.3f}x   (paper: 1.61x)")
+    print(f"C2 Monarch-unbound vs Ideal-DRAM: {unb / ideal:.3f}x (paper: 1.21x)")
+    if m_means:
+        best_m = max(m_means, key=m_means.get)
+        print(f"C3 best bounded M: {best_m} ({m_means})  (paper: M=3)")
+    print(f"C4 write-traffic filtered: {wsave:.2%} of L3 evictions "
+          f"(paper: ~31% write reduction)")
+    csv_rows.append(f"fig9_monarch_unbound_speedup,0,{unb:.3f}")
+    csv_rows.append(f"fig9_vs_ideal,0,{unb / ideal:.3f}")
+    csv_rows.append(f"fig9_write_filtered_frac,0,{wsave:.3f}")
+    for m, v in m_means.items():
+        csv_rows.append(f"fig9_monarch_m{m}_speedup,0,{v:.3f}")
+    return {"speedups": speedups, "hitrates": hitrates}

@@ -1,0 +1,71 @@
+"""§Roofline summary: aggregate the dry-run JSONs into the per-cell
+three-term table (compute / memory / collective seconds, bottleneck,
+MODEL_FLOPS/HLO_FLOPs useful ratio) that EXPERIMENTS.md §Roofline records.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun); does NOT
+lower anything itself, so it is cheap enough for the default bench run.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if not (f.startswith(mesh + "__") and f.endswith(".json")):
+            continue
+        with open(os.path.join(DRYRUN_DIR, f)) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def run(csv_rows: list[str], mesh: str = "single"):
+    cells = load_cells(mesh)
+    ran = [c for c in cells if c.get("runnable")]
+    skipped = [c for c in cells if not c.get("runnable")]
+    if not cells:
+        print("\n== Roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first ==")
+        return
+
+    print(f"\n== Roofline summary ({mesh}-pod mesh, {len(ran)} cells ran, "
+          f"{len(skipped)} skipped) ==")
+    hdr = (f"{'arch':>22s} {'shape':>12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>9s} {'bound':>7s} {'useful':>7s}")
+    print(hdr)
+    worst = None
+    most_coll = None
+    for c in ran:
+        r = c["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / max(dom, 1e-30)   # roofline fraction proxy
+        print(f"{c['arch']:>22s} {c['shape']:>12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:9.4f} "
+              f"{r['bottleneck']:>7s} {r['useful_ratio']:7.3f}")
+        csv_rows.append(
+            f"roofline_{mesh}_{c['arch']}_{c['shape']}_bottleneck,0,"
+            f"{r['bottleneck']}")
+        if worst is None or frac < worst[0]:
+            worst = (frac, c["arch"], c["shape"])
+        cf = r["collective_s"] / max(dom, 1e-30)
+        if most_coll is None or cf > most_coll[0]:
+            most_coll = (cf, c["arch"], c["shape"])
+    for c in skipped:
+        print(f"{c['arch']:>22s} {c['shape']:>12s} {'—':>10s} {'—':>10s} "
+              f"{'—':>9s} {'skip':>7s}   ({c['skip_reason']})")
+    if worst:
+        print(f"\nworst roofline fraction: {worst[1]} x {worst[2]} "
+              f"(compute/dominant = {worst[0]:.3f})")
+        csv_rows.append(f"roofline_worst_cell,0,{worst[1]}__{worst[2]}")
+    if most_coll:
+        print(f"most collective-bound: {most_coll[1]} x {most_coll[2]} "
+              f"(coll/dominant = {most_coll[0]:.3f})")
+        csv_rows.append(
+            f"roofline_most_collective,0,{most_coll[1]}__{most_coll[2]}")

@@ -1,0 +1,55 @@
+"""Quickstart: the Monarch XAM primitive in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a XAM set (64 x 512 bit plane), store keys column-wise.
+2. Run ONE masked CAM search over all 512 columns (the paper's §4.2.2
+   operation; on TPU this is the MXU kernel in repro/kernels/xam_search).
+3. Same flow through the user-space API (Fig. 6 key-value store).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import xam
+from repro.core.api import MonarchDevice
+from repro.kernels.xam_search import ops as xam_ops
+
+
+def main():
+    rng = np.random.default_rng(7)
+
+    # --- 1. raw XAM set -----------------------------------------------
+    arr = xam.make_set()                       # 64 rows x 512 columns
+    key = jnp.asarray(rng.integers(0, 2, 64), jnp.int8)
+    arr = xam.store_key_colwise(arr, jnp.asarray(137), key)
+    matches, idx = xam.set_search(arr, key, jnp.ones(64, jnp.int8))
+    print(f"[xam]    stored the key at column 137; search found column "
+          f"{int(idx)} ({int(matches.sum())} match)")
+
+    # --- 2. batched MXU-kernel search ----------------------------------
+    keys = rng.integers(0, 2, (8, 64)).astype(np.int8)     # 8 queries
+    data = rng.integers(0, 2, (64, 512)).astype(np.int8)   # one set plane
+    data[:, 42] = keys[3]                                  # plant a match
+    hits = xam_ops.xam_search(keys, data)                  # Pallas kernel
+    print(f"[kernel] query 3 matches columns "
+          f"{np.nonzero(np.asarray(hits[3]))[0].tolist()}")
+
+    # --- 3. Fig. 6 software flow ---------------------------------------
+    dev = MonarchDevice(n_sets=4, key_bits=64, set_cols=8)
+    keys_alloc = dev.flat_cam_malloc(16)
+    data_alloc = dev.flat_ram_malloc(16)
+    kv = {0xCAFE: 101, 0xBEEF: 202, 0xF00D: 303}
+    for i, (k, v) in enumerate(kv.items()):
+        dev.cam_write(keys_alloc, i, k)
+        dev.ram_write(data_alloc, i, v)
+    for k in (0xBEEF, 0xDEAD):
+        print(f"[api]    kv_lookup(0x{k:X}) -> "
+              f"{dev.kv_lookup(keys_alloc, data_alloc, k)}")
+    # masked partial search: match on the high byte only
+    print(f"[api]    masked lookup (key=0xF000, mask=0xFF00) -> "
+          f"{dev.kv_lookup(keys_alloc, data_alloc, 0xF000, mask=0xFF00)}")
+    print(f"[api]    command log: {dev.command_log[-4:]}")
+
+
+if __name__ == "__main__":
+    main()

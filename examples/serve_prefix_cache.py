@@ -1,0 +1,99 @@
+"""Serving driver: batched prefill+decode with the MonarchKVIndex prefix
+cache — the paper's CAM-search + durability policies deployed where a real
+serving stack uses them (vLLM-style prefix caching).
+
+    PYTHONPATH=src python examples/serve_prefix_cache.py [--requests 24]
+
+Requests share zipf-distributed prompt prefixes; the index answers "is
+this 16-token chunk's KV already resident?" with one XAM search per set,
+admits chunks under the no-allocate + t_MWW-throttled policy, and rotates
+placement for wear evenness.  Prefill skips the longest cached prefix.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import step as serve_step
+from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+
+
+def make_requests(n, rng, vocab, n_prefixes=4, prefix_len=64, tail_len=32):
+    """Zipf-shared prefixes + unique tails (chat-style traffic)."""
+    prefixes = [rng.integers(1, vocab, prefix_len).astype(np.int32)
+                for _ in range(n_prefixes)]
+    reqs = []
+    for _ in range(n):
+        p = prefixes[min(int(rng.zipf(1.5)) - 1, n_prefixes - 1)]
+        tail = rng.integers(1, vocab, tail_len).astype(np.int32)
+        reqs.append(np.concatenate([p, tail]))
+    return reqs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--decode-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_arch("yi-9b").reduced()
+    rng = np.random.default_rng(0)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    idx = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=1))
+
+    reqs = make_requests(args.requests, rng, cfg.vocab_size)
+    max_seq = len(reqs[0]) + args.decode_tokens
+    prefill_fn = jax.jit(serve_step.make_prefill_step(cfg, max_seq))
+    decode_fn = jax.jit(serve_step.make_decode_step(cfg))
+
+    tokens_total, tokens_skipped = 0, 0
+    t0 = time.time()
+    for r, toks in enumerate(reqs):
+        tok2d = toks[None, :]
+        hits = idx.lookup(tok2d)[0]                      # per-chunk bools
+        # longest cached prefix (contiguous leading hits)
+        n_cached = 0
+        for h in hits:
+            if not h:
+                break
+            n_cached += 1
+        skip = n_cached * CHUNK_TOKENS
+        tokens_total += len(toks)
+        tokens_skipped += skip
+        # prefill the full prompt (cache-correctness) — a paged-attention
+        # serving stack would materialize the cached chunks' KV instead of
+        # recomputing them; the INDEX decision is what Monarch provides.
+        batch = {"tokens": jnp.asarray(tok2d)}
+        logits, cache = prefill_fn(params, batch)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for t in range(args.decode_tokens - 1):
+            pos = jnp.asarray(len(toks) + t, jnp.int32)
+            nxt, logits, cache = decode_fn(params, cache, nxt, pos)
+        idx.admit(tok2d)                                 # offer for admission
+    dt = time.time() - t0
+
+    s = idx.stats
+    print(f"[serve] {args.requests} requests, {args.decode_tokens} decode "
+          f"tokens each, {dt:.1f}s total")
+    print(f"[index] chunk hit rate {idx.hit_rate:.1%} "
+          f"({s.chunk_hits}/{s.chunk_hits + s.chunk_misses}); "
+          f"{s.searches} CAM searches")
+    print(f"[index] prefix KV skippable: {tokens_skipped}/{tokens_total} "
+          f"prompt tokens ({tokens_skipped / max(tokens_total, 1):.1%}) — "
+          f"the prefill compute a paged serving stack avoids")
+    print(f"[index] durability policy: {s.admissions} admissions, "
+          f"{s.admission_skips} no-allocate skips, {s.throttled} t_MWW "
+          f"throttles, {s.evictions} evictions, {s.rotations} rotations")
+    print(f"[index] install distribution over sets: "
+          f"{idx.write_distribution().tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Hopscotch hash table (paper §9.2.2) with a Monarch-accelerated lookup.
+
+Open addressing with windowed (neighborhood) probing:
+
+* ``insert``: find home = hash(key) % n; if a free bucket exists within the
+  H-window, store there; else walk forward for a free bucket and hop it
+  backwards by swapping window-compatible keys; rehash to 2x on failure.
+* ``lookup`` (baseline): probe up to H buckets serially — up to H memory
+  reads.
+* ``lookup`` (Monarch): ONE search command per window — the hopscotch
+  window maps exactly onto a CAM set search (kernels/hopscotch).
+  The per-bucket metadata bitmap (window_size/8 bytes per bucket) that the
+  baseline needs for lookups becomes unnecessary — §10.4.2's observation —
+  so Monarch stores it in main memory (we simply don't build it here).
+
+The table also reports OPERATION COUNTS (probes, searches, writes, swaps,
+rehashes) — the inputs to the §10.4 timing model in benchmarks/hashing.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.pipeline import murmur3_np
+from repro.kernels.hopscotch import ops as hop_ops
+
+EMPTY = np.uint64(0)
+
+
+@dataclasses.dataclass
+class HashStats:
+    lookups: int = 0
+    probes: int = 0           # baseline bucket reads
+    searches: int = 0         # Monarch window searches
+    data_reads: int = 0
+    inserts: int = 0
+    insert_probes: int = 0
+    swaps: int = 0
+    rehashes: int = 0
+    writes: int = 0
+
+
+class HopscotchTable:
+    def __init__(self, log2_size: int, window: int = 32, seed: int = 0):
+        self.window = window
+        self._alloc(1 << log2_size)
+        self.stats = HashStats()
+
+    def _alloc(self, n: int):
+        self.n = n
+        # +2 windows of pad so windows never wrap (kernel contract too).
+        self.keys = np.zeros(n + 2 * self.window, np.uint64)
+        self.vals = np.zeros(n + 2 * self.window, np.uint64)
+
+    # ------------------------------------------------------------------
+    def home(self, key) -> np.ndarray:
+        return (murmur3_np(np.asarray(key, np.uint64).astype(np.uint32))
+                % np.uint32(self.n)).astype(np.int64)
+
+    @property
+    def load(self) -> float:
+        return float((self.keys != EMPTY).sum()) / self.n
+
+    # ------------------------------------------------------------------
+    def insert(self, key: int, val: int) -> bool:
+        key = np.uint64(key)
+        if key == EMPTY:
+            raise ValueError("0 is the empty sentinel")
+        self.stats.inserts += 1
+        h = int(self.home(key))
+        w = self.window
+        # already present? (one lookup)
+        off = self._lookup_window(np.asarray([key]))[0]
+        if off >= 0:
+            self.vals[h + off] = np.uint64(val)
+            self.stats.writes += 1
+            return True
+        # free bucket within window (probes up to the first free slot;
+        # with the metadata bitmap this is 1 line read + the jump)
+        win = self.keys[h:h + w]
+        free = np.nonzero(win == EMPTY)[0]
+        self.stats.insert_probes += int(free[0]) + 1 if free.size else w
+        if free.size:
+            self.keys[h + free[0]] = key
+            self.vals[h + free[0]] = np.uint64(val)
+            self.stats.writes += 1
+            return True
+        # walk forward for a free bucket, then hop it back
+        j = h + w
+        limit = min(self.n + w, h + 64 * w)
+        while j < limit and self.keys[j] != EMPTY:
+            j += 1
+            self.stats.insert_probes += 1
+        if j >= limit:
+            self._rehash()
+            return self.insert(int(key), int(val))
+        while j >= h + w:
+            moved = False
+            for k in range(j - w + 1, j):
+                if k < 0:
+                    continue
+                kh = int(self.home(self.keys[k])) if self.keys[k] != EMPTY else -1
+                if kh >= 0 and j < kh + w:
+                    # key at k may legally move to j
+                    self.keys[j] = self.keys[k]
+                    self.vals[j] = self.vals[k]
+                    self.keys[k] = EMPTY
+                    self.stats.swaps += 1
+                    self.stats.writes += 2
+                    j = k
+                    moved = True
+                    break
+            if not moved:
+                self._rehash()
+                return self.insert(int(key), int(val))
+        self.keys[j] = key
+        self.vals[j] = np.uint64(val)
+        self.stats.writes += 1
+        return True
+
+    def _rehash(self):
+        self.stats.rehashes += 1
+        old_k, old_v = self.keys.copy(), self.vals.copy()
+        self._alloc(self.n * 2)
+        for k, v in zip(old_k, old_v):
+            if k != EMPTY:
+                self.insert(int(k), int(v))
+
+    # ------------------------------------------------------------------
+    def _lookup_window(self, keys: np.ndarray) -> np.ndarray:
+        homes = self.home(keys).astype(np.int32)
+        lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        hi = (keys >> np.uint64(32)).astype(np.uint32)
+        t_lo = (self.keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        t_hi = (self.keys >> np.uint64(32)).astype(np.uint32)
+        pad = (-t_lo.shape[0]) % self.window
+        if pad:
+            t_lo = np.pad(t_lo, (0, pad))
+            t_hi = np.pad(t_hi, (0, pad))
+        out = hop_ops.hopscotch_lookup(
+            t_lo, t_hi, homes, lo, hi, window=self.window)
+        return np.asarray(out)
+
+    def lookup_monarch(self, keys: np.ndarray):
+        """Batched lookup via the fused window-search kernel: ONE search +
+        (on hit) one data read per query."""
+        keys = np.asarray(keys, np.uint64)
+        offs = self._lookup_window(keys)
+        self.stats.lookups += len(keys)
+        self.stats.searches += len(keys)
+        hits = offs >= 0
+        self.stats.data_reads += int(hits.sum())
+        idx = self.home(keys).astype(np.int64) + np.where(hits, offs, 0)
+        vals = np.where(hits, self.vals[idx], 0)
+        return vals, hits
+
+    def lookup_baseline(self, keys: np.ndarray):
+        """Serial window probing; counts the reads Monarch saves."""
+        keys = np.asarray(keys, np.uint64)
+        self.stats.lookups += len(keys)
+        vals = np.zeros(len(keys), np.uint64)
+        hits = np.zeros(len(keys), bool)
+        for i, key in enumerate(keys):
+            h = int(self.home(key))
+            for off in range(self.window):
+                self.stats.probes += 1
+                if self.keys[h + off] == key:
+                    vals[i] = self.vals[h + off]
+                    hits[i] = True
+                    self.stats.data_reads += 1
+                    break
+                if self.keys[h + off] == EMPTY:
+                    # hopscotch guarantee: key would have been within window
+                    # of its home; empty home-window slot -> miss (with
+                    # metadata bitmap the baseline stops here too)
+                    continue
+        return vals, hits

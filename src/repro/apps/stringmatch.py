@@ -1,0 +1,48 @@
+"""String-Match application (paper §9.2.3 / §10.5, Phoenix kernel).
+
+Monarch flow: the dataset is copied from DDRx into CAM arrays with 64-bit
+block boundaries as word delimiters — an 8x storage blow-up (bit-planes) +
+a preprocessing pass, both charged in the benchmark — after which each
+search command covers 4 KB of data.  The baseline streams the dataset
+through the cache hierarchy in 64 B lines.
+
+Op counts reported here feed benchmarks/string_match.py's timing model;
+the actual matching runs on the Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.kernels.string_match import ops as sm_ops
+
+SEARCH_COVERAGE = 4096      # bytes per Monarch search command
+LINE = 64                   # baseline cache-line bytes
+BLOWUP = 8                  # bit-plane storage expansion (paper §10.5)
+
+
+@dataclasses.dataclass
+class MatchReport:
+    n_matches: int
+    monarch_searches: int
+    monarch_copy_bytes: int   # preprocessing writes into CAM (8x data)
+    baseline_line_reads: int
+
+
+def find(text: np.ndarray, pattern: bytes) -> MatchReport:
+    text = np.asarray(text, np.uint8)
+    pat = np.frombuffer(pattern, np.uint8)
+    matches = int(np.asarray(sm_ops.count_matches(text, pat)))
+    n = text.shape[0]
+    return MatchReport(
+        n_matches=matches,
+        monarch_searches=(n + SEARCH_COVERAGE - 1) // SEARCH_COVERAGE,
+        monarch_copy_bytes=n * BLOWUP,
+        baseline_line_reads=(n + LINE - 1) // LINE,
+    )
+
+
+def make_corpus(n_bytes: int, seed: int = 0, alphabet: int = 16) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.integers(97, 97 + alphabet, n_bytes)).astype(np.uint8)

@@ -1,0 +1,18 @@
+"""command-r-plus-104b [dense]: 64L d_model=12288 96H (GQA kv=8) d_ff=33792
+vocab=256000 — GQA, no-bias.  [hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=33792,
+    vocab_size=256_000,
+    rope_theta=75_000_000.0,
+    tie_embeddings=True,      # cohere ties input/output embeddings
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+)

@@ -1,0 +1,145 @@
+"""User-space Monarch API (paper §7 "OS Support", Fig. 6).
+
+Mirrors the memkind-extension programming model: ``flat_ram_malloc`` /
+``flat_cam_malloc`` allocate from vault-backed RAM/CAM address spaces, and
+the returned :class:`MonarchDevice` pointers expose the key / mask / match
+registers that the vault controller maps onto ordinary loads and stores.
+
+This is the layer the examples (kv_store, string_search) and the framework
+integration (MonarchKVIndex dedup) program against.  Data-plane search uses
+the Pallas XAM kernel; control-plane semantics (lazy key/mask push, fresh
+match-register reuse, mode toggling) follow ``repro.core.controller``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller
+from repro.kernels.xam_search import ops as xam_ops
+
+
+@dataclasses.dataclass
+class Allocation:
+    base: int
+    n_elems: int
+    space: str  # "ram" | "cam"
+
+
+class MonarchDevice:
+    """An 8-vault Monarch stack with per-vault mode configuration.
+
+    Vaults configured "cache" are hardware-managed and invisible here; the
+    flat vaults expose scratchpad address spaces.  For the software API we
+    model one flat-RAM region and one flat-CAM region (sets of 64-bit words
+    stored column-wise, 512 columns per set).
+    """
+
+    def __init__(self, n_sets: int = 64, key_bits: int = 64,
+                 set_cols: int = 512):
+        self.key_bits = key_bits
+        self.set_cols = set_cols
+        self.n_sets = n_sets
+        # CAM planes: (n_sets, key_bits rows, set_cols columns) of bits.
+        self.cam_bits = jnp.zeros((n_sets, key_bits, set_cols), jnp.int8)
+        # RAM scratchpad (word-addressed).
+        self.ram = jnp.zeros((n_sets * set_cols,), jnp.uint32)
+        self.ram_hi = jnp.zeros((n_sets * set_cols,), jnp.uint32)
+        # Vault-controller registers.
+        self.key_reg = jnp.zeros((key_bits,), jnp.int8)
+        self.mask_reg = jnp.ones((key_bits,), jnp.int8)
+        self.match_reg = -1
+        self._match_fresh = False
+        self._km_pushed = set()  # supersets holding the latest key/mask
+        self._ram_ptr = 0
+        self._cam_ptr = 0
+        self.command_log: list[str] = []
+
+    # ---- memkind-style allocation ------------------------------------
+    def flat_ram_malloc(self, n_elems: int) -> Allocation:
+        a = Allocation(self._ram_ptr, n_elems, "ram")
+        self._ram_ptr += n_elems
+        if self._ram_ptr > self.ram.shape[0]:
+            raise MemoryError("flat-RAM vault exhausted")
+        return a
+
+    def flat_cam_malloc(self, n_elems: int) -> Allocation:
+        a = Allocation(self._cam_ptr, n_elems, "cam")
+        self._cam_ptr += n_elems
+        if self._cam_ptr > self.n_sets * self.set_cols:
+            raise MemoryError("flat-CAM vault exhausted")
+        return a
+
+    # ---- data plane ----------------------------------------------------
+    @staticmethod
+    def _to_bits(word: int, n: int) -> jnp.ndarray:
+        return jnp.asarray([(int(word) >> i) & 1 for i in range(n)], jnp.int8)
+
+    def cam_write(self, alloc: Allocation, index: int, key: int) -> None:
+        """Fig. 6: myDATA-style write — store ``key`` column-wise in CAM."""
+        pos = alloc.base + index
+        set_id, col = divmod(pos, self.set_cols)
+        bits = self._to_bits(key, self.key_bits)
+        plane = self.cam_bits[set_id]
+        col_onehot = jnp.arange(self.set_cols) == col
+        self.cam_bits = self.cam_bits.at[set_id].set(
+            jnp.where(col_onehot[None, :], bits[:, None], plane))
+        self._match_fresh = False
+        self.command_log.append(f"W cam set={set_id} col={col}")
+
+    def ram_write(self, alloc: Allocation, index: int, value: int) -> None:
+        pos = alloc.base + index
+        self.ram = self.ram.at[pos].set(np.uint32(value & 0xFFFFFFFF))
+        self.ram_hi = self.ram_hi.at[pos].set(np.uint32((value >> 32) & 0xFFFFFFFF))
+        self.command_log.append(f"W ram {pos}")
+
+    def ram_read(self, alloc: Allocation, index: int) -> int:
+        pos = alloc.base + index
+        self.command_log.append(f"R ram {pos}")
+        return int(self.ram[pos]) | (int(self.ram_hi[pos]) << 32)
+
+    # ---- key/mask/match registers (§6.2 fine-grained access) ----------
+    def write_key(self, key: int) -> None:
+        self.key_reg = self._to_bits(key, self.key_bits)
+        self._match_fresh = False
+        self._km_pushed.clear()
+        self.command_log.append("W key_reg")
+
+    def write_mask(self, mask: int) -> None:
+        self.mask_reg = self._to_bits(mask, self.key_bits)
+        self._match_fresh = False
+        self._km_pushed.clear()
+        self.command_log.append("W mask_reg")
+
+    def read_match(self, alloc: Allocation, set_index: int = 0) -> int:
+        """A read of the match pointer triggers (at most) one search."""
+        if self._match_fresh:
+            self.command_log.append("R match (fresh)")
+            return self.match_reg
+        set_id = alloc.base // self.set_cols + set_index
+        if set_id not in self._km_pushed:
+            self.command_log.append(f"W key/mask -> superset {set_id}")
+            self._km_pushed.add(set_id)
+        matches = xam_ops.xam_search(
+            self.key_reg[None, :], self.cam_bits[set_id], self.mask_reg[None, :])
+        hit = bool(jnp.any(matches[0] == 1))
+        idx = int(jnp.argmax(matches[0])) if hit else -1
+        self.match_reg = -1 if not hit else set_id * self.set_cols + idx
+        self._match_fresh = True
+        self.command_log.append(f"S set={set_id}")
+        return self.match_reg
+
+    # ---- convenience: Fig. 6 key-value store flow -----------------------
+    def kv_lookup(self, keys_alloc: Allocation, data_alloc: Allocation,
+                  key: int, mask: int = ~0) -> int | None:
+        self.write_key(key)
+        self.write_mask(mask & ((1 << self.key_bits) - 1))
+        n_sets_used = (keys_alloc.n_elems + self.set_cols - 1) // self.set_cols
+        for s in range(n_sets_used):
+            m = self.read_match(keys_alloc, s)
+            if m >= 0:
+                return self.ram_read(data_alloc, m - keys_alloc.base)
+            self._match_fresh = False  # advance to next set
+        return None

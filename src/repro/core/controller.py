@@ -1,0 +1,252 @@
+"""Monarch vault controllers (paper §7, Fig. 5/6/7).
+
+Three control modes:
+
+* ``flat-RAM``  — software scratchpad; read/write only; controller tracks
+  per-bank mode flags and issues prepare/activate toggles as needed.
+* ``flat-CAM``  — software associative scratchpad; recognizes data write,
+  key/mask write (RowIn CAM, odd row -> mask, even row -> key), search
+  (read of the match pointer), and data read.  Key/mask live in global vault
+  registers and are pushed to supersets lazily; searches are elided when the
+  match register already holds a fresh result.
+* ``cache``     — hardware-managed 512-way set-associative cache; CAM banks
+  hold tags (two 32-bit tags per 64-bit column), RAM banks hold data, with
+  the Fig. 7 coordinated address mapping, no-allocate fills, D/R-flag
+  selective installation, and random-counter replacement.
+
+The controllers are written as explicit-state step functions: every request
+returns (new_state, CommandTrace) where the trace records which interface
+commands (P/A/R/W/S) were issued — that is what the timing model consumes,
+and what the tests assert on (e.g. "consecutive searches on the same
+superset do not re-send key/mask").
+
+Bank modes: RAM=0, CAM=1 (prepare toggles).  Superset datapath: RowIn=0,
+ColumnIn=1 (activate toggles).  Initial mode of every bank is RAM (paper
+§6.2), default datapath RowIn.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import xam
+
+RAM, CAM = 0, 1
+ROW_IN, COL_IN = 0, 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CommandCounts:
+    """Interface commands issued while serving one request."""
+    prepares: jnp.ndarray
+    activates: jnp.ndarray
+    reads: jnp.ndarray
+    writes: jnp.ndarray
+    searches: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "CommandCounts":
+        z = jnp.zeros((), jnp.int32)
+        return CommandCounts(z, z, z, z, z)
+
+    def __add__(self, o: "CommandCounts") -> "CommandCounts":
+        return CommandCounts(
+            self.prepares + o.prepares, self.activates + o.activates,
+            self.reads + o.reads, self.writes + o.writes,
+            self.searches + o.searches,
+        )
+
+
+def _count(prepares=0, activates=0, reads=0, writes=0, searches=0) -> CommandCounts:
+    a = lambda v: jnp.asarray(v, jnp.int32)
+    return CommandCounts(a(prepares), a(activates), a(reads), a(writes), a(searches))
+
+
+# ===========================================================================
+# flat-CAM controller over a single superset's worth of sets.
+# ===========================================================================
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlatCamState:
+    """One vault's flat-CAM control state plus the XAM contents of a
+    superset (8 sets x 64 rows x 512 cols logical planes)."""
+    sets_bits: jnp.ndarray        # (n_sets, 64, 512) int8 — XAM planes
+    key_reg: jnp.ndarray          # (64,) int8 — global key register
+    mask_reg: jnp.ndarray         # (64,) int8 — global mask register
+    match_reg: jnp.ndarray        # scalar int32 — match pointer (-1 = NULL)
+    match_fresh: jnp.ndarray      # scalar bool — result valid for cur key/mask
+    superset_has_latest_km: jnp.ndarray  # scalar bool — key/mask pushed down
+    bank_mode: jnp.ndarray        # scalar int32 RAM/CAM
+    datapath: jnp.ndarray         # scalar int32 RowIn/ColumnIn
+
+
+def init_flat_cam(n_sets: int = 8, rows: int = 64, cols: int = 512) -> FlatCamState:
+    return FlatCamState(
+        sets_bits=jnp.zeros((n_sets, rows, cols), jnp.int8),
+        key_reg=jnp.zeros((rows,), jnp.int8),
+        mask_reg=jnp.ones((rows,), jnp.int8),
+        match_reg=jnp.asarray(-1, jnp.int32),
+        match_fresh=jnp.asarray(False),
+        superset_has_latest_km=jnp.asarray(False),
+        bank_mode=jnp.asarray(RAM, jnp.int32),
+        datapath=jnp.asarray(ROW_IN, jnp.int32),
+    )
+
+
+def _transition(state: FlatCamState, want_mode, want_path):
+    """Issue prepare/activate as needed to reach (mode, datapath)."""
+    p = (state.bank_mode != want_mode).astype(jnp.int32)
+    a = (state.datapath != want_path).astype(jnp.int32)
+    st = dataclasses.replace(
+        state,
+        bank_mode=jnp.asarray(want_mode, jnp.int32),
+        datapath=jnp.asarray(want_path, jnp.int32),
+    )
+    return st, _count(prepares=p, activates=a)
+
+
+def cam_data_write(state: FlatCamState, set_id, col, key_bits) -> tuple[FlatCamState, CommandCounts]:
+    """Store a key down a column of a set (ColumnIn CAM, §7)."""
+    state, c0 = _transition(state, CAM, COL_IN)
+    bits = state.sets_bits
+    col_onehot = (jnp.arange(bits.shape[2]) == col)
+    new_plane = jnp.where(col_onehot[None, :], key_bits.astype(jnp.int8)[:, None],
+                          bits[set_id])
+    bits = bits.at[set_id].set(new_plane)
+    st = dataclasses.replace(state, sets_bits=bits,
+                             match_fresh=jnp.asarray(False))
+    return st, c0 + _count(writes=1)
+
+
+def key_mask_write(state: FlatCamState, row_addr, value_bits) -> tuple[FlatCamState, CommandCounts]:
+    """Software write to the key/mask pointers.  RowIn CAM mode: even row
+    address -> key register, odd -> mask register (§6.2)."""
+    state, c0 = _transition(state, CAM, ROW_IN)
+    is_mask = (row_addr % 2).astype(bool)
+    key = jnp.where(is_mask, state.key_reg, value_bits.astype(jnp.int8))
+    mask = jnp.where(is_mask, value_bits.astype(jnp.int8), state.mask_reg)
+    st = dataclasses.replace(
+        state, key_reg=key, mask_reg=mask,
+        match_fresh=jnp.asarray(False),
+        superset_has_latest_km=jnp.asarray(False),
+    )
+    return st, c0 + _count(writes=1)
+
+
+def search_read(state: FlatCamState, set_id) -> tuple[FlatCamState, jnp.ndarray, CommandCounts]:
+    """Software read of the match pointer: triggers key/mask push + search
+    only when the match register does not already hold a fresh result
+    (§7 'the controller will issue a search ... if the results of previous
+    search is not present')."""
+
+    def fresh(st: FlatCamState):
+        return st, st.match_reg, CommandCounts.zero()
+
+    def stale(st: FlatCamState):
+        # Push key/mask if the superset copy is out of date (1 write burst).
+        km_writes = jnp.where(st.superset_has_latest_km, 0, 1)
+        st, c_t = _transition(st, CAM, COL_IN)
+        plane = st.sets_bits[set_id]
+        arr = xam.XamArray(plane, jnp.zeros_like(plane, jnp.int32))
+        _, idx = xam.set_search(arr, st.key_reg, st.mask_reg)
+        st = dataclasses.replace(
+            st, match_reg=idx.astype(jnp.int32),
+            match_fresh=jnp.asarray(True),
+            superset_has_latest_km=jnp.asarray(True),
+        )
+        return st, idx.astype(jnp.int32), c_t + _count(searches=1, writes=km_writes)
+
+    return jax.lax.cond(state.match_fresh, fresh, stale, state)
+
+
+def cam_row_read(state: FlatCamState, set_id, row) -> tuple[FlatCamState, jnp.ndarray, CommandCounts]:
+    """Read stored keys back out (footnote 1: row-mode read)."""
+    state, c0 = _transition(state, CAM, ROW_IN)
+    data = state.sets_bits[set_id][row]
+    return state, data, c0 + _count(reads=1)
+
+
+# ===========================================================================
+# Cache-mode controller (functional hit/miss engine).
+#
+# The timing simulator uses this vectorized tag engine; a bit-level
+# equivalence test pins it to the XAM search semantics on small sizes.
+# Layout per Fig. 7: one CAM set (512 tag columns) serves one RAM superset
+# (512 data blocks).  Replacement: shared free-running 9-bit counter.
+# ===========================================================================
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CacheState:
+    tags: jnp.ndarray       # (n_sets, ways) int64 — stored tags
+    valid: jnp.ndarray      # (n_sets, ways) int8
+    dirty: jnp.ndarray      # (n_sets, ways) int8
+    counter: jnp.ndarray    # scalar int32 — free-running replacement counter
+
+
+def init_cache(n_sets: int, ways: int = 512) -> CacheState:
+    return CacheState(
+        tags=jnp.zeros((n_sets, ways), jnp.int32),
+        valid=jnp.zeros((n_sets, ways), jnp.int8),
+        dirty=jnp.zeros((n_sets, ways), jnp.int8),
+        counter=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_lookup(state: CacheState, set_id, tag):
+    """One CAM search: returns (hit, way)."""
+    line = (state.tags[set_id] == tag) & (state.valid[set_id] == 1)
+    hit = jnp.any(line)
+    way = jnp.argmax(line)
+    return hit, way.astype(jnp.int32)
+
+
+def cache_install(state: CacheState, set_id, tag, make_dirty):
+    """Install per §7: prefer an invalid way (found by a RAM-mode row read of
+    the valid bits); else prefer a clean way near the rotating counter; else
+    evict dirty at the counter.  Returns (state, evicted_dirty, way)."""
+    ways = state.tags.shape[1]
+    valid_row = state.valid[set_id]
+    dirty_row = state.dirty[set_id]
+
+    # All way choices walk from the shared free-running counter (paper §8):
+    # this spaces two installs at a physical location by >= `ways`
+    # evictions, which is what levels wear WITHIN a superset.
+    start = state.counter % ways
+    order = (jnp.arange(ways) + start) % ways
+    invalid = (valid_row[order] == 0)
+    has_invalid = jnp.any(invalid)
+    inv_way = order[jnp.argmax(invalid)]
+    clean = (dirty_row[order] == 0)
+    has_clean = jnp.any(clean)
+    clean_way = order[jnp.argmax(clean)]
+    ctr_way = order[0]
+
+    way = jnp.where(has_invalid, inv_way,
+                    jnp.where(has_clean, clean_way, ctr_way)).astype(jnp.int32)
+    evicted_dirty = (~has_invalid) & (~has_clean) & (dirty_row[ctr_way] == 1)
+
+    new = CacheState(
+        tags=state.tags.at[set_id, way].set(tag),
+        valid=state.valid.at[set_id, way].set(1),
+        dirty=state.dirty.at[set_id, way].set(make_dirty.astype(jnp.int8)),
+        counter=state.counter + 1,
+    )
+    return new, evicted_dirty, way
+
+
+def cache_invalidate_sets(state: CacheState, set_mask: jnp.ndarray):
+    """Flush whole sets (rotation): returns (state, n_dirty_written_back)."""
+    dirty_per_set = jnp.sum(state.dirty * state.valid, axis=1)
+    flushed = jnp.sum(jnp.where(set_mask, dirty_per_set, 0))
+    keep = (~set_mask)[:, None]
+    return CacheState(
+        tags=state.tags,
+        valid=jnp.where(keep, state.valid, 0).astype(jnp.int8),
+        dirty=jnp.where(keep, state.dirty, 0).astype(jnp.int8),
+        counter=state.counter,
+    ), flushed.astype(jnp.int32)

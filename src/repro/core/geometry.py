@@ -1,0 +1,218 @@
+"""Monarch address geometry (paper §6, Figures 4 and 7).
+
+Hierarchy (Table 3, 8 GB Monarch):
+
+    8 vaults x 64 banks/vault x 256 supersets/bank x 8 sets/superset
+      x 64 rows/set, one row = one 64 B block (512 bits across 8 subarrays).
+
+Supersets are 8x8 grids of 64x64 XAM subarrays; the subarray at (i, j)
+belongs to set k = (j - i) % 8 (diagonal arrangement, Fig. 4), which lets a
+single 3-to-8 decoder + mode latch select the 8 subarrays of any set for
+either row (RowIn) or column (ColumnIn) access.
+
+The rotary wear-leveling offsets (§8) are applied here: vault/bank/superset/
+set IDs are rotated by running offsets that the wear controller bumps by
+distinct primes on every rotate signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+BLOCK_BYTES = 64
+SET_WAYS = 512  # columns searchable per set == cache associativity
+
+
+@dataclasses.dataclass(frozen=True)
+class MonarchGeometry:
+    """NOTE on Table 3 fidelity: the paper states an 8 GB stack but its
+    listed fields (8 vaults x 64 banks x 256 supersets x 8 sets x 64 rows x
+    64 B) multiply to 4 GB, and the same table lists both "64 banks/vault"
+    and "32 banks/vault".  We keep the STATED capacity (8 GB) — it drives
+    the iso-capacity comparisons — by using 512 supersets/bank, and record
+    the discrepancy here and in DESIGN.md."""
+    n_vaults: int = 8
+    banks_per_vault: int = 64
+    supersets_per_bank: int = 512
+    sets_per_superset: int = 8
+    rows_per_set: int = 64
+    subarray_rows: int = 64
+    subarray_cols: int = 64
+    superset_grid: int = 8  # 8x8 subarrays
+
+    @property
+    def blocks_per_set(self) -> int:
+        return self.rows_per_set
+
+    @property
+    def blocks_per_superset(self) -> int:
+        return self.sets_per_superset * self.rows_per_set  # 512
+
+    @property
+    def total_supersets(self) -> int:
+        return self.n_vaults * self.banks_per_vault * self.supersets_per_bank
+
+    @property
+    def total_blocks(self) -> int:
+        return self.total_supersets * self.blocks_per_superset
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.total_blocks * BLOCK_BYTES
+
+    def scaled(self, factor: int) -> "MonarchGeometry":
+        """Uniformly scale down vault*bank*superset counts for simulation
+        (ratios preserved; per-set geometry untouched)."""
+        assert factor >= 1
+        ss = max(self.supersets_per_bank // factor, 1)
+        return dataclasses.replace(self, supersets_per_bank=ss)
+
+
+GEOM_8GB = MonarchGeometry()
+assert GEOM_8GB.capacity_bytes == 8 * 1024 ** 3
+
+
+# ---------------------------------------------------------------------------
+# Diagonal set selection (Fig. 4).
+# ---------------------------------------------------------------------------
+
+def set_of_subarray(i: int | jnp.ndarray, j: int | jnp.ndarray, grid: int = 8):
+    """Set id of the subarray at superset grid position (row i, col j)."""
+    return (j - i) % grid
+
+
+def subarrays_of_set(k: int, grid: int = 8):
+    """The 8 (i, j) positions selected for set k — one per grid row."""
+    return [(i, (i + k) % grid) for i in range(grid)]
+
+
+def port_select(k: int, mode_column_in: bool, grid: int = 8):
+    """Which port (row/column) each selected subarray drives, per the port
+    selector's mode latch.  Returns [(i, j, port)] with port in
+    {"col", "row"}."""
+    port = "col" if mode_column_in else "row"
+    return [(i, j, port) for (i, j) in subarrays_of_set(k, grid)]
+
+
+# ---------------------------------------------------------------------------
+# Rotary offsets (§8): primes per level, vault bumped every 8th rotate.
+# ---------------------------------------------------------------------------
+
+ROTATE_PRIMES = {"bank": 1, "set": 3, "vault": 5, "superset": 7}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RotaryOffsets:
+    vault: jnp.ndarray  # scalar int32
+    bank: jnp.ndarray
+    superset: jnp.ndarray
+    set_: jnp.ndarray
+    rotate_count: jnp.ndarray
+
+
+def zero_offsets() -> RotaryOffsets:
+    z = jnp.zeros((), jnp.int32)
+    return RotaryOffsets(z, z, z, z, z)
+
+
+def apply_rotate(off: RotaryOffsets) -> RotaryOffsets:
+    """Bump offsets by the unique primes; vault only every 8 rotates."""
+    rc = off.rotate_count + 1
+    vault = off.vault + jnp.where(rc % 8 == 0, ROTATE_PRIMES["vault"], 0)
+    return RotaryOffsets(
+        vault=vault.astype(jnp.int32),
+        bank=(off.bank + ROTATE_PRIMES["bank"]).astype(jnp.int32),
+        superset=(off.superset + ROTATE_PRIMES["superset"]).astype(jnp.int32),
+        set_=(off.set_ + ROTATE_PRIMES["set"]).astype(jnp.int32),
+        rotate_count=rc.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Address decomposition.  Linear block address -> physical coordinates.
+# Bit layout (low to high): set-row | set | superset | bank | vault, so that
+# consecutive blocks stride rows first (good spatial locality within a set),
+# matching the paper's row-major block packing.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockCoord:
+    vault: jnp.ndarray
+    bank: jnp.ndarray
+    superset: jnp.ndarray
+    set_: jnp.ndarray
+    row: jnp.ndarray
+
+    def flat_superset(self, g: MonarchGeometry) -> jnp.ndarray:
+        return (
+            self.vault * g.banks_per_vault + self.bank
+        ) * g.supersets_per_bank + self.superset
+
+
+def decompose(block_addr: jnp.ndarray, g: MonarchGeometry,
+              off: RotaryOffsets | None = None) -> BlockCoord:
+    a = block_addr.astype(jnp.int32) if hasattr(block_addr, "astype") else jnp.asarray(block_addr, jnp.int32)
+    row = a % g.rows_per_set
+    a = a // g.rows_per_set
+    set_ = a % g.sets_per_superset
+    a = a // g.sets_per_superset
+    superset = a % g.supersets_per_bank
+    a = a // g.supersets_per_bank
+    bank = a % g.banks_per_vault
+    a = a // g.banks_per_vault
+    vault = a % g.n_vaults
+    if off is not None:
+        vault = (vault + off.vault) % g.n_vaults
+        bank = (bank + off.bank) % g.banks_per_vault
+        superset = (superset + off.superset) % g.supersets_per_bank
+        set_ = (set_ + off.set_) % g.sets_per_superset
+    to32 = lambda x: x.astype(jnp.int32)
+    return BlockCoord(to32(vault), to32(bank), to32(superset), to32(set_), to32(row))
+
+
+def compose(c: BlockCoord, g: MonarchGeometry) -> jnp.ndarray:
+    """Inverse of decompose (without offsets)."""
+    a = c.vault.astype(jnp.int32)
+    a = a * g.banks_per_vault + c.bank
+    a = a * g.supersets_per_bank + c.superset
+    a = a * g.sets_per_superset + c.set_
+    a = a * g.rows_per_set + c.row
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: coordinated RAM <-> CAM mapping for cache mode.  Data blocks live
+# in RAM banks; their tags live in CAM banks of the SAME vault with the same
+# superset ID.  Every RAM superset (512 blocks) corresponds to one CAM set
+# (512 tag columns); the RAM bank ID supplies the CAM set / key / bank bits.
+# With 32b tags, each 64-bit column stores two tags; key_id selects which.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CamCoord:
+    bank: jnp.ndarray     # CAM bank within the vault's CAM partition
+    set_: jnp.ndarray     # set within the CAM superset
+    key_id: jnp.ndarray   # which tag of the column (0: low half, 1: high)
+
+
+def ram_to_cam(ram_bank: jnp.ndarray, g: MonarchGeometry,
+               n_cam_banks: int = 2) -> CamCoord:
+    """Map a RAM bank id to the (cam_bank, set, key_id) holding its tags.
+
+    The RAM partition has g.banks_per_vault - n_cam_banks banks; each CAM
+    set serves one RAM superset; more-significant bits become the key ID to
+    minimize mask-register updates (paper §7).
+    """
+    b = ram_bank.astype(jnp.int32)
+    sets_per_cam_bank = g.sets_per_superset * g.supersets_per_bank
+    cam_bank = b // (sets_per_cam_bank // max(1, 1))  # folded below
+    # Interleave: low bits pick the set, next bit the cam bank, top the key.
+    set_ = b % g.sets_per_superset
+    rest = b // g.sets_per_superset
+    cam_bank = rest % n_cam_banks
+    key_id = rest // n_cam_banks
+    return CamCoord(cam_bank.astype(jnp.int32), set_.astype(jnp.int32),
+                    key_id.astype(jnp.int32))

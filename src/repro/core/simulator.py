@@ -1,0 +1,482 @@
+"""Trace-driven memory-hierarchy simulator (paper §9-§10 methodology).
+
+Models the path  L3 -> in-package cache (Monarch or baseline) -> DDR4  for a
+stream of memory requests, as a single ``jax.lax.scan`` over the trace.  The
+goal is the paper's *relative* performance study (Fig. 9/10): the timing
+parameters are taken verbatim from Table 3, the cache organizations from §7,
+and the durability machinery (t_MWW superset locking, D/R install filter,
+rotary wear leveling) from §8.
+
+Performance model
+-----------------
+Open-loop with bounded memory-level parallelism: request *i* may not issue
+until request *i - MLP* has completed (a ring buffer of completions models
+the cores' outstanding-miss budget).  Each access seizes a bank chosen by
+address; banks serialize (``bank_free`` vector), so write-latency asymmetry
+(RRAM tWR=162 vs DRAM tWR=4) and bank-count asymmetry (Monarch 64
+banks/vault vs DRAM 8) emerge naturally instead of being hard-coded.
+
+DRAM row-buffer discipline: per-bank open-row registers; a row hit costs
+tCAS+tBL, a conflict tRP+tRCD+tCAS+tBL and re-opens the row.  Refresh is
+charged as a bandwidth tax (Table 3 fraction).  Monarch/CMOS need neither
+(resistive/SRAM stacks are refresh-free; no row buffer).
+
+Tag check:
+* D-Cache / RC-Unbound: tags live with data (Loh-Hill style) — a lookup is
+  a tag READ followed, on hit, by the data read in the same bank.
+* Monarch: the lookup is one SEARCH command in the vault's CAM bank followed,
+  on hit, by a data read in a (different) RAM bank — so tag and data accesses
+  pipeline across banks.
+* S-Cache: SRAM+SCAM search, same flow as Monarch with CMOS timing.
+
+Capacity scaling: cache state arrays are scaled down by ``cfg.scale`` with
+all capacity *ratios* preserved (8GB Monarch : 4GB DRAM : 73MB CMOS); traces
+are generated against the scaled footprint.  Timing is never scaled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import controller, wear
+from repro.core.timing import TECH_TIMING, TABLE1, InterfaceTiming
+
+MLP = 16            # outstanding-miss budget (8 cores x 2 threads, §9.1)
+L3_LATENCY = 42     # cycles; identical across systems
+CPU_GAP = 4         # non-memory work between misses reaching the L3
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    name: str
+    tech: str                    # key into TECH_TIMING
+    inpkg_sets: int
+    inpkg_ways: int
+    search_tags: bool            # True: CAM search; False: tag read
+    l3_sets: int = 64
+    l3_ways: int = 16
+    # Monarch durability knobs.
+    wear_enabled: bool = False
+    m_writes: int = 3
+    dr_filter: bool = False      # D/R-flag selective install (§8)
+    no_allocate: bool = True     # miss fills go to L3 only (§8)
+    t_mww_cycles: int = 1 << 22  # scaled window for simulation
+    dc_limit: int = 256          # scaled dirty-counter limit
+    window_budget_blocks: int = 0  # t_MWW budget blocks (0 = inpkg_ways);
+    # scaled down with capacity so the constraint binds at sim horizon
+    energy_tech: str = "2R XAM"  # Table 1 row for per-op energy
+
+    @property
+    def inpkg_blocks(self) -> int:
+        return self.inpkg_sets * self.inpkg_ways
+
+    @property
+    def timing(self) -> InterfaceTiming:
+        return TECH_TIMING[self.tech]
+
+
+def baseline_configs(scale_blocks: int = 4096) -> dict[str, SimConfig]:
+    """The paper's §10.2 systems.  ``scale_blocks`` = number of 64B blocks
+    the (scaled) 4GB DRAM stack holds; every other capacity keeps the paper's
+    ratio to it (Monarch/RRAM 2x, CMOS 73/4096x)."""
+    dram_blocks = scale_blocks
+    monarch_blocks = scale_blocks * 2
+    cmos_blocks = max(64, int(scale_blocks * 73 / 4096))
+    mk = lambda **kw: SimConfig(**kw)
+    # Baselines are standard allocate-on-miss caches (paper's D-Cache [3]);
+    # ONLY Monarch uses the §8 no-allocate + D/R selective-install policy.
+    cfgs = {
+        "d_cache": mk(name="d_cache", tech="dram",
+                      inpkg_sets=dram_blocks // 16, inpkg_ways=16,
+                      search_tags=False, no_allocate=False,
+                      energy_tech="DRAM"),
+        "d_cache_ideal": mk(name="d_cache_ideal", tech="dram_ideal",
+                            inpkg_sets=dram_blocks // 16, inpkg_ways=16,
+                            search_tags=False, no_allocate=False,
+                            energy_tech="DRAM"),
+        "s_cache": mk(name="s_cache", tech="cmos",
+                      inpkg_sets=max(cmos_blocks // 16, 1), inpkg_ways=16,
+                      search_tags=True, no_allocate=False,
+                      energy_tech="SRAM+SCAM"),
+        "rc_unbound": mk(name="rc_unbound", tech="rram_1r",
+                         inpkg_sets=monarch_blocks // 16, inpkg_ways=16,
+                         search_tags=False, no_allocate=False,
+                         energy_tech="1R RAM"),
+        "monarch_unbound": mk(name="monarch_unbound", tech="monarch",
+                              inpkg_sets=monarch_blocks // 512, inpkg_ways=512,
+                              search_tags=True, dr_filter=True,
+                              energy_tech="2R XAM"),
+    }
+    for m in (1, 2, 3, 4):
+        cfgs[f"monarch_m{m}"] = mk(
+            name=f"monarch_m{m}", tech="monarch",
+            inpkg_sets=monarch_blocks // 512, inpkg_ways=512,
+            search_tags=True, wear_enabled=True, m_writes=m, dr_filter=True,
+            energy_tech="2R XAM")
+    return cfgs
+
+
+# ---------------------------------------------------------------------------
+# Scan state.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimState:
+    # L3 (functional, LRU) + per-line Dirty/Read flags for the §8 filter.
+    l3_tags: jnp.ndarray     # (sets, ways) int64
+    l3_valid: jnp.ndarray    # (sets, ways) int8
+    l3_dirty: jnp.ndarray
+    l3_read: jnp.ndarray
+    l3_age: jnp.ndarray      # (sets, ways) int32
+    # In-package cache.
+    cache: controller.CacheState
+    # Bank/row-buffer timing state.
+    inpkg_bank_free: jnp.ndarray   # (n_banks,) int64
+    inpkg_open_row: jnp.ndarray    # (n_banks,) int64 (-1 = closed)
+    ddr_bank_free: jnp.ndarray     # (ddr_banks,) int64
+    ddr_open_row: jnp.ndarray
+    # MLP ring + clock.
+    completions: jnp.ndarray       # (MLP,) int64
+    arrival: jnp.ndarray           # scalar int64
+    # Durability.
+    wear: wear.WearState
+    # Per-set install-write counts (lifetime estimation, Fig. 11).
+    set_writes: jnp.ndarray        # (n_sets,) int32
+    # Per-(set, way) install counts: within-superset wear skew (Fig. 11).
+    set_way_writes: jnp.ndarray    # (n_sets, ways) int32
+    # Stats.
+    stats: jnp.ndarray             # (NSTATS,) int64
+
+
+STAT_NAMES = [
+    "l3_hits", "l3_misses", "inpkg_hits", "inpkg_misses", "inpkg_reads",
+    "inpkg_writes", "inpkg_searches", "ddr_reads", "ddr_writes",
+    "installs_skipped", "writes_filtered", "locked_bypass", "rotates",
+    "flushed_dirty", "evict_writebacks", "l3_evictions",
+]
+NSTATS = len(STAT_NAMES)
+SIDX = {n: i for i, n in enumerate(STAT_NAMES)}
+
+
+def init_state(cfg: SimConfig) -> SimState:
+    t = cfg.timing
+    n_banks = t.n_vaults * t.banks_per_vault
+    dt = TECH_TIMING["ddr4"]
+    ddr_banks = dt.n_vaults * dt.banks_per_vault
+    return SimState(
+        l3_tags=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int32),
+        l3_valid=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int8),
+        l3_dirty=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int8),
+        l3_read=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int8),
+        l3_age=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int32),
+        cache=controller.init_cache(cfg.inpkg_sets, cfg.inpkg_ways),
+        inpkg_bank_free=jnp.zeros((n_banks,), jnp.int32),
+        inpkg_open_row=-jnp.ones((n_banks,), jnp.int32),
+        ddr_bank_free=jnp.zeros((ddr_banks,), jnp.int32),
+        ddr_open_row=-jnp.ones((ddr_banks,), jnp.int32),
+        completions=jnp.zeros((MLP,), jnp.int32),
+        arrival=jnp.zeros((), jnp.int32),
+        wear=wear.init_state(wear.WearConfig(
+            n_supersets=cfg.inpkg_sets, m_writes=cfg.m_writes,
+            dc_limit=cfg.dc_limit, t_mww_cycles=cfg.t_mww_cycles)),
+        set_writes=jnp.zeros((cfg.inpkg_sets,), jnp.int32),
+        set_way_writes=jnp.zeros((cfg.inpkg_sets, cfg.inpkg_ways), jnp.int32),
+        stats=jnp.zeros((NSTATS,), jnp.int32),
+    )
+
+
+# --------------------------- bank access helpers ---------------------------
+
+def _access(bank_free, open_row, bank, row, when, t: InterfaceTiming,
+            is_write: bool):
+    """Seize ``bank`` at >= ``when``; returns (bank_free', open_row', done)."""
+    start = jnp.maximum(when, bank_free[bank])
+    if t.needs_precharge:
+        row_hit = open_row[bank] == row
+        lat_r = jnp.where(row_hit, t.tCAS + t.tBL,
+                          t.tRP + t.tRCD + t.tCAS + t.tBL)
+        occ_r = jnp.where(row_hit, t.tCCD, t.tRC)
+        open_row = open_row.at[bank].set(row)
+    else:
+        lat_r = jnp.asarray(t.tRCD + t.tCAS + t.tBL)
+        occ_r = jnp.asarray(t.tCCD)
+    lat_w = t.tCWD + t.tWR + t.tBL
+    occ_w = max(t.tCCD, t.tWR)
+    lat = jnp.where(is_write, lat_w, lat_r).astype(jnp.int32)
+    occ = jnp.where(is_write, occ_w, occ_r).astype(jnp.int32)
+    done = start + lat
+    bank_free = bank_free.at[bank].set(start + occ)
+    return bank_free, open_row, done
+
+
+# ------------------------------- step fn -----------------------------------
+
+def make_step(cfg: SimConfig):
+    t = cfg.timing
+    dt = TECH_TIMING["ddr4"]
+    n_banks = t.n_vaults * t.banks_per_vault
+    ddr_banks = dt.n_vaults * dt.banks_per_vault
+    wcfg = wear.WearConfig(
+        n_supersets=cfg.inpkg_sets, m_writes=cfg.m_writes,
+        dc_limit=cfg.dc_limit, t_mww_cycles=cfg.t_mww_cycles,
+        # Scaled sim: budget per (scaled) superset window.
+        blocks_per_superset=cfg.window_budget_blocks or cfg.inpkg_ways)
+
+    def bump(stats, name, amount=1):
+        return stats.at[SIDX[name]].add(amount)
+
+    def step(state: SimState, req):
+        addr, is_write = req["addr"].astype(jnp.int32), req["is_write"]
+        stats = state.stats
+
+        # ---- issue gating: bounded MLP ---------------------------------
+        slot = state.stats[SIDX["l3_misses"]] % MLP  # reuse miss count as idx
+        arrival = jnp.maximum(state.arrival + CPU_GAP,
+                              state.completions[slot.astype(jnp.int32)])
+
+        # ---- L3 ---------------------------------------------------------
+        l3_set = (addr % cfg.l3_sets).astype(jnp.int32)
+        l3_tag = addr // cfg.l3_sets
+        line = (state.l3_tags[l3_set] == l3_tag) & (state.l3_valid[l3_set] == 1)
+        l3_hit = jnp.any(line)
+        l3_way = jnp.argmax(line).astype(jnp.int32)
+
+        # LRU bookkeeping.
+        age = state.l3_age.at[l3_set].add(1)
+        victim = jnp.argmax(jnp.where(state.l3_valid[l3_set] == 1,
+                                      age[l3_set],
+                                      jnp.iinfo(jnp.int32).max)).astype(jnp.int32)
+        way = jnp.where(l3_hit, l3_way, victim)
+        ev_valid = (~l3_hit) & (state.l3_valid[l3_set, way] == 1)
+        ev_tag = state.l3_tags[l3_set, way]
+        ev_dirty = state.l3_dirty[l3_set, way] == 1
+        ev_read = state.l3_read[l3_set, way] == 1
+        ev_addr = ev_tag * cfg.l3_sets + l3_set
+
+        l3_tags = state.l3_tags.at[l3_set, way].set(l3_tag)
+        l3_valid = state.l3_valid.at[l3_set, way].set(1)
+        l3_dirty = state.l3_dirty.at[l3_set, way].set(
+            jnp.where(l3_hit, state.l3_dirty[l3_set, way] | is_write.astype(jnp.int8),
+                      is_write.astype(jnp.int8)))
+        # R flag = read AFTER installation (§8): the installing access itself
+        # does not count, so a fill starts with R=0; later read hits set it.
+        l3_read = state.l3_read.at[l3_set, way].set(
+            jnp.where(l3_hit,
+                      state.l3_read[l3_set, way] | (~is_write).astype(jnp.int8),
+                      jnp.int8(0)))
+        age = age.at[l3_set, way].set(0)
+
+        stats = bump(stats, "l3_hits", l3_hit.astype(jnp.int32))
+        stats = bump(stats, "l3_misses", (~l3_hit).astype(jnp.int32))
+        stats = bump(stats, "l3_evictions", ev_valid.astype(jnp.int32))
+
+        # =================================================================
+        # MISS PATH — in-package lookup.  Everything below is predicated on
+        # ~l3_hit (charged times multiplied to zero on hits).
+        # =================================================================
+        miss = ~l3_hit
+        set_id_log = (addr % cfg.inpkg_sets).astype(jnp.int32)
+        # Rotary offset remap (wear leveling): logical set -> physical set.
+        off = (state.wear.offsets.superset + state.wear.offsets.set_ +
+               state.wear.offsets.bank + state.wear.offsets.vault)
+        set_id = ((set_id_log + off) % cfg.inpkg_sets).astype(jnp.int32)
+        tag = addr // cfg.inpkg_sets
+        hit, hway = controller.cache_lookup(state.cache, set_id, tag)
+        hit = hit & miss
+
+        locked = wear.is_locked(state.wear, set_id, arrival) & cfg.wear_enabled
+        hit = hit & ~locked  # locked superset: bypass to main memory
+        stats = bump(stats, "locked_bypass", (miss & locked).astype(jnp.int32))
+
+        # Bank mapping: CAM lookup bank and RAM data bank (different banks,
+        # §7 decoupled tags/data) vs single-bank tag+data for DRAM-style.
+        cam_bank = (set_id % max(n_banks // 8, 1)).astype(jnp.int32)
+        ram_bank = ((addr // cfg.inpkg_sets + set_id) % n_banks).astype(jnp.int32)
+        inpkg_row = (addr // (cfg.inpkg_sets * 8)) % 1024
+
+        bank_free, open_row = state.inpkg_bank_free, state.inpkg_open_row
+
+        if cfg.search_tags:
+            # SEARCH in CAM bank: occupancy tCCD, latency tRCD+tCAS+tBL.
+            s_start = jnp.maximum(arrival, bank_free[cam_bank])
+            s_done = s_start + (t.tRCD + t.tCAS + t.tBL)
+            bank_free = bank_free.at[cam_bank].set(
+                jnp.where(miss, s_start + t.tCCD, bank_free[cam_bank]))
+            tag_done = jnp.where(miss, s_done, arrival)
+            stats = bump(stats, "inpkg_searches", miss.astype(jnp.int32))
+        else:
+            # Tag READ in the data bank (Loh-Hill compound access).
+            bf2, or2, tag_done_r = _access(bank_free, open_row, ram_bank,
+                                           inpkg_row, arrival, t, False)
+            bank_free = jnp.where(miss, bf2, bank_free)
+            open_row = jnp.where(miss, or2, open_row)
+            tag_done = jnp.where(miss, tag_done_r, arrival)
+            stats = bump(stats, "inpkg_reads", miss.astype(jnp.int32))
+
+        # Data read on hit.
+        bf3, or3, data_done = _access(bank_free, open_row, ram_bank,
+                                      inpkg_row, tag_done, t, False)
+        bank_free = jnp.where(hit, bf3, bank_free)
+        open_row = jnp.where(hit, or3, open_row)
+        stats = bump(stats, "inpkg_hits", hit.astype(jnp.int32))
+        stats = bump(stats, "inpkg_reads", hit.astype(jnp.int32))
+
+        # DDR access on in-package miss.
+        inpkg_miss = miss & ~hit
+        stats = bump(stats, "inpkg_misses", inpkg_miss.astype(jnp.int32))
+        ddr_bank = (addr % ddr_banks).astype(jnp.int32)
+        ddr_row = (addr // ddr_banks) % 65536
+        dbf, dor, ddr_done = _access(state.ddr_bank_free, state.ddr_open_row,
+                                     ddr_bank, ddr_row, tag_done, dt, False)
+        ddr_bank_free = jnp.where(inpkg_miss, dbf, state.ddr_bank_free)
+        ddr_open_row = jnp.where(inpkg_miss, dor, state.ddr_open_row)
+        stats = bump(stats, "ddr_reads", inpkg_miss.astype(jnp.int32))
+
+        completion = jnp.where(
+            l3_hit, arrival + L3_LATENCY,
+            jnp.where(hit, data_done, ddr_done) + L3_LATENCY)
+
+        # ---- fill policy -------------------------------------------------
+        # no-allocate: in-package miss fills only L3 (already done above).
+        # The legacy allocate-on-miss path (baselines) installs now.
+        cache = state.cache
+        wstate = state.wear
+        do_install_miss = inpkg_miss & (not cfg.no_allocate)
+
+        # ---- L3 eviction handling (install / forward / drop, §8) ---------
+        if cfg.dr_filter:
+            inst, fwd = wear.install_decision(ev_dirty, ev_read)
+        else:
+            # plain writeback cache: dirty evictions update the in-package
+            # copy; clean evictions are dropped (fills happened on miss).
+            inst, fwd = ev_dirty, jnp.asarray(False)
+        ev_install = ev_valid & inst & ~locked
+        ev_forward = ev_valid & (fwd | locked) & ev_dirty
+        # Write traffic removed from the in-package memory by the D/R rules:
+        # D&R̄ (forwarded to DRAM) + D̄&R̄ (dropped) — every eviction NOT
+        # installed is one avoided XAM write (paper: ~31% reduction).
+        stats = bump(stats, "writes_filtered",
+                     (ev_valid & ~inst).astype(jnp.int32))
+
+        ev_set_log = (ev_addr % cfg.inpkg_sets).astype(jnp.int32)
+        ev_set = ((ev_set_log + off) % cfg.inpkg_sets).astype(jnp.int32)
+        ev_tag_c = ev_addr // cfg.inpkg_sets
+        # Install into in-package cache (a XAM/DRAM write).
+        install_any = ev_install | do_install_miss
+        inst_set = jnp.where(ev_install, ev_set, set_id)
+        inst_tag = jnp.where(ev_install, ev_tag_c, tag)
+        inst_dirty = jnp.where(ev_install, ev_dirty, is_write)
+        cache2, evicted_dirty, inst_way = controller.cache_install(
+            cache, inst_set, inst_tag, inst_dirty)
+        cache = jax.tree.map(
+            lambda a, b: jnp.where(install_any, b, a), cache, cache2)
+        stats = bump(stats, "inpkg_writes", install_any.astype(jnp.int32))
+        stats = bump(stats, "evict_writebacks",
+                     (install_any & evicted_dirty).astype(jnp.int32))
+
+        # Charge the write on the RAM bank (occupancy tWR — the RRAM pain).
+        w_bank = ((inst_tag + inst_set) % n_banks).astype(jnp.int32)
+        w_start = jnp.maximum(arrival, bank_free[w_bank])
+        w_occ = jnp.int32(max(t.tCCD, t.tWR))
+        bank_free = bank_free.at[w_bank].set(
+            jnp.where(install_any, w_start + w_occ, bank_free[w_bank]))
+
+        # Forwarded dirty evictions + in-package dirty evictions go to DDR4.
+        ddr_w = ev_forward | (install_any & evicted_dirty)
+        dwb = ((ev_addr) % ddr_banks).astype(jnp.int32)
+        dw_start = jnp.maximum(arrival, ddr_bank_free[dwb])
+        ddr_bank_free = ddr_bank_free.at[dwb].set(
+            jnp.where(ddr_w, dw_start + max(dt.tCCD, dt.tWR), ddr_bank_free[dwb]))
+        stats = bump(stats, "ddr_writes", ddr_w.astype(jnp.int32))
+
+        # ---- wear accounting + rotation ----------------------------------
+        if cfg.wear_enabled:
+            wstate2, rotated, flushed = wear.record_write(
+                wstate, wcfg, inst_set, inst_dirty, arrival)
+            wstate = jax.tree.map(
+                lambda a, b: jnp.where(install_any, b, a), wstate, wstate2)
+            rot_now = install_any & rotated
+            # On rotation: invalidate dirty sets (flush); charge writebacks.
+            set_mask = (state.cache.dirty.sum(axis=1) > 0)
+            cache3, n_flush = controller.cache_invalidate_sets(cache, set_mask)
+            cache = jax.tree.map(
+                lambda a, b: jnp.where(rot_now, b, a), cache, cache3)
+            stats = bump(stats, "rotates", rot_now.astype(jnp.int32))
+            stats = bump(stats, "flushed_dirty",
+                         jnp.where(rot_now, n_flush, 0).astype(jnp.int32))
+
+        set_writes = state.set_writes.at[inst_set].add(
+            install_any.astype(jnp.int32))
+        set_way_writes = state.set_way_writes.at[inst_set, inst_way].add(
+            install_any.astype(jnp.int32))
+
+        # ---- retire -------------------------------------------------------
+        completions = state.completions.at[slot.astype(jnp.int32)].set(
+            jnp.where(miss, completion, state.completions[slot.astype(jnp.int32)]))
+
+        new = SimState(
+            l3_tags=l3_tags, l3_valid=l3_valid, l3_dirty=l3_dirty,
+            l3_read=l3_read, l3_age=age,
+            cache=cache,
+            inpkg_bank_free=bank_free, inpkg_open_row=open_row,
+            ddr_bank_free=ddr_bank_free, ddr_open_row=ddr_open_row,
+            completions=completions,
+            arrival=jnp.maximum(arrival, state.arrival),
+            wear=wstate, set_writes=set_writes,
+            set_way_writes=set_way_writes, stats=stats,
+        )
+        return new, completion
+
+    return step
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _run(cfg: SimConfig, addrs: jnp.ndarray, is_write: jnp.ndarray):
+    state = init_state(cfg)
+    step = make_step(cfg)
+    final, completions = jax.lax.scan(
+        step, state, {"addr": addrs, "is_write": is_write})
+    return final, completions
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    total_cycles: float
+    stats: dict[str, int]
+    energy_nj: float
+
+    @property
+    def inpkg_hit_rate(self) -> float:
+        h, m = self.stats["inpkg_hits"], self.stats["inpkg_misses"]
+        return h / max(h + m, 1)
+
+
+def simulate_trace(cfg: SimConfig, addrs, is_write,
+                   return_state: bool = False):
+    addrs = jnp.asarray(addrs, jnp.int32)
+    is_write = jnp.asarray(is_write, bool)
+    final, completions = _run(cfg, addrs, is_write)
+    total = float(jnp.max(completions))
+    # Refresh tax: DRAM loses a bandwidth fraction.
+    total *= 1.0 / (1.0 - cfg.timing.refresh_overhead)
+    stats = {n: int(final.stats[i]) for i, n in enumerate(STAT_NAMES)}
+    e = TABLE1[cfg.energy_tech]
+    ddr_e = TABLE1["DRAM"]
+    energy = (
+        stats["inpkg_reads"] * e.read_nj
+        + stats["inpkg_writes"] * e.write_nj
+        + stats["inpkg_searches"] * e.search_nj
+        + (stats["ddr_reads"] * ddr_e.read_nj + stats["ddr_writes"] * ddr_e.write_nj) * 4.0
+    )
+    # DRAM static/refresh energy tax (per §10.2's energy trends).
+    if cfg.timing.needs_refresh:
+        energy *= 1.30
+    result = SimResult(cfg.name, total, stats, energy)
+    if return_state:
+        return result, final
+    return result

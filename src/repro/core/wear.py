@@ -1,0 +1,199 @@
+"""Wear-leveling and t_MWW enforcement (paper §8, Fig. 8).
+
+Pure-functional state machine over JAX arrays so it composes into the
+``lax.scan`` trace simulator AND is unit/property-testable in isolation.
+
+Components reproduced:
+
+* Superset Write Table (SWT): W (written) and D (dirty) flags per superset.
+* write / superset / dirty counters.
+* WR approximation WITHOUT a divider: WR = 1 when the most significant
+  non-zero bit of the write counter is >= 9 binary orders (512x) above the
+  superset counter's MSB.
+* rotate = WR | WC | DC  (WC/DC = saturation limits of the counters;
+  the paper sets DC = 8192 to bound flush cost).
+* On rotate: dirty supersets flushed (returned as a count + mask for the
+  simulator to charge writeback traffic), SWT and counters reset, rotary
+  offsets bumped by unique primes (geometry.apply_rotate).
+* t_MWW: per-superset write budget of 512*M per window (t_MWW enforced at
+  superset granularity = 512 blocks, §8 "Tracking Writes"); a superset
+  exceeding the budget is locked (cache mode: bypass to main memory) until
+  the window rolls over.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry
+from repro.core.timing import CPU_HZ, t_mww_seconds
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WearConfig:
+    n_supersets: int = dataclasses.field(metadata=dict(static=True))
+    m_writes: int = dataclasses.field(metadata=dict(static=True), default=3)
+    dc_limit: int = dataclasses.field(metadata=dict(static=True), default=8192)
+    wc_limit: int = dataclasses.field(metadata=dict(static=True), default=1 << 22)
+    wr_shift: int = dataclasses.field(metadata=dict(static=True), default=9)
+    t_mww_cycles: int = dataclasses.field(metadata=dict(static=True), default=0)
+    blocks_per_superset: int = dataclasses.field(metadata=dict(static=True), default=512)
+
+    @property
+    def window_write_budget(self) -> int:
+        # M writes per BLOCK per window, tracked at superset granularity:
+        # budget = 512 * M writes per superset per window (§8).
+        return self.blocks_per_superset * self.m_writes
+
+
+def make_config(n_supersets: int, m_writes: int = 3,
+                t_life_years: float = 10.0, endurance: float = 1e8,
+                **kw) -> WearConfig:
+    t_mww_s = t_mww_seconds(m_writes, t_life_years * 365.25 * 24 * 3600, endurance)
+    return WearConfig(
+        n_supersets=n_supersets, m_writes=m_writes,
+        t_mww_cycles=int(t_mww_s * CPU_HZ), **kw,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WearState:
+    swt_w: jnp.ndarray          # (S,) int8 — written flag
+    swt_d: jnp.ndarray          # (S,) int8 — dirty flag
+    write_counter: jnp.ndarray  # scalar int32
+    superset_counter: jnp.ndarray
+    dirty_counter: jnp.ndarray
+    offsets: geometry.RotaryOffsets
+    # t_MWW window tracking, per superset.
+    window_writes: jnp.ndarray  # (S,) int32 writes in current window
+    window_start: jnp.ndarray   # (S,) int64 cycle the window opened
+    locked_until: jnp.ndarray   # (S,) int64 cycle until which superset is locked
+    total_rotates: jnp.ndarray  # scalar int32
+    total_flushed: jnp.ndarray  # scalar int32 — dirty supersets flushed
+
+
+def init_state(cfg: WearConfig) -> WearState:
+    s = cfg.n_supersets
+    return WearState(
+        swt_w=jnp.zeros((s,), jnp.int8),
+        swt_d=jnp.zeros((s,), jnp.int8),
+        write_counter=jnp.zeros((), jnp.int32),
+        superset_counter=jnp.zeros((), jnp.int32),
+        dirty_counter=jnp.zeros((), jnp.int32),
+        offsets=geometry.zero_offsets(),
+        window_writes=jnp.zeros((s,), jnp.int32),
+        window_start=jnp.zeros((s,), jnp.int32),
+        locked_until=jnp.zeros((s,), jnp.int32),
+        total_rotates=jnp.zeros((), jnp.int32),
+        total_flushed=jnp.zeros((), jnp.int32),
+    )
+
+
+def msb_index(x: jnp.ndarray) -> jnp.ndarray:
+    """Index of the most-significant non-zero bit; -1 for zero (Fig. 8's
+    divider-free ratio detector operates on these)."""
+    x32 = x.astype(jnp.uint32)
+    clz = jax.lax.clz(x32)
+    return jnp.where(x32 == 0, jnp.int32(-1), (31 - clz).astype(jnp.int32))
+
+
+def wr_signal(state: WearState, cfg: WearConfig) -> jnp.ndarray:
+    """WR=1 when msb(write_counter) - msb(superset_counter) >= wr_shift
+    (the divider-free 512x ratio detector, Fig. 8)."""
+    wmsb = msb_index(state.write_counter)
+    smsb = msb_index(state.superset_counter)
+    return ((wmsb - smsb) >= cfg.wr_shift) & (state.superset_counter > 0)
+
+
+def rotate_signal(state: WearState, cfg: WearConfig) -> jnp.ndarray:
+    wc = state.write_counter >= cfg.wc_limit
+    dc = state.dirty_counter >= cfg.dc_limit
+    return wr_signal(state, cfg) | wc | dc
+
+
+def is_locked(state: WearState, superset: jnp.ndarray, cycle: jnp.ndarray) -> jnp.ndarray:
+    return cycle < state.locked_until[superset]
+
+
+def record_write(state: WearState, cfg: WearConfig, superset: jnp.ndarray,
+                 makes_dirty: jnp.ndarray, cycle: jnp.ndarray):
+    """Account one XAM write to ``superset`` at ``cycle``.
+
+    Returns (new_state, rotated:bool, flushed_count:int32).
+    Handles, in order: t_MWW window rollover, budget accounting + lock,
+    SWT/counter updates, rotate detection + offset bump + SWT reset.
+    """
+    s = superset
+    cycle = cycle.astype(jnp.int32)
+
+    # --- t_MWW window ----------------------------------------------------
+    win = jnp.int32(max(cfg.t_mww_cycles, 1))
+    expired = (cycle - state.window_start[s]) >= win
+    w_writes = jnp.where(expired, 0, state.window_writes[s])
+    w_start = jnp.where(expired, cycle, state.window_start[s])
+    w_writes = w_writes + 1
+    over = w_writes > cfg.window_write_budget
+    locked_until = jnp.where(over, w_start + win, state.locked_until[s])
+
+    window_writes = state.window_writes.at[s].set(w_writes)
+    window_start = state.window_start.at[s].set(w_start)
+    locked = state.locked_until.at[s].set(locked_until)
+
+    # --- SWT + counters (Fig. 8) ------------------------------------------
+    first_write = state.swt_w[s] == 0
+    superset_counter = state.superset_counter + jnp.where(first_write, 1, 0).astype(jnp.int32)
+    swt_w = state.swt_w.at[s].set(1)
+    newly_dirty = (state.swt_d[s] == 0) & makes_dirty
+    dirty_counter = state.dirty_counter + jnp.where(newly_dirty, 1, 0).astype(jnp.int32)
+    swt_d = state.swt_d.at[s].max(makes_dirty.astype(jnp.int8))
+    write_counter = state.write_counter + 1
+
+    mid = WearState(
+        swt_w=swt_w, swt_d=swt_d,
+        write_counter=write_counter, superset_counter=superset_counter,
+        dirty_counter=dirty_counter, offsets=state.offsets,
+        window_writes=window_writes, window_start=window_start,
+        locked_until=locked,
+        total_rotates=state.total_rotates, total_flushed=state.total_flushed,
+    )
+
+    rot = rotate_signal(mid, cfg)
+    flushed = jnp.where(rot, jnp.sum(swt_d.astype(jnp.int32)), 0)
+
+    def do_rotate(st: WearState) -> WearState:
+        return WearState(
+            swt_w=jnp.zeros_like(st.swt_w),
+            swt_d=jnp.zeros_like(st.swt_d),
+            write_counter=jnp.zeros_like(st.write_counter),
+            superset_counter=jnp.zeros_like(st.superset_counter),
+            dirty_counter=jnp.zeros_like(st.dirty_counter),
+            offsets=geometry.apply_rotate(st.offsets),
+            window_writes=st.window_writes,
+            window_start=st.window_start,
+            locked_until=st.locked_until,
+            total_rotates=st.total_rotates + 1,
+            total_flushed=st.total_flushed + flushed,
+        )
+
+    new_state = jax.lax.cond(rot, do_rotate, lambda st: st, mid)
+    return new_state, rot, flushed
+
+
+# ---------------------------------------------------------------------------
+# L3-eviction write-mitigation filter (§8 "Mitigating Writes").
+# D (dirty) and R (read-since-install) flags decide the fate of an evicted
+# block:  D&R -> install/update in Monarch;  D&!R -> forward to main memory;
+# !D&R -> install as read-only;  !D&!R -> drop.
+# ---------------------------------------------------------------------------
+
+def install_decision(dirty: jnp.ndarray, read: jnp.ndarray):
+    """Returns (install_in_monarch, forward_to_dram)."""
+    dirty = dirty.astype(bool)
+    read = read.astype(bool)
+    install = read  # D&R and !D&R install
+    forward = dirty & ~read  # D&!R forwarded to DRAM
+    return install, forward

@@ -1,0 +1,197 @@
+"""Bit-accurate functional model of the XAM reconfigurable RAM/CAM array.
+
+The XAM array (paper §4) is a crosspoint of differential 2R memristive
+cells.  Each cell stores one bit as a (R, R̄) resistance pair.  The array
+supports four data-plane operations:
+
+* ``write_row``    — two-step row write (0s first, then 1s), §4.1.1
+* ``write_col``    — two-step column write, §4.1.2 (enabled by the 2R cell)
+* ``read_row``     — voltage-divider row read against Ref_R, §4.2.1
+* ``search``       — masked parallel match of a key against ALL columns
+                     (in-situ XNOR + analog column sum vs Ref_S), §4.2.2
+
+Everything here is pure-functional JAX on {0,1} int8 bit planes so it can
+run under ``jax.jit`` / ``lax.scan`` and serve as the oracle for the Pallas
+kernels in ``repro.kernels``.
+
+Wear model: per the paper's evaluation assumption ("the write voltage is
+constant for every write across both resistors"), every cell on an active
+row/column receives a programming pulse on each write regardless of whether
+its value changes — so wear increments for the full written line.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Canonical XAM array geometry (paper §6 / Table 3): 64 x 64 bit subarrays.
+N_ROWS = 64
+N_COLS = 64
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class XamArray:
+    """State of one XAM subarray.
+
+    bits        : (n_rows, n_cols) int8 in {0,1} — logical cell contents.
+    cell_writes : (n_rows, n_cols) int32 — cumulative programming pulses
+                  (wear), used by the lifetime model.
+    """
+
+    bits: jnp.ndarray
+    cell_writes: jnp.ndarray
+
+    @property
+    def n_rows(self) -> int:
+        return self.bits.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.bits.shape[1]
+
+
+def make_array(n_rows: int = N_ROWS, n_cols: int = N_COLS) -> XamArray:
+    return XamArray(
+        bits=jnp.zeros((n_rows, n_cols), jnp.int8),
+        cell_writes=jnp.zeros((n_rows, n_cols), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Writes (two-step: 0s then 1s).  The two steps are modeled explicitly so the
+# tests can check the voltage-discipline invariant: step-1 touches exactly the
+# cells receiving a 0, step-2 exactly the cells receiving a 1, and cells on
+# inactive lines are never disturbed (V/2 half-select).
+# ---------------------------------------------------------------------------
+
+def write_row_steps(arr: XamArray, row: jnp.ndarray, data: jnp.ndarray):
+    """Return (new_array, step0_mask, step1_mask) for writing ``data`` into
+    row ``row``.  data: (n_cols,) bits."""
+    data = data.astype(jnp.int8)
+    row_onehot = (jnp.arange(arr.n_rows) == row).astype(jnp.int8)  # (R,)
+    # Step 1: active h_line at G, v_lines of input-0 at V  -> program 0s.
+    step0 = row_onehot[:, None] * (1 - data)[None, :]
+    # Step 2: active h_line switched to V -> program 1s.
+    step1 = row_onehot[:, None] * data[None, :]
+    new_bits = jnp.where(row_onehot[:, None] == 1, data[None, :], arr.bits)
+    # Full-line programming pulse (constant write voltage assumption).
+    new_wear = arr.cell_writes + row_onehot[:, None].astype(jnp.int32)
+    return XamArray(new_bits.astype(jnp.int8), new_wear), step0, step1
+
+
+def write_row(arr: XamArray, row: jnp.ndarray, data: jnp.ndarray) -> XamArray:
+    new_arr, _, _ = write_row_steps(arr, row, data)
+    return new_arr
+
+
+def write_col_steps(arr: XamArray, col: jnp.ndarray, data: jnp.ndarray):
+    """Column write (§4.1.2): data fed through the ROW drivers; one column
+    active, others half-selected at V/2.  data: (n_rows,) bits."""
+    data = data.astype(jnp.int8)
+    col_onehot = (jnp.arange(arr.n_cols) == col).astype(jnp.int8)  # (C,)
+    step0 = (1 - data)[:, None] * col_onehot[None, :]
+    step1 = data[:, None] * col_onehot[None, :]
+    new_bits = jnp.where(col_onehot[None, :] == 1, data[:, None], arr.bits)
+    new_wear = arr.cell_writes + col_onehot[None, :].astype(jnp.int32)
+    return XamArray(new_bits.astype(jnp.int8), new_wear), step0, step1
+
+
+def write_col(arr: XamArray, col: jnp.ndarray, data: jnp.ndarray) -> XamArray:
+    new_arr, _, _ = write_col_steps(arr, col, data)
+    return new_arr
+
+
+# ---------------------------------------------------------------------------
+# Reads and searches.
+# ---------------------------------------------------------------------------
+
+def read_row(arr: XamArray, row: jnp.ndarray) -> jnp.ndarray:
+    """Row read (§4.2.1).  The voltage divider develops ~G for a stored 0 and
+    ~V_R for a stored 1; sensing against Ref_R = V_R/2 recovers the bit."""
+    return jnp.take(arr.bits, row, axis=0)
+
+
+def search_voltages(
+    bits: jnp.ndarray, key: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Analog model of the CAM search (§4.2.2): returns the normalized
+    column line voltage in [0, 1] (fraction of V_R).
+
+    A cell whose low-resistance element is pulled to ground (bit mismatch)
+    pulls its column voltage down.  With H >> L, the column voltage is
+    approximately V_R * H*n_match_paths/(...); the discriminating quantity is
+    simply whether ANY selected cell mismatches.  We model the normalized
+    voltage as 1 - (#mismatches)/(#selected) scaled into the sensing range so
+    Ref_S sits between "all match" and "one mismatch".
+    """
+    key = key.astype(jnp.int8)
+    mask = mask.astype(jnp.int8)
+    # XNOR per selected cell: 1 where cell bit == key bit.
+    xnor = (bits == key[:, None]).astype(jnp.int32)
+    mism = jnp.sum(mask[:, None].astype(jnp.int32) * (1 - xnor), axis=0)
+    n_sel = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+    return 1.0 - mism.astype(jnp.float32) / n_sel.astype(jnp.float32)
+
+
+def ref_s(n_selected: jnp.ndarray) -> jnp.ndarray:
+    """Sensing reference between all-match (1.0) and single-mismatch
+    (1 - 1/n) normalized voltages."""
+    n = jnp.maximum(n_selected, 1).astype(jnp.float32)
+    return 1.0 - 0.5 / n
+
+
+def search(arr: XamArray, key: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked parallel search.  key, mask: (n_rows,) bits.  Returns
+    (n_cols,) int8 match vector: 1 iff every unmasked key bit equals the
+    stored column bit."""
+    v = search_voltages(arr.bits, key, mask)
+    n_sel = jnp.sum(mask.astype(jnp.int32))
+    return (v > ref_s(n_sel)).astype(jnp.int8)
+
+
+def search_digital(arr: XamArray, key, mask) -> jnp.ndarray:
+    """Digital oracle for search (no analog model) — used in property tests
+    to pin the analog threshold model to the boolean semantics."""
+    key = key.astype(jnp.int8)
+    mask = mask.astype(jnp.int8)
+    eq = (arr.bits == key[:, None]) | (mask[:, None] == 0)
+    return jnp.all(eq, axis=0).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Set-level helpers.  One Monarch *set* spans 8 subarrays of 64x64 selected
+# diagonally inside a superset, i.e. a logical 64-row x 512-column XAM plane.
+# Blocks (64B = 512 bits) are written row-wise across the 8 subarrays; tags /
+# keys are stored column-wise (two 32-bit tags per 64-bit column, §7).
+# ---------------------------------------------------------------------------
+
+SET_COLS = 8 * N_COLS  # 512 columns searchable in one command
+
+
+def make_set(n_rows: int = N_ROWS, n_cols: int = SET_COLS) -> XamArray:
+    return make_array(n_rows, n_cols)
+
+
+@partial(jax.jit, static_argnames=())
+def set_search(arr: XamArray, key: jnp.ndarray, mask: jnp.ndarray):
+    """Search a whole set; returns (match_vector, match_index) where
+    match_index is the lowest matching column or -1 (the paper's match
+    register resets to NULL on no-match)."""
+    matches = search(arr, key, mask)
+    any_match = jnp.any(matches == 1)
+    idx = jnp.argmax(matches)  # lowest index with a 1
+    return matches, jnp.where(any_match, idx, -1)
+
+
+def pack_block_rowwise(arr: XamArray, row: jnp.ndarray, block_bits: jnp.ndarray) -> XamArray:
+    """Write one 512-bit block across a set's row (RowIn RAM mode)."""
+    return write_row(arr, row, block_bits)
+
+
+def store_key_colwise(arr: XamArray, col: jnp.ndarray, key_bits: jnp.ndarray) -> XamArray:
+    """Store a key/tag down a column (ColumnIn CAM mode)."""
+    return write_col(arr, col, key_bits)

@@ -1,0 +1,125 @@
+"""Deterministic, seed+step-addressable data pipeline.
+
+Every batch is a pure function of (seed, step, shard, n_shards): any worker
+can (re)compute any shard of any step — this is what makes checkpoint
+restart, elastic rescaling and straggler re-dispatch correct without a
+central data server.  Synthetic token streams are zipf-distributed with
+local n-gram structure (enough for loss-goes-down smoke training).
+
+The CAM-dedup path: batches can be fingerprinted (murmur3 over token
+blocks) and checked against the Monarch flat-CAM index to drop replayed
+sequences (repro.serve.kv_index reuses the same hashing).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.xam_search import ops as xam_ops
+
+
+# ---------------------------------------------------------------------------
+# Murmur3 finalizer (32-bit avalanche) — paper §9.2.2 uses Murmur3 for
+# Hopscotch hashing; we use the finalizer as the hash core everywhere.
+# ---------------------------------------------------------------------------
+
+def murmur3_fmix32(x):
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def murmur3_np(x: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):   # wraparound is the point
+        x = x.astype(np.uint32)
+        x ^= x >> 16
+        x = (x * np.uint32(0x85EBCA6B)).astype(np.uint32)
+        x ^= x >> 13
+        x = (x * np.uint32(0xC2B2AE35)).astype(np.uint32)
+        x ^= x >> 16
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Token stream.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+def batch_at(cfg: DataConfig, step: int, shard: int = 0, n_shards: int = 1):
+    """Deterministic batch: (tokens, labels) int32 arrays for one shard."""
+    per = cfg.global_batch // n_shards
+    rng = np.random.default_rng(
+        np.uint64(cfg.seed) * np.uint64(1_000_003)
+        + np.uint64(step) * np.uint64(997) + np.uint64(shard))
+    z = rng.zipf(cfg.zipf_a, size=(per, cfg.seq_len + 1))
+    toks = (murmur3_np(z.astype(np.uint32)) % np.uint32(cfg.vocab_size - 1) + 1
+            ).astype(np.int32)
+    # inject local structure: every 8th position repeats a recent token
+    toks[:, 8::8] = toks[:, 7:-1:8]
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# YCSB-style key-value workloads (paper §9.2.2: YCSB-B zipfian 95/5).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class YcsbConfig:
+    n_keys: int
+    n_ops: int
+    read_fraction: float = 0.95   # YCSB-B
+    zipf_a: float = 1.2
+    seed: int = 0
+
+
+def ycsb_ops(cfg: YcsbConfig):
+    """Returns (keys uint64, is_read bool) operation stream over a keyspace
+    of n_keys existing keys; writes may insert new keys."""
+    rng = np.random.default_rng(cfg.seed)
+    ranks = rng.zipf(cfg.zipf_a, cfg.n_ops).astype(np.uint64)
+    keys = murmur3_np((ranks % np.uint64(cfg.n_keys)).astype(np.uint32)).astype(np.uint64)
+    keys = (keys << np.uint64(16)) | (ranks % np.uint64(cfg.n_keys))
+    is_read = rng.random(cfg.n_ops) < cfg.read_fraction
+    # writes beyond the keyspace are inserts of fresh keys
+    fresh = rng.integers(cfg.n_keys, cfg.n_keys * 2, cfg.n_ops).astype(np.uint64)
+    keys = np.where(is_read, keys, (murmur3_np(fresh.astype(np.uint32)).astype(np.uint64) << np.uint64(16)) | fresh)
+    return keys, is_read
+
+
+# ---------------------------------------------------------------------------
+# CAM dedup over token blocks.
+# ---------------------------------------------------------------------------
+
+def fingerprint_blocks(tokens: np.ndarray, block: int = 16) -> np.ndarray:
+    """(B, S) int32 -> (B, S//block) uint32 rolling murmur fingerprints."""
+    b, s = tokens.shape
+    nb = s // block
+    t = tokens[:, :nb * block].reshape(b, nb, block).astype(np.uint32)
+    acc = np.zeros((b, nb), np.uint32)
+    for i in range(block):
+        acc = murmur3_np(acc ^ t[:, :, i])
+    return acc
+
+
+def dedup_mask(fps: np.ndarray, stored_bits: jnp.ndarray) -> np.ndarray:
+    """True where a fingerprint already exists in the CAM index plane
+    (stored_bits: (32, C) int8).  One XAM search per fingerprint batch."""
+    flat = fps.reshape(-1)
+    keys = xam_ops.words_to_bits(jnp.asarray(flat, jnp.uint32), 32)
+    hits = xam_ops.xam_search(keys, stored_bits)
+    return np.asarray(jnp.any(hits == 1, axis=1)).reshape(fps.shape)

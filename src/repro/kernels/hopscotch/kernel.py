@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused hopscotch-window lookup (Monarch flat-CAM flow).
+
+Monarch turns "probe up to H buckets serially" into one CAM search per
+window.  The TPU-native analogue is a *scalar-prefetch gather kernel* in the
+style of paged attention block tables: the per-query home indices ride in
+SMEM (scalar prefetch), and the BlockSpec index_map uses them to DMA exactly
+the two H-aligned table tiles that cover the query's window from HBM into
+VMEM — one fused gather+match instead of H scalar loads.
+
+Layout: the key table is reshaped (n_slots/H, H); query q's window
+[home, home+H) spans aligned tiles  home//H  and  home//H + 1.  Both tiles
+are fetched (two in_specs over the same array), concatenated, shifted by
+home % H, and compared against the query key (64-bit keys as two uint32
+planes).  Output: first-match offset within the window, or -1.
+
+Grid = one query per step — each step's DMA target depends on that query's
+home, exactly like one search command per window on Monarch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lookup_kernel(scalars_ref,             # (3, Q) int32: homes, q_lo, q_hi
+                   lo0_ref, lo1_ref, hi0_ref, hi1_ref,  # (1, H) table tiles
+                   out_ref):                # (1, 1) int32
+    q = pl.program_id(0)
+    window = lo0_ref.shape[1]
+    home = scalars_ref[0, q]
+    q_lo = scalars_ref[1, q]
+    q_hi = scalars_ref[2, q]
+    off = home % window
+
+    # Keep everything 2D (1, 2H) — lane-shaped for the VPU.
+    lo = jnp.concatenate([lo0_ref[...], lo1_ref[...]], axis=1)   # (1, 2H)
+    hi = jnp.concatenate([hi0_ref[...], hi1_ref[...]], axis=1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 2 * window), 1)
+    in_win = (pos >= off) & (pos < off + window)
+    match = in_win & (lo == q_lo) & (hi == q_hi)
+    big = jnp.int32(2 * window)
+    first = jnp.min(jnp.where(match, pos, big))
+    out_ref[0, 0] = jnp.where(first < big, first - off, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def hopscotch_lookup_pallas(table_lo, table_hi, homes, q_lo, q_hi,
+                            *, window: int, interpret: bool = True):
+    """table_lo/hi: (n_slots,) uint32 (n_slots % window == 0, with >= window
+    pad slots so home+2H never overruns); homes: (Q,) int32; q_lo/hi: (Q,)
+    uint32.  Returns (Q,) int32 first-match offsets (-1 = miss)."""
+    n_slots = table_lo.shape[0]
+    assert n_slots % window == 0
+    n_tiles = n_slots // window
+    q = homes.shape[0]
+
+    t_lo = table_lo.reshape(n_tiles, window)
+    t_hi = table_hi.reshape(n_tiles, window)
+    scalars = jnp.stack([
+        homes.astype(jnp.int32),
+        q_lo.astype(jnp.uint32).view(jnp.int32),
+        q_hi.astype(jnp.uint32).view(jnp.int32),
+    ])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((1, window), lambda i, s: (s[0, i] // window, 0)),
+            pl.BlockSpec((1, window), lambda i, s: (s[0, i] // window + 1, 0)),
+            pl.BlockSpec((1, window), lambda i, s: (s[0, i] // window, 0)),
+            pl.BlockSpec((1, window), lambda i, s: (s[0, i] // window + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, s: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _lookup_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        interpret=interpret,
+    )(scalars, t_lo.view(jnp.int32), t_lo.view(jnp.int32),
+      t_hi.view(jnp.int32), t_hi.view(jnp.int32))
+    return out[:, 0]

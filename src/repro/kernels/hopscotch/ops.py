@@ -1,0 +1,28 @@
+"""Jit'd wrappers for the hopscotch window-lookup kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hopscotch.kernel import hopscotch_lookup_pallas
+from repro.kernels.hopscotch.ref import hopscotch_lookup_ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def hopscotch_lookup(table_lo, table_hi, homes, q_lo, q_hi, *, window: int,
+                     use_kernel: bool = True,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """First-match offset within each query's H-bucket window (-1 = miss)."""
+    table_lo = jnp.asarray(table_lo, jnp.uint32)
+    table_hi = jnp.asarray(table_hi, jnp.uint32)
+    homes = jnp.asarray(homes, jnp.int32)
+    q_lo = jnp.asarray(q_lo, jnp.uint32)
+    q_hi = jnp.asarray(q_hi, jnp.uint32)
+    if not use_kernel:
+        return hopscotch_lookup_ref(table_lo, table_hi, homes, q_lo, q_hi, window)
+    if interpret is None:
+        interpret = not _ON_TPU
+    return hopscotch_lookup_pallas(
+        table_lo, table_hi, homes, q_lo, q_hi,
+        window=window, interpret=interpret)

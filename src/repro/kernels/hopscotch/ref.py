@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the hopscotch window lookup.
+
+Monarch semantics (paper §9.2.2): a hash-table lookup probes the H buckets
+of the key's hopscotch window.  The baseline issues up to H serial reads;
+Monarch issues ONE search covering the window.  The oracle returns, per
+query, the offset (0..H-1) of the first bucket whose stored key equals the
+query key, or -1.
+
+Table layout: ``table_lo/hi`` are (n_slots,) uint32 planes of 64-bit keys
+(slot 0 .. n_slots-1); the table is allocated with H-1 trailing pad slots so
+windows never wrap.  Empty slots hold the key 0 sentinel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hopscotch_lookup_ref(table_lo, table_hi, homes, q_lo, q_hi,
+                         window: int) -> jnp.ndarray:
+    homes = homes.astype(jnp.int32)
+    idx = homes[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+    w_lo = table_lo[idx]           # (Q, H)
+    w_hi = table_hi[idx]
+    match = (w_lo == q_lo[:, None]) & (w_hi == q_hi[:, None])
+    any_m = jnp.any(match, axis=1)
+    off = jnp.argmax(match, axis=1).astype(jnp.int32)
+    return jnp.where(any_m, off, -1)

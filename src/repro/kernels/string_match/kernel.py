@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: broadcast string match (Monarch flat-CAM §10.5).
+
+Monarch broadcasts one search across the whole dataset span, each command
+covering up to 4 KB.  TPU mapping: each grid step owns one text tile in VMEM
+plus its right halo (the next tile), and slides the pattern across it with P
+static vectorized compares on the VPU — one "search command" per tile.
+
+Tile size defaults to 4096 bytes = the paper's per-command search coverage.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 4096  # bytes per command (paper: "each search covering upto 4KB")
+
+
+def _make_kernel(pattern_len: int, tile: int):
+    def kernel(text_ref, halo_ref, pattern_ref, out_ref):
+        # (1, tile) current tile, (1, tile) next tile, (1, P_pad) pattern.
+        window = jnp.concatenate([text_ref[...], halo_ref[...]], axis=1)
+        window = window.astype(jnp.int32)
+        acc = jnp.ones((1, tile), bool)
+        for k in range(pattern_len):  # static unroll: P vector compares
+            acc = acc & (window[:, k:k + tile] == pattern_ref[0, k].astype(jnp.int32))
+        out_ref[...] = acc.astype(jnp.int8)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("pattern_len", "tile", "interpret"))
+def string_match_pallas(text: jnp.ndarray, pattern: jnp.ndarray, *,
+                        pattern_len: int, tile: int = TILE,
+                        interpret: bool = True) -> jnp.ndarray:
+    """text: (N,) uint8, pattern: (P,) uint8 (P == pattern_len <= tile).
+    Returns (N,) int8 match-start flags."""
+    n = text.shape[0]
+    assert pattern_len <= tile
+    n_tiles = (n + tile - 1) // tile
+    padded = (n_tiles + 1) * tile  # one extra tile: halo for the last tile
+    text_p = jnp.zeros((1, padded), jnp.uint8).at[0, :n].set(text)
+    p_pad = max(_round_up(pattern_len, 128), 128)
+    pat_p = jnp.zeros((1, p_pad), jnp.uint8).at[0, :pattern_len].set(pattern)
+
+    out = pl.pallas_call(
+        _make_kernel(pattern_len, tile),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i + 1)),
+            pl.BlockSpec((1, p_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_tiles * tile), jnp.int8),
+        interpret=interpret,
+    )(text_p, text_p, pat_p)
+    res = out[0, :n]
+    valid = jnp.arange(n) <= (n - pattern_len)
+    return (res.astype(bool) & valid).astype(jnp.int8)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

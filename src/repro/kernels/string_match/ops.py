@@ -1,0 +1,28 @@
+"""Jit'd wrappers for the string-match kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.string_match.kernel import string_match_pallas
+from repro.kernels.string_match.ref import string_match_ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def string_match(text, pattern, *, use_kernel: bool = True,
+                 tile: int = 4096, interpret: bool | None = None):
+    """Exact-match start positions of ``pattern`` in ``text``."""
+    text = jnp.asarray(text, jnp.uint8)
+    pattern = jnp.asarray(pattern, jnp.uint8)
+    if not use_kernel:
+        return string_match_ref(text, pattern)
+    if interpret is None:
+        interpret = not _ON_TPU
+    return string_match_pallas(
+        text, pattern, pattern_len=int(pattern.shape[0]), tile=tile,
+        interpret=interpret)
+
+
+def count_matches(text, pattern, **kw) -> jnp.ndarray:
+    return jnp.sum(string_match(text, pattern, **kw).astype(jnp.int32))

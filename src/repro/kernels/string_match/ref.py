@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for sliding-window exact string match.
+
+match[i] = 1 iff text[i : i+P] == pattern, for i in [0, N-P].
+Positions i > N-P are 0 by definition.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def string_match_ref(text: jnp.ndarray, pattern: jnp.ndarray) -> jnp.ndarray:
+    text = text.astype(jnp.int32)
+    pattern = pattern.astype(jnp.int32)
+    n, p = text.shape[0], pattern.shape[0]
+    if p > n:
+        return jnp.zeros((n,), jnp.int8)
+    acc = jnp.ones((n,), bool)
+    for k in range(p):
+        shifted = jnp.roll(text, -k)
+        acc = acc & (shifted == pattern[k])
+    valid = jnp.arange(n) <= (n - p)
+    return (acc & valid).astype(jnp.int8)

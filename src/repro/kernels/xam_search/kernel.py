@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the XAM CAM search — the paper's core primitive
+re-thought for the MXU.
+
+Hardware mapping (DESIGN.md §2b): the XAM crossbar answers a search by
+summing per-cell XNOR currents down each column and sensing against Ref_S.
+On TPU the same inner product is a systolic matmul: encode stored bits and
+key bits as ±1, zero out masked key rows, then
+
+    score[q, c] = sum_r K[q, r] * D[r, c]
+                = (#matching unmasked bits) - (#mismatching unmasked bits)
+
+so a column matches  iff  score == n_selected[q]  (the integer Ref_S).
+One kernel invocation searches a whole superset tile: a (block_q x R) key
+block is broadcast against (R x block_c) stored columns entirely in VMEM —
+the same "one key vs 512 columns per command" granularity as the paper.
+
+Block shapes are MXU-aligned: block_q multiple of 8 (sublanes), block_c a
+multiple of 128 (lanes); R (key bits, 64 for a Monarch set) rides in one
+block — 64..512 bit keys fit VMEM trivially.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_C = 512
+
+
+def _xam_search_kernel(keys_ref, data_ref, masks_ref, out_ref):
+    """keys/masks: (bq, R) int8; data: (R, bc) int8; out: (bq, bc) int8."""
+    keys = keys_ref[...].astype(jnp.float32)
+    masks = masks_ref[...].astype(jnp.float32)
+    data = data_ref[...].astype(jnp.float32)
+
+    # ±1 encoding; masked-out key rows contribute 0 current.
+    k_enc = (2.0 * keys - 1.0) * masks          # (bq, R)
+    d_enc = 2.0 * data - 1.0                    # (R, bc)
+    n_sel = jnp.sum(masks, axis=1, keepdims=True)  # (bq, 1) — integer Ref_S
+
+    score = jax.lax.dot_general(
+        k_enc, d_enc,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (bq, bc) on the MXU
+    # All-match  <=>  score == n_sel  (sense amp threshold).  0.5 guard band
+    # = half the two-unit gap to a single-mismatch column (analog margin).
+    out_ref[...] = (score >= n_sel - 0.5).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_c", "interpret"))
+def xam_search_pallas(
+    keys: jnp.ndarray,
+    data: jnp.ndarray,
+    masks: jnp.ndarray,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched masked CAM search.  keys/masks (Q, R), data (R, C) ->
+    match bitmap (Q, C) int8.  Q and C are padded to block multiples here;
+    callers see exact shapes."""
+    q, r = keys.shape
+    r2, c = data.shape
+    assert r == r2 and masks.shape == keys.shape
+
+    bq = min(block_q, _round_up(q, 8))
+    bc = min(block_c, _round_up(c, 128))
+    qp, cp = _round_up(q, bq), _round_up(c, bc)
+
+    keys_p = jnp.zeros((qp, r), jnp.int8).at[:q].set(keys.astype(jnp.int8))
+    # Padded queries: mask all-zero -> they match everything; sliced off.
+    masks_p = jnp.zeros((qp, r), jnp.int8).at[:q].set(masks.astype(jnp.int8))
+    # Padded columns: stored bits 0; harmless, sliced off.
+    data_p = jnp.zeros((r, cp), jnp.int8).at[:, :c].set(data.astype(jnp.int8))
+
+    out = pl.pallas_call(
+        _xam_search_kernel,
+        grid=(qp // bq, cp // bc),
+        in_specs=[
+            pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.int8),
+        interpret=interpret,
+    )(keys_p, data_p, masks_p)
+    return out[:q, :c]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the XAM search kernel.
+
+``interpret`` defaults to True on CPU (this rig) and should be False on real
+TPUs; the flag is threaded, never hard-coded in callers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xam_search.kernel import xam_search_pallas
+from repro.kernels.xam_search.ref import xam_search_ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def xam_search(keys, data, masks=None, *, use_kernel: bool = True,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Masked CAM search: (Q,R) keys x (R,C) stored bits -> (Q,C) matches."""
+    keys = jnp.asarray(keys, jnp.int8)
+    data = jnp.asarray(data, jnp.int8)
+    if masks is None:
+        masks = jnp.ones_like(keys)
+    masks = jnp.asarray(masks, jnp.int8)
+    if not use_kernel:
+        return xam_search_ref(keys, data, masks)
+    if interpret is None:
+        interpret = not _ON_TPU
+    return xam_search_pallas(keys, data, masks, interpret=interpret)
+
+
+def xam_match_index(keys, data, masks=None, **kw) -> jnp.ndarray:
+    """First matching column per query; -1 = NULL match register."""
+    m = xam_search(keys, data, masks, **kw)
+    any_m = jnp.any(m == 1, axis=1)
+    return jnp.where(any_m, jnp.argmax(m, axis=1), -1).astype(jnp.int32)
+
+
+def words_to_bits(words: jnp.ndarray, n_bits: int = 32) -> jnp.ndarray:
+    """(...,) uint words -> (..., n_bits) int8 bit planes (LSB first).
+    ``n_bits`` must not exceed the word dtype's width."""
+    words = jnp.asarray(words)
+    assert n_bits <= jnp.iinfo(words.dtype).bits, "n_bits exceeds word width"
+    shifts = jnp.arange(n_bits, dtype=words.dtype)
+    return ((words[..., None] >> shifts) & 1).astype(jnp.int8)
+
+
+def bits_to_words(bits: jnp.ndarray) -> jnp.ndarray:
+    n_bits = bits.shape[-1]
+    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) << shifts, axis=-1)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the XAM CAM search.
+
+Semantics (paper §4.2.2): a stored column matches a (key, mask) pair iff
+every *unmasked* key bit equals the stored bit in that row of the column.
+
+    match[q, c] = AND_r ( mask[q, r] == 0  OR  key[q, r] == data[r, c] )
+
+Shapes:
+    keys  : (Q, R)   int8 bits in {0, 1}
+    data  : (R, C)   int8 bits in {0, 1}   (one logical XAM set plane)
+    masks : (Q, R)   int8 bits in {0, 1};  1 = bit participates
+Returns:
+    match : (Q, C)   int8 in {0, 1}
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def xam_search_ref(keys: jnp.ndarray, data: jnp.ndarray,
+                   masks: jnp.ndarray) -> jnp.ndarray:
+    keys = keys.astype(jnp.int8)
+    data = data.astype(jnp.int8)
+    masks = masks.astype(jnp.int8)
+    # (Q, R, C): bit equality or masked-out.
+    eq = (keys[:, :, None] == data[None, :, :]) | (masks[:, :, None] == 0)
+    return jnp.all(eq, axis=1).astype(jnp.int8)
+
+
+def xam_match_index_ref(keys, data, masks) -> jnp.ndarray:
+    """First matching column per query, -1 when none (match register)."""
+    m = xam_search_ref(keys, data, masks)
+    any_m = jnp.any(m == 1, axis=1)
+    return jnp.where(any_m, jnp.argmax(m, axis=1), -1).astype(jnp.int32)

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct input factories for every (arch x shape) cell.
+
+No device allocation happens here — these are the stand-ins fed to
+``jax.jit(...).lower()`` in the dry-run, and the shape contract used by the
+data pipeline.  Modality frontends are STUBS per the assignment:
+``[vlm]``/``[audio]`` cells receive precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer
+
+SDS = jax.ShapeDtypeStruct
+BF16 = jnp.bfloat16
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        p = cfg.n_prefix_embeds
+        return {
+            "embeds": SDS((b, p, cfg.d_model), BF16),
+            "tokens": SDS((b, s - p), jnp.int32),
+            "labels": SDS((b, s - p), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "embeds": SDS((b, s, cfg.d_model), BF16),
+            "labels": SDS((b, s), jnp.int32),
+        }
+    return {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    spec = train_batch_specs(cfg, shape)
+    spec.pop("labels", None)
+    return spec
+
+
+def decode_arg_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(cache, tokens, pos) ShapeDtypeStructs for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, s))
+    tokens = SDS((b, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos
+
+
+def params_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def state_shapes(cfg: ArchConfig):
+    from repro.train import step as train_step_mod
+    return jax.eval_shape(
+        lambda: train_step_mod.init_state(jax.random.PRNGKey(0), cfg))
+
+
+def bf16_params_shapes(cfg: ArchConfig):
+    p = params_shapes(cfg)
+    return jax.tree.map(lambda s: SDS(s.shape, BF16 if s.dtype == jnp.bfloat16
+                                      or s.dtype == jnp.float32 else s.dtype), p)

@@ -1,0 +1,179 @@
+"""Mixture-of-Experts block: group-local top-k dispatch (GShard-style).
+
+Tokens are dispatched WITHIN their group (group = one sequence's tokens),
+so the sort/rank machinery never crosses a data-parallel shard — no
+collectives are induced by dispatch; experts are sharded over the `model`
+mesh axis (expert parallelism) so each device computes its resident experts
+on the (group, expert, capacity) batch that lands there.
+
+Dispatch algorithm (static shapes, TPU-friendly, autodiff-safe):
+  1. router logits -> softmax -> top-k (expert ids + gate weights)
+  2. per group: stable-argsort the (token*k) expert ids
+  3. rank-in-expert = position - first-position-of-that-expert
+  4. entries with rank >= capacity are dropped (scattered to a trash slot)
+  5. gather tokens into (G, E, C, D), batched expert FFN, weighted
+     scatter-add back.
+
+Arctic-style ``dense_residual`` adds a normal MLP in parallel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+def init_moe(key, cfg: ArchConfig):
+    k = layers.split_keys(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": layers.dense_init(k[0], (d, e), scale=0.02),
+        "w_up": layers.dense_init(k[1], (e, d, f)),
+        "w_gate": layers.dense_init(k[2], (e, d, f)),
+        "w_down": layers.dense_init(k[3], (e, f, d)),
+    }
+    if cfg.dense_residual:
+        p["dense"] = layers.init_mlp(k[4], cfg)
+    return p
+
+
+def capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(c, 1)
+
+
+def moe_block(params, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (B, S, D).  Groups = sequences (B groups of S).
+
+    Two dispatch paths (cfg.moe_dispatch):
+    * "gather"  — argsort + take_along_axis/scatter-add (the original);
+      integer gathers partition badly under GSPMD (involuntary full
+      rematerialization: the token batch is replicated across the expert
+      axis), which makes large-expert configs collective-bound.
+    * "einsum"  — GShard-style one-hot dispatch/combine matmuls; GSPMD
+      partitions them as all-to-alls (beyond-paper §Perf optimization;
+      costs ~N*EC*D extra MXU flops, wins back ~40x collective bytes).
+    """
+    if getattr(cfg, "moe_dispatch", "gather") == "einsum":
+        return _moe_block_einsum(params, x, cfg)
+    return _moe_block_gather(params, x, cfg)
+
+
+def _moe_block_einsum(params, x, cfg: ArchConfig):
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+
+    logits = jnp.einsum("gnd,de->gne", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_ix = jax.lax.top_k(probs, k)               # (G, N, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Position-in-expert via cumsums (GShard §3.2): entries of earlier
+    # tokens (any k-slot) rank first, then earlier k-slots of this token.
+    eo = jax.nn.one_hot(expert_ix, e, dtype=jnp.float32)      # (G, N, K, E)
+    tok_e = eo.sum(axis=2)                                    # (G, N, E)
+    excl_n = jnp.cumsum(tok_e, axis=1) - tok_e                # before token n
+    within = jnp.cumsum(eo, axis=2) - eo                      # earlier k-slots
+    pos = excl_n[:, :, None, :] + within                      # (G, N, K, E)
+    pos_in_e = jnp.sum(pos * eo, axis=-1)                     # (G, N, K)
+    keep = pos_in_e < c
+    gate_w = gate_w * keep.astype(gate_w.dtype)
+
+    slot = jax.nn.one_hot(jnp.where(keep, pos_in_e, c), c,
+                          dtype=jnp.float32)                  # (G, N, K, C)
+    # combine[g,n,e,c] = sum_k gate * onehot_e * onehot_c
+    combine = jnp.einsum("gnk,gnke,gnkc->gnec", gate_w.astype(jnp.float32),
+                         eo, slot)
+    dispatch = (combine > 0).astype(x.dtype)                  # (G, N, E, C)
+
+    xe = jnp.einsum("gnd,gnec->gecd", x, dispatch)            # all-to-all-able
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    h = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    y = jnp.einsum("gecd,gnec->gnd", out_e, combine.astype(out_e.dtype))
+    y = y.astype(x.dtype)
+    if cfg.dense_residual:
+        y = y + layers.mlp_block(params["dense"], x, cfg)
+    return y
+
+
+def _moe_block_gather(params, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (B, S, D).  Groups = sequences (B groups of S)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, s)
+    xg = x  # (G=b, N=s, D)
+
+    # 1. Routing (fp32 for numerics).
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_ix = jax.lax.top_k(probs, k)               # (G, N, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # 2-4. Group-local rank-in-expert with capacity C.
+    flat_e = expert_ix.reshape(b, s * k)                      # (G, NK)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)         # (G, NK)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # first position of each expert in the sorted list, per group.
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(sorted_e)
+    rank = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        first, sorted_e, axis=-1)                             # (G, NK)
+    keep = rank < c
+    dest = jnp.where(keep, sorted_e * c + rank, e * c)        # trash slot e*c
+
+    # token index (0..N-1) of each sorted entry.
+    tok_of_entry = order // k                                  # (G, NK)
+    w_of_entry = jnp.take_along_axis(
+        gate_w.reshape(b, s * k), order, axis=-1)
+
+    # 5. Gather into (G, E*C+1) slots.
+    slot_tok = jnp.full((b, e * c + 1), 0, jnp.int32)
+    slot_tok = jax.vmap(lambda st, de, te: st.at[de].set(te))(
+        slot_tok, dest, tok_of_entry.astype(jnp.int32))
+    slot_w = jnp.zeros((b, e * c + 1), gate_w.dtype)
+    slot_w = jax.vmap(lambda sw, de, we: sw.at[de].set(we))(
+        slot_w, dest, jnp.where(keep, w_of_entry, 0.0))
+    slot_tok = slot_tok[:, : e * c].reshape(b, e, c)
+    slot_w = slot_w[:, : e * c].reshape(b, e, c)
+
+    xe = jnp.take_along_axis(
+        xg[:, :, None, :].reshape(b, s, d)[:, :, :],           # (G, N, D)
+        slot_tok.reshape(b, e * c)[:, :, None], axis=1,
+    ).reshape(b, e, c, d)
+
+    # Batched expert FFN; experts sharded over `model`.
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    h = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+
+    # Weighted scatter-add back to tokens.
+    out_e = out_e * slot_w[..., None].astype(out_e.dtype)
+    flat_out = out_e.reshape(b, e * c, d)
+    flat_tok = slot_tok.reshape(b, e * c)
+    y = jnp.zeros((b, s, d), out_e.dtype)
+    y = jax.vmap(lambda yy, ti, oo: yy.at[ti].add(oo))(y, flat_tok, flat_out)
+    y = y.astype(x.dtype)
+
+    if cfg.dense_residual:
+        y = y + layers.mlp_block(params["dense"], x, cfg)
+    return y
+
+
+def aux_load_balance_loss(params, x, cfg: ArchConfig):
+    """Switch-style load-balance auxiliary (fraction * probability)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * imp)

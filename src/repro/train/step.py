@@ -1,0 +1,82 @@
+"""Train-step construction: bf16 compute / fp32 master, grad accumulation,
+donated state, pjit shardings.
+
+``TrainState`` = {"params": fp32 master tree, "opt": {m, v, step}}.
+The compute graph casts masters to bf16 (one fused cast per weight — XLA
+keeps it alongside the FSDP all-gather), takes grads w.r.t. the masters.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import sharding
+from repro.models import transformer
+from repro.train import optimizer as opt
+
+BF16 = jnp.bfloat16
+
+
+def cast_bf16(params):
+    return jax.tree.map(
+        lambda p: p.astype(BF16) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+        params)
+
+
+def init_state(key, cfg: ArchConfig):
+    params = transformer.init_params(key, cfg)
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {"params": params, "opt": opt.init_opt_state(params)}
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt.OptConfig = opt.OptConfig(),
+                    microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params_fp32, batch):
+        return transformer.train_loss(cast_bf16(params_fp32), cfg, batch)
+
+    def train_step(state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                loss, g = jax.value_and_grad(loss_fn)(state["params"], mbatch)
+                return (carry[0] + loss,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  state["params"])
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros(()), zero_g), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+
+        new_params, new_opt, metrics = opt.adamw_update(
+            ocfg, state["params"], state["opt"], grads)
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def state_specs(state_shapes, mesh):
+    """PartitionSpec tree for a TrainState (masters + moments share the
+    param rules; step scalar replicated)."""
+    p_specs = sharding.param_specs(state_shapes["params"], mesh)
+    return {
+        "params": p_specs,
+        "opt": {
+            "m": p_specs,
+            "v": p_specs,
+            "step": jax.sharding.PartitionSpec(),
+        },
+    }

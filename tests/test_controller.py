@@ -1,0 +1,193 @@
+"""Vault-controller semantics (paper §6.2/§7): mode toggling command
+counts, lazy key/mask push, fresh-match-register reuse, cache-mode engine,
+and the Fig. 6 user-space API flow."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import controller as ctl
+from repro.core.api import MonarchDevice
+
+
+def _bits(word: int, n: int = 64) -> jnp.ndarray:
+    return jnp.asarray([(word >> i) & 1 for i in range(n)], jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# flat-CAM controller.
+# ---------------------------------------------------------------------------
+
+def test_initial_mode_is_ram_rowin():
+    st = ctl.init_flat_cam()
+    assert int(st.bank_mode) == ctl.RAM
+    assert int(st.datapath) == ctl.ROW_IN
+
+
+def test_cam_write_toggles_modes_once():
+    st = ctl.init_flat_cam()
+    st, c = ctl.cam_data_write(st, jnp.asarray(0), jnp.asarray(3), _bits(0xAB))
+    # from RAM/RowIn we need 1 prepare (RAM->CAM) + 1 activate (RowIn->ColIn)
+    assert int(c.prepares) == 1 and int(c.activates) == 1
+    assert int(c.writes) == 1
+    # a second write needs no further toggling
+    st, c2 = ctl.cam_data_write(st, jnp.asarray(0), jnp.asarray(4), _bits(0xCD))
+    assert int(c2.prepares) == 0 and int(c2.activates) == 0
+
+
+def test_key_mask_write_row_parity():
+    """RowIn CAM: even row address -> key register, odd -> mask (§6.2)."""
+    st = ctl.init_flat_cam()
+    st, _ = ctl.key_mask_write(st, jnp.asarray(2), _bits(0x1234))
+    np.testing.assert_array_equal(np.asarray(st.key_reg),
+                                  np.asarray(_bits(0x1234)))
+    st, _ = ctl.key_mask_write(st, jnp.asarray(3), _bits(0xFF))
+    np.testing.assert_array_equal(np.asarray(st.mask_reg),
+                                  np.asarray(_bits(0xFF)))
+    # key survived the mask write
+    np.testing.assert_array_equal(np.asarray(st.key_reg),
+                                  np.asarray(_bits(0x1234)))
+
+
+def test_search_lazy_km_push_and_fresh_reuse():
+    st = ctl.init_flat_cam(n_sets=2)
+    st, _ = ctl.cam_data_write(st, jnp.asarray(0), jnp.asarray(7), _bits(0x77))
+    st, _ = ctl.key_mask_write(st, jnp.asarray(0), _bits(0x77))
+    st, _ = ctl.key_mask_write(st, jnp.asarray(1), _bits((1 << 64) - 1))
+
+    st, idx, c = ctl.search_read(st, jnp.asarray(0))
+    assert int(idx) == 7
+    assert int(c.searches) == 1
+    assert int(c.writes) == 1          # key/mask pushed down once
+    # fresh result: NO new search, NO new km push
+    st, idx2, c2 = ctl.search_read(st, jnp.asarray(0))
+    assert int(idx2) == 7
+    assert int(c2.searches) == 0 and int(c2.writes) == 0
+
+
+def test_search_no_match_is_null():
+    st = ctl.init_flat_cam(n_sets=1)
+    st, _ = ctl.key_mask_write(st, jnp.asarray(0), _bits(0xDEAD))
+    st, idx, _ = ctl.search_read(st, jnp.asarray(0))
+    assert int(idx) == -1              # match register resets to NULL
+
+
+def test_data_write_invalidates_match_register():
+    st = ctl.init_flat_cam(n_sets=1)
+    st, _ = ctl.cam_data_write(st, jnp.asarray(0), jnp.asarray(3), _bits(5))
+    st, _ = ctl.key_mask_write(st, jnp.asarray(0), _bits(5))
+    st, idx, _ = ctl.search_read(st, jnp.asarray(0))
+    assert int(idx) == 3
+    st, _ = ctl.cam_data_write(st, jnp.asarray(0), jnp.asarray(3), _bits(6))
+    st, idx2, c = ctl.search_read(st, jnp.asarray(0))
+    assert int(c.searches) == 1        # stale -> re-search
+    assert int(idx2) == -1
+
+
+# ---------------------------------------------------------------------------
+# Cache-mode engine.
+# ---------------------------------------------------------------------------
+
+def test_cache_lookup_hit_miss():
+    st = ctl.init_cache(n_sets=4, ways=8)
+    hit, _ = ctl.cache_lookup(st, jnp.asarray(1), jnp.asarray(42))
+    assert not bool(hit)
+    st, ev, way = ctl.cache_install(st, jnp.asarray(1), jnp.asarray(42),
+                                    jnp.asarray(False))
+    assert not bool(ev)
+    hit, w = ctl.cache_lookup(st, jnp.asarray(1), jnp.asarray(42))
+    assert bool(hit) and int(w) == int(way)
+    # same tag in a different set is a miss
+    hit2, _ = ctl.cache_lookup(st, jnp.asarray(0), jnp.asarray(42))
+    assert not bool(hit2)
+
+
+def test_cache_install_prefers_invalid_then_clean():
+    st = ctl.init_cache(n_sets=1, ways=4)
+    s = jnp.asarray(0)
+    for t in range(4):
+        st, ev, _ = ctl.cache_install(st, s, jnp.asarray(t + 1),
+                                      jnp.asarray(t < 2))  # tags 1,2 dirty
+        assert not bool(ev)            # invalid ways available -> no eviction
+    # set full: 1,2 dirty; 3,4 clean -> a clean way must be chosen
+    st, ev, way = ctl.cache_install(st, s, jnp.asarray(99), jnp.asarray(False))
+    assert not bool(ev)
+    assert int(st.dirty[0, way]) == 0 or int(st.tags[0, way]) == 99
+    # make everything dirty, then install -> dirty eviction reported
+    st2 = ctl.CacheState(tags=st.tags, valid=st.valid,
+                         dirty=jnp.ones_like(st.dirty), counter=st.counter)
+    st2, ev2, _ = ctl.cache_install(st2, s, jnp.asarray(100),
+                                    jnp.asarray(True))
+    assert bool(ev2)
+
+
+def test_cache_counter_advances():
+    st = ctl.init_cache(n_sets=1, ways=4)
+    c0 = int(st.counter)
+    st, _, _ = ctl.cache_install(st, jnp.asarray(0), jnp.asarray(5),
+                                 jnp.asarray(False))
+    assert int(st.counter) == c0 + 1   # free-running counter (§8)
+
+
+def test_cache_invalidate_sets_counts_dirty():
+    st = ctl.init_cache(n_sets=2, ways=4)
+    for t in range(3):
+        st, _, _ = ctl.cache_install(st, jnp.asarray(0), jnp.asarray(t + 1),
+                                     jnp.asarray(True))
+    st, _, _ = ctl.cache_install(st, jnp.asarray(1), jnp.asarray(9),
+                                 jnp.asarray(False))
+    mask = jnp.asarray([True, True])
+    st2, flushed = ctl.cache_invalidate_sets(st, mask)
+    assert int(flushed) == 3
+    assert int(jnp.sum(st2.valid)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 user-space API (MonarchDevice).
+# ---------------------------------------------------------------------------
+
+def test_fig6_kv_store_flow():
+    dev = MonarchDevice(n_sets=2, key_bits=64, set_cols=8)
+    keys = dev.flat_cam_malloc(8)
+    data = dev.flat_ram_malloc(8)
+    for i, (k, v) in enumerate([(0xAAA, 111), (0xBBB, 222), (0xCCC, 333)]):
+        dev.cam_write(keys, i, k)
+        dev.ram_write(data, i, v)
+    assert dev.kv_lookup(keys, data, 0xBBB) == 222
+    assert dev.kv_lookup(keys, data, 0xDDD) is None
+
+
+def test_fig6_masked_partial_search():
+    """Setting the mask to a byte selects matches on that byte only
+    (paper: mask 0x0FF00 searches the second byte)."""
+    dev = MonarchDevice(n_sets=1, key_bits=64, set_cols=8)
+    keys = dev.flat_cam_malloc(8)
+    data = dev.flat_ram_malloc(8)
+    dev.cam_write(keys, 0, 0x12_34)
+    dev.ram_write(data, 0, 999)
+    # full-key lookup with wrong low byte misses...
+    assert dev.kv_lookup(keys, data, 0x12_99) is None
+    # ...but masking to the second byte hits
+    assert dev.kv_lookup(keys, data, 0x12_00, mask=0xFF00) == 999
+
+
+def test_api_search_elision_visible_in_command_log():
+    dev = MonarchDevice(n_sets=1, key_bits=64, set_cols=8)
+    keys = dev.flat_cam_malloc(8)
+    dev.cam_write(keys, 2, 0x42)
+    dev.write_key(0x42)
+    m1 = dev.read_match(keys)
+    searches_1 = sum(1 for c in dev.command_log if c.startswith("S "))
+    m2 = dev.read_match(keys)          # fresh -> elided
+    searches_2 = sum(1 for c in dev.command_log if c.startswith("S "))
+    assert m1 == m2 == 2
+    assert searches_1 == searches_2 == 1
+
+
+def test_api_malloc_exhaustion():
+    dev = MonarchDevice(n_sets=1, key_bits=64, set_cols=8)
+    dev.flat_cam_malloc(8)
+    with pytest.raises(MemoryError):
+        dev.flat_cam_malloc(1)

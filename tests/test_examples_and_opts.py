@@ -1,0 +1,157 @@
+"""Examples run end-to-end (smoke) + §Perf knob regression tests."""
+from __future__ import annotations
+
+import dataclasses
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.dist import sharding
+from repro.models import moe, transformer
+from repro.launch.mesh import make_host_mesh
+from repro.train import step as train_step_mod
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run_example(name, *args, timeout=420):
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", name), *args],
+        env=ENV, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+def test_quickstart_example():
+    out = _run_example("quickstart.py")
+    assert "search found column 137" in out
+    assert "kv_lookup(0xBEEF) -> 202" in out
+    assert "kv_lookup(0xDEAD) -> None" in out
+
+
+def test_string_search_example():
+    out = _run_example("string_search.py", "--mib", "0.25")
+    assert "matches: " in out and "fewer memory commands" in out
+
+
+def test_train_lm_example_loss_down(tmp_path):
+    out = _run_example("train_lm.py", "--steps", "6", "--batch", "2",
+                       "--seq", "64", "--ckpt-dir", str(tmp_path),
+                       "--ckpt-every", "3")
+    assert "DOWN" in out
+    assert "published" in out
+
+
+@pytest.mark.slow
+def test_kv_store_example():
+    out = _run_example("kv_store.py")
+    assert "lookup" in out and "searches=" in out
+
+
+@pytest.mark.slow
+def test_serve_prefix_cache_example():
+    out = _run_example("serve_prefix_cache.py", "--requests", "6",
+                       "--decode-tokens", "2")
+    assert "chunk hit rate" in out
+
+
+# ---------------------------------------------------------------------------
+# §Perf knob regressions.
+# ---------------------------------------------------------------------------
+
+def test_moe_einsum_dispatch_matches_gather(rng):
+    cfg = configs.get_arch("qwen3-moe-30b-a3b").reduced()
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.5, jnp.float32)
+    for cf in (1.25, float(cfg.n_experts)):
+        c = dataclasses.replace(cfg, capacity_factor=cf)
+        y_g = moe._moe_block_gather(params, x, c)
+        y_e = moe._moe_block_einsum(params, x, c)
+        np.testing.assert_allclose(np.asarray(y_g, np.float32),
+                                   np.asarray(y_e, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_moe_dispatch_flag_routes():
+    cfg = dataclasses.replace(configs.get_arch("qwen3-moe-30b-a3b").reduced(),
+                              moe_dispatch="einsum")
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((1, 8, cfg.d_model), jnp.bfloat16)
+    y = moe.moe_block(params, x, cfg)      # must take the einsum path
+    assert y.shape == x.shape
+
+
+def test_seq_shard_train_step_still_correct(rng):
+    """attn_seq_shard is numerics-neutral: same loss with and without."""
+    mesh = make_host_mesh()
+    cfg = configs.get_arch("yi-9b").reduced()
+    cfg_ss = dataclasses.replace(cfg, attn_seq_shard=("data",))
+    batch = {
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)),
+                              jnp.int32),
+    }
+    with mesh:
+        s1 = train_step_mod.init_state(jax.random.PRNGKey(0), cfg)
+        s2 = train_step_mod.init_state(jax.random.PRNGKey(0), cfg_ss)
+        _, m1 = jax.jit(train_step_mod.make_train_step(cfg))(s1, batch)
+        _, m2 = jax.jit(train_step_mod.make_train_step(cfg_ss))(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+
+
+def test_cache_specs_seq_shard_layout():
+    cfg = configs.get_arch("yi-9b").reduced()
+    mesh = make_host_mesh()
+    cache = jax.eval_shape(lambda: transformer.init_cache(cfg, 4, 64))
+    specs = sharding.cache_specs(cache, mesh, seq_shard=True)
+    # find a k leaf: S dim (index off+1) must be model-sharded when divisible
+    for path, s in jax.tree_util.tree_leaves_with_path(specs):
+        keys = [getattr(p, "key", "") for p in path]
+        if keys[-1] == "k":
+            off = 1 if "groups" in keys else 0
+            # model axis size 1 on host mesh -> guard may drop; structure ok
+            assert len(s) >= off + 2
+            break
+    else:
+        pytest.fail("no k leaf found")
+
+
+def test_param_specs_two_d_mlp_rules():
+    cfg = configs.get_arch("yi-9b")
+    from repro.launch import specs as lspecs
+    shapes = lspecs.params_shapes(cfg)
+    mesh = make_host_mesh()
+    specs = sharding.param_specs(shapes, mesh, two_d_mlp=True)
+    found = 0
+    for path, s in jax.tree_util.tree_leaves_with_path(specs):
+        keys = [getattr(p, "key", "") for p in path]
+        if keys[-1] in ("w_up", "w_gate", "w_down"):
+            found += 1
+            assert isinstance(s, P)
+    assert found >= 3
+
+
+def test_dryrun_build_cell_on_host_mesh():
+    """build_cell lowers (abstractly) for a reduced arch on the host mesh —
+    exercises the full spec-plumbing path without 512 devices."""
+    from repro.launch import dryrun as dr
+    mesh = make_host_mesh()
+    cfg = configs.get_arch("gemma3-27b").reduced()
+    shape = dataclasses.replace(configs.get_shape("train_4k"),
+                                seq_len=64, global_batch=2)
+    fn, arg_shapes, in_sh, out_sh, donate = dr.build_cell(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*arg_shapes)
+    assert lowered is not None

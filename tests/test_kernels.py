@@ -1,0 +1,228 @@
+"""Per-kernel allclose tests: Pallas kernels (interpret mode) vs the
+pure-jnp ref.py oracles, swept over shapes/dtypes, plus hypothesis
+property tests on the search semantics."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels.xam_search import ops as xam_ops
+from repro.kernels.xam_search.ref import xam_search_ref, xam_match_index_ref
+from repro.kernels.hopscotch import ops as hop_ops
+from repro.kernels.hopscotch.ref import hopscotch_lookup_ref
+from repro.kernels.string_match import ops as sm_ops
+from repro.kernels.string_match.ref import string_match_ref
+
+
+# ---------------------------------------------------------------------------
+# xam_search
+# ---------------------------------------------------------------------------
+
+XAM_SHAPES = [
+    (1, 8, 8),          # tiny
+    (3, 64, 512),       # one Monarch set (odd Q: padding path)
+    (8, 64, 512),
+    (128, 64, 512),     # one full query block
+    (130, 64, 513),     # both dims ragged vs block
+    (16, 32, 100),      # narrow key, ragged columns
+    (5, 512, 64),       # tall keys
+]
+
+
+@pytest.mark.parametrize("q,r,c", XAM_SHAPES)
+def test_xam_search_matches_ref(q, r, c, rng):
+    keys = rng.integers(0, 2, (q, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    masks = rng.integers(0, 2, (q, r)).astype(np.int8)
+    got = xam_ops.xam_search(keys, data, masks, use_kernel=True)
+    want = xam_search_ref(jnp.asarray(keys), jnp.asarray(data),
+                          jnp.asarray(masks))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xam_search_planted_matches(rng):
+    """Columns explicitly equal to the key must match; single-bit
+    corruptions must not."""
+    r, c = 64, 512
+    key = rng.integers(0, 2, (1, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    data[:, 7] = key[0]
+    data[:, 200] = key[0]
+    data[:, 201] = key[0]
+    data[17, 201] ^= 1  # one-bit mismatch
+    out = np.asarray(xam_ops.xam_search(key, data))
+    assert out[0, 7] == 1 and out[0, 200] == 1
+    assert out[0, 201] == 0
+
+
+def test_xam_search_mask_widens_matches(rng):
+    """Masking out a bit can only ADD matches, never remove them."""
+    r, c = 32, 128
+    key = rng.integers(0, 2, (1, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    full = np.asarray(xam_ops.xam_search(key, data))
+    mask = np.ones((1, r), np.int8)
+    mask[0, :16] = 0
+    partial = np.asarray(xam_ops.xam_search(key, data, mask))
+    assert (partial >= full).all()
+
+
+def test_xam_all_masked_matches_everything(rng):
+    key = rng.integers(0, 2, (2, 16)).astype(np.int8)
+    data = rng.integers(0, 2, (16, 64)).astype(np.int8)
+    mask = np.zeros((2, 16), np.int8)
+    out = np.asarray(xam_ops.xam_search(key, data, mask))
+    assert (out == 1).all()
+
+
+def test_xam_match_index(rng):
+    r, c = 32, 96
+    keys = rng.integers(0, 2, (4, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    data[:, 50] = keys[2]
+    got = np.asarray(xam_ops.xam_match_index(keys, data))
+    want = np.asarray(xam_match_index_ref(
+        jnp.asarray(keys), jnp.asarray(data), jnp.ones_like(jnp.asarray(keys))))
+    np.testing.assert_array_equal(got, want)
+    assert got[2] == 50 or data[:, got[2]].tolist() == keys[2].tolist()
+
+
+@settings(max_examples=30, deadline=None)
+@given(q=st.integers(1, 9), r=st.integers(1, 48), c=st.integers(1, 140),
+       seed=st.integers(0, 2 ** 31))
+def test_xam_search_property(q, r, c, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 2, (q, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    masks = rng.integers(0, 2, (q, r)).astype(np.int8)
+    got = np.asarray(xam_ops.xam_search(keys, data, masks))
+    want = np.asarray(xam_search_ref(
+        jnp.asarray(keys), jnp.asarray(data), jnp.asarray(masks)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_words_bits_roundtrip(rng):
+    words = rng.integers(0, 2 ** 32, 64, dtype=np.uint32)
+    bits = xam_ops.words_to_bits(jnp.asarray(words), 32)
+    back = xam_ops.bits_to_words(bits)
+    np.testing.assert_array_equal(np.asarray(back), words)
+
+
+# ---------------------------------------------------------------------------
+# hopscotch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [8, 32, 64, 128])
+@pytest.mark.parametrize("n_q", [1, 7, 64])
+def test_hopscotch_matches_ref(window, n_q, rng):
+    n_slots = window * 16
+    t_lo = rng.integers(0, 2 ** 32, n_slots, dtype=np.uint32)
+    t_hi = rng.integers(0, 2 ** 32, n_slots, dtype=np.uint32)
+    homes = rng.integers(0, n_slots - 2 * window, n_q).astype(np.int32)
+    q_lo = rng.integers(0, 2 ** 32, n_q, dtype=np.uint32)
+    q_hi = rng.integers(0, 2 ** 32, n_q, dtype=np.uint32)
+    # plant hits for half the queries at random offsets
+    for i in range(0, n_q, 2):
+        off = int(rng.integers(0, window))
+        q_lo[i] = t_lo[homes[i] + off]
+        q_hi[i] = t_hi[homes[i] + off]
+    got = np.asarray(hop_ops.hopscotch_lookup(
+        t_lo, t_hi, homes, q_lo, q_hi, window=window))
+    want = np.asarray(hopscotch_lookup_ref(
+        jnp.asarray(t_lo), jnp.asarray(t_hi), jnp.asarray(homes),
+        jnp.asarray(q_lo), jnp.asarray(q_hi), window))
+    np.testing.assert_array_equal(got, want)
+    for i in range(0, n_q, 2):  # planted hits found
+        assert got[i] >= 0
+
+
+def test_hopscotch_first_match_wins(rng):
+    window = 16
+    n_slots = window * 8
+    t_lo = np.zeros(n_slots, np.uint32)
+    t_hi = np.zeros(n_slots, np.uint32)
+    home = 5
+    t_lo[home + 3] = 77
+    t_lo[home + 9] = 77   # duplicate later in window
+    got = np.asarray(hop_ops.hopscotch_lookup(
+        t_lo, t_hi, np.asarray([home], np.int32),
+        np.asarray([77], np.uint32), np.asarray([0], np.uint32),
+        window=window))
+    assert got[0] == 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(window=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2 ** 31))
+def test_hopscotch_property(window, seed):
+    rng = np.random.default_rng(seed)
+    n_slots = window * 8
+    t_lo = rng.integers(0, 4, n_slots, dtype=np.uint32)  # dense collisions
+    t_hi = rng.integers(0, 2, n_slots, dtype=np.uint32)
+    n_q = 16
+    homes = rng.integers(0, n_slots - 2 * window, n_q).astype(np.int32)
+    q_lo = rng.integers(0, 4, n_q, dtype=np.uint32)
+    q_hi = rng.integers(0, 2, n_q, dtype=np.uint32)
+    got = np.asarray(hop_ops.hopscotch_lookup(
+        t_lo, t_hi, homes, q_lo, q_hi, window=window))
+    want = np.asarray(hopscotch_lookup_ref(
+        jnp.asarray(t_lo), jnp.asarray(t_hi), jnp.asarray(homes),
+        jnp.asarray(q_lo), jnp.asarray(q_hi), window))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# string_match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,tile", [
+    (100, 3, 64), (4096, 12, 4096), (5000, 12, 1024),
+    (8192, 1, 4096), (300, 300, 512),
+])
+def test_string_match_matches_ref(n, p, tile, rng):
+    text = rng.integers(97, 105, n).astype(np.uint8)   # 8 symbols: collisions
+    start = int(rng.integers(0, n - p + 1))
+    pattern = text[start:start + p].copy()
+    got = np.asarray(sm_ops.string_match(text, pattern, tile=tile))
+    want = np.asarray(string_match_ref(jnp.asarray(text), jnp.asarray(pattern)))
+    np.testing.assert_array_equal(got, want)
+    assert got[start] == 1
+
+
+def test_string_match_vs_python(rng):
+    text = bytes(rng.integers(97, 101, 2000).astype(np.uint8))
+    pattern = b"abc"
+    got = np.asarray(sm_ops.string_match(
+        np.frombuffer(text, np.uint8), np.frombuffer(pattern, np.uint8),
+        tile=256))
+    expect = np.zeros(len(text), np.int8)
+    i = text.find(pattern)
+    while i != -1:
+        expect[i] = 1
+        i = text.find(pattern, i + 1)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_string_match_cross_tile_boundary(rng):
+    """A match straddling a tile boundary must be found (halo logic)."""
+    tile = 256
+    text = np.full(3 * tile, ord("x"), np.uint8)
+    pat = np.frombuffer(b"hello", np.uint8)
+    pos = tile - 2  # straddles the first boundary
+    text[pos:pos + 5] = pat
+    got = np.asarray(sm_ops.string_match(text, pat, tile=tile))
+    assert got[pos] == 1 and got.sum() == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), p=st.integers(1, 20))
+def test_string_match_property(seed, p):
+    rng = np.random.default_rng(seed)
+    n = 512
+    text = rng.integers(0, 3, n).astype(np.uint8)  # tiny alphabet
+    pattern = rng.integers(0, 3, p).astype(np.uint8)
+    got = np.asarray(sm_ops.string_match(text, pattern, tile=128))
+    want = np.asarray(string_match_ref(jnp.asarray(text), jnp.asarray(pattern)))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,216 @@
+"""Trace simulator + application-level tests (hash table, string match,
+KV index) — the paper's §9/§10 substrate."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.data import pipeline, traces
+from repro.apps.hashtable import HopscotchTable
+from repro.apps import stringmatch
+from repro.serve.kv_index import KVIndexConfig, MonarchKVIndex
+
+
+# ---------------------------------------------------------------------------
+# Trace simulator.
+# ---------------------------------------------------------------------------
+
+def _small_cfgs():
+    return simulator.baseline_configs(scale_blocks=1024)
+
+
+def test_simulator_basic_invariants():
+    cfgs = _small_cfgs()
+    spec = traces.crono_nas_specs(cfgs["monarch_unbound"].inpkg_blocks,
+                                  6_000)[0]
+    addrs, wr = traces.generate(spec)
+    for name in ("d_cache", "monarch_unbound"):
+        res = simulator.simulate_trace(cfgs[name], addrs, wr)
+        st = res.stats
+        assert res.total_cycles > 0
+        assert st["l3_hits"] + st["l3_misses"] == len(addrs)
+        assert st["inpkg_hits"] + st["inpkg_misses"] <= st["l3_misses"]
+        assert 0.0 <= res.inpkg_hit_rate <= 1.0
+        assert res.energy_nj > 0
+    # Monarch uses searches for tags; DRAM uses reads
+    rm = simulator.simulate_trace(cfgs["monarch_unbound"], addrs, wr)
+    rd = simulator.simulate_trace(cfgs["d_cache"], addrs, wr)
+    assert rm.stats["inpkg_searches"] > 0
+    assert rd.stats["inpkg_searches"] == 0
+
+
+def test_simulator_ideal_dram_not_slower():
+    """Removing P/A/refresh can only help."""
+    cfgs = _small_cfgs()
+    spec = traces.crono_nas_specs(cfgs["d_cache"].inpkg_blocks, 6_000)[5]
+    addrs, wr = traces.generate(spec)
+    t_real = simulator.simulate_trace(cfgs["d_cache"], addrs, wr).total_cycles
+    t_ideal = simulator.simulate_trace(cfgs["d_cache_ideal"], addrs,
+                                       wr).total_cycles
+    assert t_ideal <= t_real * 1.001
+
+
+def test_simulator_wear_rotation_fires():
+    cfgs = _small_cfgs()
+    cfg = dataclasses.replace(cfgs["monarch_m3"], l3_sets=16, dc_limit=3,
+                              t_mww_cycles=1 << 14, window_budget_blocks=16)
+    spec = traces.crono_nas_specs(cfg.inpkg_blocks, 8_000)[0]
+    addrs, wr = traces.generate(spec)
+    res, st = simulator.simulate_trace(cfg, addrs, wr, return_state=True)
+    assert res.stats["rotates"] > 0
+    assert res.stats["flushed_dirty"] >= res.stats["rotates"]  # DC=3 trigger
+    assert int(np.asarray(st.wear.offsets.rotate_count)) == res.stats["rotates"]
+    # way-level writes recorded
+    assert np.asarray(st.set_way_writes).sum() == res.stats["inpkg_writes"]
+
+
+def test_simulator_m1_locks_more_than_m4():
+    cfgs = _small_cfgs()
+    spec = traces.crono_nas_specs(cfgs["monarch_m1"].inpkg_blocks, 8_000)[0]
+    addrs, wr = traces.generate(spec)
+    res = {}
+    for m in (1, 4):
+        cfg = dataclasses.replace(
+            cfgs[f"monarch_m{m}"], l3_sets=16, dc_limit=512,
+            t_mww_cycles=(1 << 13) * m, window_budget_blocks=16)
+        res[m] = simulator.simulate_trace(cfg, addrs, wr)
+    assert res[1].stats["locked_bypass"] >= res[4].stats["locked_bypass"]
+
+
+def test_trace_signatures():
+    specs = traces.crono_nas_specs(1024, 4_000)
+    assert len(specs) == 11
+    names = {s.name for s in specs}
+    assert names == {"BC", "BFS", "COM", "CON", "DFS", "PR", "SSSP", "TRI",
+                     "FT", "CG", "EP"}
+    ep = next(s for s in specs if s.name == "EP")
+    assert ep.write_frac >= 0.5          # paper: EP is the write-heavy one
+    for s in specs:
+        addrs, wr = traces.generate(s)
+        assert len(addrs) == 4_000
+        assert addrs.max() < s.footprint_blocks
+        assert 0 <= wr.mean() <= s.write_frac + 0.05
+
+
+# ---------------------------------------------------------------------------
+# Hopscotch hash table.
+# ---------------------------------------------------------------------------
+
+def test_hopscotch_insert_lookup_vs_dict(rng):
+    t = HopscotchTable(10, window=16)
+    ref = {}
+    keys = rng.integers(1, 2 ** 60, 600).astype(np.uint64)
+    for i, k in enumerate(keys):
+        t.insert(int(k), i)
+        ref[int(k)] = i
+    vals, hits = t.lookup_monarch(keys)
+    assert hits.all()
+    np.testing.assert_array_equal(vals, [ref[int(k)] for k in keys])
+    # misses
+    miss_keys = rng.integers(2 ** 61, 2 ** 62, 100).astype(np.uint64)
+    _, mhits = t.lookup_monarch(miss_keys)
+    assert not mhits.any()
+
+
+def test_hopscotch_update_existing():
+    t = HopscotchTable(8, window=8)
+    t.insert(42, 1)
+    t.insert(42, 2)
+    vals, hits = t.lookup_monarch(np.asarray([42], np.uint64))
+    assert hits[0] and vals[0] == 2
+
+
+def test_hopscotch_rehash_under_pressure(rng):
+    t = HopscotchTable(6, window=4)   # 64 slots, tiny window -> rehashes
+    keys = rng.integers(1, 2 ** 50, 80).astype(np.uint64)
+    for i, k in enumerate(keys):
+        assert t.insert(int(k), i)
+    assert t.n > 64                    # grew
+    vals, hits = t.lookup_monarch(keys)
+    assert hits.all()
+
+
+def test_hopscotch_window_invariant(rng):
+    """Every stored key sits within its home window (the hopscotch rule —
+    what makes the single-search lookup correct)."""
+    t = HopscotchTable(9, window=8)
+    keys = rng.integers(1, 2 ** 50, 300).astype(np.uint64)
+    for i, k in enumerate(keys):
+        t.insert(int(k), i)
+    occupied = np.nonzero(t.keys != 0)[0]
+    homes = t.home(t.keys[occupied])
+    off = occupied - homes
+    assert (off >= 0).all() and (off < t.window).all()
+
+
+# ---------------------------------------------------------------------------
+# String match app.
+# ---------------------------------------------------------------------------
+
+def test_stringmatch_find(rng):
+    corpus = stringmatch.make_corpus(1 << 14, seed=3)
+    pat = bytes(corpus[500:512])
+    rep = stringmatch.find(corpus, pat)
+    # cross-check with python
+    raw = bytes(corpus)
+    n_py = 0
+    i = raw.find(pat)
+    while i != -1:
+        n_py += 1
+        i = raw.find(pat, i + 1)
+    assert rep.n_matches == n_py
+    assert rep.n_matches >= 1
+
+
+# ---------------------------------------------------------------------------
+# MonarchKVIndex (framework integration of the paper's policies).
+# ---------------------------------------------------------------------------
+
+def test_kv_index_no_allocate_then_admit(rng):
+    idx = MonarchKVIndex(KVIndexConfig(n_sets=4, admit_after_reads=1))
+    toks = rng.integers(1, 1000, (2, 64)).astype(np.int32)
+    assert not idx.lookup(toks).any()          # cold
+    idx.admit(toks)                            # first touch: no-allocate
+    assert idx.stats.admissions == 0
+    assert idx.stats.admission_skips > 0
+    idx.admit(toks)                            # second touch: admitted
+    assert idx.stats.admissions > 0
+    assert idx.lookup(toks).all()              # now hits
+
+
+def test_kv_index_eviction_prefers_cold(rng):
+    cfg = KVIndexConfig(n_sets=1, set_ways=8, admit_after_reads=0,
+                        window_ops=1 << 30, m_writes=1 << 20)
+    idx = MonarchKVIndex(cfg)
+    toks = rng.integers(1, 10_000, (1, 16 * 8)).astype(np.int32)
+    idx.admit(toks)                            # fills some ways
+    hot = idx.lookup(toks)                     # re-read: marks read_after
+    idx.admit(toks)
+    before = idx.stats.evictions
+    toks2 = rng.integers(10_001, 20_000, (1, 16 * 8)).astype(np.int32)
+    idx.admit(toks2)
+    assert idx.stats.evictions >= before       # space had to be made
+
+
+def test_kv_index_throttle():
+    cfg = KVIndexConfig(n_sets=1, set_ways=512, admit_after_reads=0,
+                        m_writes=0, window_ops=1 << 30)
+    idx = MonarchKVIndex(cfg)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, 100_000, (1, 16 * 32)).astype(np.int32)
+    idx.admit(toks)
+    assert idx.stats.throttled > 0             # zero budget: all throttled
+    assert idx.stats.admissions == 0
+
+
+def test_kv_index_write_distribution_evens_out(rng):
+    idx = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=0))
+    for _ in range(6):
+        toks = rng.integers(1, 1 << 20, (4, 256)).astype(np.int32)
+        idx.admit(toks)
+    dist = idx.write_distribution()
+    assert dist.sum() == idx.stats.admissions
+    assert dist.max() <= dist.mean() * 4 + 8   # no pathological skew

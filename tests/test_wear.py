@@ -1,0 +1,192 @@
+"""Wear-leveling / durability state machine tests (paper §8, Fig. 8)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry, wear
+from repro.core.timing import (CPU_HZ, PAPER_3Y_SECONDS, t_mww_seconds,
+                               t_mww_cycles)
+
+
+def _cfg(**kw):
+    defaults = dict(n_supersets=16, m_writes=3, dc_limit=8192,
+                    wc_limit=1 << 22, t_mww_cycles=1000,
+                    blocks_per_superset=4)
+    defaults.update(kw)
+    return wear.WearConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# t_MWW math (§6.2).
+# ---------------------------------------------------------------------------
+
+def test_t_mww_paper_example():
+    """Paper: 3-year lifetime (94.6e6 s), endurance 1e8 -> t_MWW = 0.94*M s."""
+    for m in (1, 2, 3, 4):
+        s = t_mww_seconds(m, PAPER_3Y_SECONDS, 1e8)
+        assert s == pytest.approx(0.946 * m, rel=1e-3)
+    assert t_mww_cycles(1, PAPER_3Y_SECONDS, 1e8) == pytest.approx(
+        0.946 * CPU_HZ, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MSB ratio detector (divider-free WR, Fig. 8).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("x,want", [(0, -1), (1, 0), (2, 1), (3, 1),
+                                    (512, 9), (513, 9), (1 << 20, 20)])
+def test_msb_index(x, want):
+    assert int(wear.msb_index(jnp.asarray(x, jnp.int32))) == want
+
+
+def test_wr_signal_512x_threshold():
+    import dataclasses
+    cfg = _cfg()
+    st_ = wear.init_state(cfg)
+    # writes = 512 * supersets -> MSB gap = 9 -> WR fires
+    st_ = dataclasses.replace(
+        st_, write_counter=jnp.asarray(1 << 12, jnp.int32),
+        superset_counter=jnp.asarray(8, jnp.int32))
+    assert bool(wear.wr_signal(st_, cfg))
+    st2 = dataclasses.replace(
+        st_, write_counter=jnp.asarray((1 << 12) - 1, jnp.int32))
+    assert not bool(wear.wr_signal(st2, cfg))
+    # zero supersets -> no signal regardless of writes
+    st3 = dataclasses.replace(
+        st_, superset_counter=jnp.asarray(0, jnp.int32))
+    assert not bool(wear.wr_signal(st3, cfg))
+
+
+# ---------------------------------------------------------------------------
+# record_write: SWT flags, counters, rotate, t_MWW locking.
+# ---------------------------------------------------------------------------
+
+def test_swt_counters_first_write_only():
+    cfg = _cfg()
+    st_ = wear.init_state(cfg)
+    c = jnp.asarray(0)
+    for i in range(3):
+        st_, rot, _ = wear.record_write(st_, cfg, jnp.asarray(2),
+                                        jnp.asarray(True), c)
+    assert int(st_.superset_counter) == 1        # counted once
+    assert int(st_.dirty_counter) == 1
+    assert int(st_.write_counter) == 3
+    assert int(st_.swt_w[2]) == 1 and int(st_.swt_d[2]) == 1
+    assert int(st_.swt_w[0]) == 0
+
+
+def test_t_mww_lock_and_window_rollover():
+    cfg = _cfg(n_supersets=4, m_writes=1, blocks_per_superset=2,
+               t_mww_cycles=100)   # budget = 2 writes / window
+    st_ = wear.init_state(cfg)
+    s = jnp.asarray(1)
+    st_, _, _ = wear.record_write(st_, cfg, s, jnp.asarray(False), jnp.asarray(0))
+    st_, _, _ = wear.record_write(st_, cfg, s, jnp.asarray(False), jnp.asarray(1))
+    assert not bool(wear.is_locked(st_, s, jnp.asarray(2)))
+    # third write in the same window exceeds the budget -> locked
+    st_, _, _ = wear.record_write(st_, cfg, s, jnp.asarray(False), jnp.asarray(2))
+    assert bool(wear.is_locked(st_, s, jnp.asarray(3)))
+    # lock expires when the window rolls over
+    assert not bool(wear.is_locked(st_, s, jnp.asarray(200)))
+    # a fresh window resets the budget
+    st_, _, _ = wear.record_write(st_, cfg, s, jnp.asarray(False),
+                                  jnp.asarray(250))
+    assert not bool(wear.is_locked(st_, s, jnp.asarray(251)))
+    # other supersets never locked
+    assert not bool(wear.is_locked(st_, jnp.asarray(0), jnp.asarray(3)))
+
+
+def test_rotate_on_dirty_limit_flushes_and_resets():
+    cfg = _cfg(n_supersets=8, dc_limit=2, t_mww_cycles=1 << 20)
+    st_ = wear.init_state(cfg)
+    st_, rot, fl = wear.record_write(st_, cfg, jnp.asarray(0),
+                                     jnp.asarray(True), jnp.asarray(0))
+    assert not bool(rot)
+    st_, rot, fl = wear.record_write(st_, cfg, jnp.asarray(1),
+                                     jnp.asarray(True), jnp.asarray(1))
+    assert bool(rot)                       # DC = 2 reached
+    assert int(fl) == 2                    # both dirty supersets flushed
+    # SWT + counters reset, offsets bumped
+    assert int(st_.write_counter) == 0
+    assert int(st_.superset_counter) == 0
+    assert int(jnp.sum(st_.swt_d)) == 0
+    assert int(st_.offsets.rotate_count) == 1
+    assert int(st_.offsets.superset) == geometry.ROTATE_PRIMES["superset"]
+    assert int(st_.total_rotates) == 1
+    assert int(st_.total_flushed) == 2
+
+
+def test_record_write_is_jittable():
+    cfg = _cfg()
+    st_ = wear.init_state(cfg)
+    f = jax.jit(lambda s, sup, d, c: wear.record_write(s, cfg, sup, d, c))
+    st2, rot, fl = f(st_, jnp.asarray(3), jnp.asarray(True), jnp.asarray(5))
+    assert int(st2.write_counter) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), n_writes=st.integers(1, 60))
+def test_wear_counters_invariants(seed, n_writes):
+    """Invariants under random write streams: superset_counter <= distinct
+    supersets touched; dirty_counter <= superset_counter; counters reset on
+    rotate."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(n_supersets=8, dc_limit=5, t_mww_cycles=1 << 20)
+    st_ = wear.init_state(cfg)
+    touched, dirty_touched = set(), set()
+    for i in range(n_writes):
+        s = int(rng.integers(0, 8))
+        d = bool(rng.integers(0, 2))
+        st_, rot, _ = wear.record_write(st_, cfg, jnp.asarray(s),
+                                        jnp.asarray(d), jnp.asarray(i))
+        if bool(rot):
+            touched.clear()
+            dirty_touched.clear()
+        else:
+            touched.add(s)
+            if d:
+                dirty_touched.add(s)
+        assert int(st_.superset_counter) == len(touched)
+        assert int(st_.dirty_counter) >= len(dirty_touched) - 1  # rotate timing
+        assert int(st_.dirty_counter) <= cfg.dc_limit
+
+
+# ---------------------------------------------------------------------------
+# D/R install filter (§8 "Mitigating Writes").
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,r,install,forward", [
+    (True, True, True, False),    # D&R: install
+    (True, False, False, True),   # D&!R: forward to DRAM
+    (False, True, True, False),   # !D&R: install read-only
+    (False, False, False, False),  # !D&!R: drop
+])
+def test_install_decision_truth_table(d, r, install, forward):
+    i, f = wear.install_decision(jnp.asarray(d), jnp.asarray(r))
+    assert bool(i) == install and bool(f) == forward
+
+
+# ---------------------------------------------------------------------------
+# Lifetime replay (§10.3).
+# ---------------------------------------------------------------------------
+
+def test_lifetime_rotation_beats_no_rotation():
+    from repro.core import lifetime
+    w = np.zeros(64)
+    w[:4] = 1000.0  # concentrated writes
+    res = lifetime.estimate_lifetime(w, epoch_cycles=1e9,
+                                     rotations_per_epoch=4)
+    # rotation spreads the hot supersets -> years must beat the static map
+    static_years = lifetime.estimate_lifetime(
+        w, epoch_cycles=1e9, rotations_per_epoch=4,
+        endurance=1e8).max_cell_writes_per_epoch
+    assert res.years <= res.ideal_years           # never beats ideal
+    assert res.years > 0
+    # even distribution: rotation == ideal
+    res_even = lifetime.estimate_lifetime(np.ones(64), epoch_cycles=1e9)
+    assert res_even.years == pytest.approx(res_even.ideal_years, rel=0.01)

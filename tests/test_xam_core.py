@@ -1,0 +1,204 @@
+"""Bit-accuracy tests for the XAM array model and the Monarch address
+geometry (paper §4, §6)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import geometry, xam
+
+
+# ---------------------------------------------------------------------------
+# XAM array: writes.
+# ---------------------------------------------------------------------------
+
+def test_write_row_then_read(rng):
+    arr = xam.make_array(16, 32)
+    data = jnp.asarray(rng.integers(0, 2, 32), jnp.int8)
+    arr = xam.write_row(arr, jnp.asarray(3), data)
+    np.testing.assert_array_equal(np.asarray(xam.read_row(arr, jnp.asarray(3))),
+                                  np.asarray(data))
+    # other rows untouched (V/2 half-select discipline)
+    assert int(jnp.sum(jnp.abs(arr.bits))) == int(jnp.sum(data))
+
+
+def test_write_col_then_read(rng):
+    arr = xam.make_array(16, 32)
+    data = jnp.asarray(rng.integers(0, 2, 16), jnp.int8)
+    arr = xam.write_col(arr, jnp.asarray(5), data)
+    np.testing.assert_array_equal(np.asarray(arr.bits[:, 5]), np.asarray(data))
+    assert int(jnp.sum(jnp.abs(arr.bits))) == int(jnp.sum(data))
+
+
+def test_two_step_write_discipline(rng):
+    """Step 1 touches exactly the 0-cells of the active line, step 2 exactly
+    the 1-cells; the two steps partition the line (§4.1)."""
+    arr = xam.make_array(8, 8)
+    data = jnp.asarray(rng.integers(0, 2, 8), jnp.int8)
+    _, s0, s1 = xam.write_row_steps(arr, jnp.asarray(2), data)
+    s0, s1 = np.asarray(s0), np.asarray(s1)
+    assert (s0 * s1).sum() == 0                      # disjoint
+    line = s0[2] + s1[2]
+    np.testing.assert_array_equal(line, np.ones(8))  # covers the line
+    assert s0.sum() == (1 - np.asarray(data)).sum()
+    assert s1.sum() == np.asarray(data).sum()
+    assert s0[[0, 1, 3, 4, 5, 6, 7]].sum() == 0      # inactive rows untouched
+
+    _, c0, c1 = xam.write_col_steps(arr, jnp.asarray(4), data)
+    c0, c1 = np.asarray(c0), np.asarray(c1)
+    assert (c0 * c1).sum() == 0
+    np.testing.assert_array_equal(c0[:, 4] + c1[:, 4], np.ones(8))
+    assert c0[:, [0, 1, 2, 3, 5, 6, 7]].sum() == 0
+
+
+def test_row_col_write_equivalence(rng):
+    """Writing the same bit pattern row-wise and column-wise produces the
+    same cell states (§4.1.2: 'writing a 0 row-wise and column-wise produce
+    the same cell state')."""
+    bits = rng.integers(0, 2, (8, 8)).astype(np.int8)
+    a = xam.make_array(8, 8)
+    for r in range(8):
+        a = xam.write_row(a, jnp.asarray(r), jnp.asarray(bits[r]))
+    b = xam.make_array(8, 8)
+    for c in range(8):
+        b = xam.write_col(b, jnp.asarray(c), jnp.asarray(bits[:, c]))
+    np.testing.assert_array_equal(np.asarray(a.bits), np.asarray(b.bits))
+
+
+def test_wear_counts_full_line(rng):
+    """Constant-write-voltage assumption: every cell of the active line
+    takes a pulse per write, regardless of value change."""
+    arr = xam.make_array(8, 8)
+    arr = xam.write_row(arr, jnp.asarray(1), jnp.zeros(8, jnp.int8))
+    arr = xam.write_row(arr, jnp.asarray(1), jnp.zeros(8, jnp.int8))
+    arr = xam.write_col(arr, jnp.asarray(2), jnp.ones(8, jnp.int8))
+    w = np.asarray(arr.cell_writes)
+    assert (w[1] >= 2).all()
+    assert w[1, 2] == 3          # row writes + the col write
+    assert w[0, 0] == 0
+
+
+# ---------------------------------------------------------------------------
+# XAM search: analog threshold model pinned to digital semantics.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), rows=st.integers(1, 64),
+       cols=st.integers(1, 64))
+def test_search_analog_equals_digital(seed, rows, cols):
+    rng = np.random.default_rng(seed)
+    arr = xam.XamArray(
+        bits=jnp.asarray(rng.integers(0, 2, (rows, cols)), jnp.int8),
+        cell_writes=jnp.zeros((rows, cols), jnp.int32))
+    key = jnp.asarray(rng.integers(0, 2, rows), jnp.int8)
+    mask = jnp.asarray(rng.integers(0, 2, rows), jnp.int8)
+    analog = np.asarray(xam.search(arr, key, mask))
+    digital = np.asarray(xam.search_digital(arr, key, mask))
+    np.testing.assert_array_equal(analog, digital)
+
+
+def test_ref_s_sits_between_match_and_single_mismatch():
+    """Ref_S must separate all-match from single-mismatch for any n."""
+    for n in (1, 2, 8, 64, 512):
+        n_sel = jnp.asarray(n)
+        all_match_v = 1.0
+        one_miss_v = 1.0 - 1.0 / n
+        ref = float(xam.ref_s(n_sel))
+        assert one_miss_v < ref < all_match_v
+
+
+def test_set_search_match_register():
+    arr = xam.make_set(8, 32)
+    key = jnp.asarray([1, 0, 1, 1, 0, 0, 1, 0], jnp.int8)
+    arr = xam.store_key_colwise(arr, jnp.asarray(20), key)
+    matches, idx = xam.set_search(arr, key, jnp.ones(8, jnp.int8))
+    assert int(idx) == 20
+    # no-match resets the register to NULL (-1)
+    _, idx2 = xam.set_search(arr, 1 - key, jnp.ones(8, jnp.int8))
+    assert int(idx2) == -1
+
+
+# ---------------------------------------------------------------------------
+# Geometry: diagonal sets, address mapping, rotary offsets.
+# ---------------------------------------------------------------------------
+
+def test_diagonal_set_layout():
+    """(i, j) belongs to set (j - i) % 8; every set selects one subarray per
+    grid row and per grid column (Fig. 4)."""
+    for k in range(8):
+        subs = geometry.subarrays_of_set(k)
+        assert len(subs) == 8
+        rows = [i for i, _ in subs]
+        cols = [j for _, j in subs]
+        assert sorted(rows) == list(range(8))
+        assert sorted(cols) == list(range(8))
+        for i, j in subs:
+            assert geometry.set_of_subarray(i, j) == k
+    # all 64 subarrays covered exactly once across the 8 sets
+    seen = {(i, j) for k in range(8) for i, j in geometry.subarrays_of_set(k)}
+    assert len(seen) == 64
+
+
+def test_port_select_modes():
+    cols = geometry.port_select(3, mode_column_in=True)
+    assert all(p == "col" for _, _, p in cols)
+    rows = geometry.port_select(3, mode_column_in=False)
+    assert all(p == "row" for _, _, p in rows)
+
+
+def test_geometry_capacity():
+    assert geometry.GEOM_8GB.capacity_bytes == 8 * 1024 ** 3
+    g = geometry.GEOM_8GB.scaled(64)
+    assert g.supersets_per_bank == 8
+    assert g.capacity_bytes == geometry.GEOM_8GB.capacity_bytes // 64
+
+
+@settings(max_examples=40, deadline=None)
+@given(addr=st.integers(0, geometry.GEOM_8GB.total_blocks - 1))
+def test_decompose_compose_roundtrip(addr):
+    g = geometry.GEOM_8GB
+    c = geometry.decompose(jnp.asarray(addr), g)
+    back = int(geometry.compose(c, g))
+    assert back == addr
+    assert 0 <= int(c.vault) < g.n_vaults
+    assert 0 <= int(c.bank) < g.banks_per_vault
+    assert 0 <= int(c.superset) < g.supersets_per_bank
+    assert 0 <= int(c.set_) < g.sets_per_superset
+    assert 0 <= int(c.row) < g.rows_per_set
+
+
+def test_rotary_offsets_prime_schedule():
+    off = geometry.zero_offsets()
+    for r in range(1, 17):
+        off = geometry.apply_rotate(off)
+        assert int(off.bank) == r * 1
+        assert int(off.set_) == r * 3
+        assert int(off.superset) == r * 7
+        assert int(off.vault) == (r // 8) * 5   # every 8th rotate
+    assert int(off.rotate_count) == 16
+
+
+def test_rotation_is_permutation():
+    """Offset remapping must be a bijection on block addresses (no two
+    logical blocks land on the same physical block)."""
+    g = geometry.GEOM_8GB.scaled(256)
+    off = geometry.apply_rotate(geometry.apply_rotate(geometry.zero_offsets()))
+    addrs = jnp.arange(g.total_blocks, dtype=jnp.int32)
+    c = geometry.decompose(addrs, g, off)
+    phys = np.asarray(geometry.compose(c, g))
+    assert len(np.unique(phys)) == g.total_blocks
+
+
+def test_ram_to_cam_mapping_unique():
+    """Fig. 7: distinct RAM banks map to distinct (cam_bank, set, key_id)
+    tag locations."""
+    g = geometry.GEOM_8GB
+    seen = set()
+    for b in range(30):  # 30 RAM banks in the §7 example
+        c = geometry.ram_to_cam(jnp.asarray(b), g)
+        t = (int(c.bank), int(c.set_), int(c.key_id))
+        assert t not in seen
+        seen.add(t)
