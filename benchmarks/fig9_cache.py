@@ -1,10 +1,14 @@
 """Fig. 9 + Fig. 10 reproduction: hardware-managed cache mode.
 
-Runs the lax.scan trace simulator (paper timing tables, §7 cache
-organization, §8 durability machinery) over CRONO/NAS-signature traces for
-the paper's systems: D-Cache, D-Cache(Ideal), S-Cache, RC-Unbound,
-Monarch-Unbound, Monarch M=1..4.  Reports speedup vs D-Cache (Fig. 9) and
-in-package hit rates (Fig. 10), and validates claims C1-C4.
+Runs the trace simulator (paper timing tables, §7 cache organization, §8
+durability machinery) over CRONO/NAS-signature traces for the paper's
+systems: D-Cache, D-Cache(Ideal), S-Cache, RC-Unbound, Monarch-Unbound,
+Monarch M=1..4.  Reports speedup vs D-Cache (Fig. 9) and in-package hit
+rates (Fig. 10), and validates claims C1-C4.
+
+The whole config x app grid goes through ``simulator.simulate_grid``: one
+vmapped ``lax.scan`` per shape family (the entire Monarch C1-C4 M-sweep is
+a single call) instead of the former serial per-config Python loop.
 
 Capacity scale: 4 GB DRAM -> `scale_blocks` 64B blocks (default 4096,
 = 1/16384 scale); all capacity RATIOS and every timing parameter are
@@ -12,18 +16,20 @@ unscaled.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
+from repro.bench import emit_json, stopwatch
 from repro.core import simulator
 from repro.data import traces
 
 
-def run(csv_rows: list[str], scale_blocks: int = 4096,
-        n_requests: int = 120_000, systems: list[str] | None = None):
+def sweep_configs(scale_blocks: int = 4096) -> dict[str, simulator.SimConfig]:
+    """The §10.2 systems with the simulation-scale knobs applied."""
     cfgs = simulator.baseline_configs(scale_blocks)
     # L3 scaled with the in-package capacity (paper ratio 8 MB : 4 GB); a
     # full-size L3 would absorb the reuse that belongs in-package.
-    import dataclasses
     for name in list(cfgs):
         cfgs[name] = dataclasses.replace(cfgs[name], l3_sets=16)
     # Write-window scaled for the sim horizon so t_MWW actually binds.
@@ -32,14 +38,30 @@ def run(csv_rows: list[str], scale_blocks: int = 4096,
     # but locks the superset for longer when it is exceeded.
     for name in list(cfgs):
         if cfgs[name].wear_enabled:
-            import dataclasses
             cfgs[name] = dataclasses.replace(
                 cfgs[name],
                 t_mww_cycles=(1 << 15) * cfgs[name].m_writes, dc_limit=512,
                 window_budget_blocks=64)
+    return cfgs
+
+
+def run(csv_rows: list[str], scale_blocks: int = 4096,
+        n_requests: int = 120_000, systems: list[str] | None = None,
+        quick: bool = False):
+    cfgs = sweep_configs(scale_blocks)
     systems = systems or list(cfgs)
     inpkg_blocks = cfgs["monarch_unbound"].inpkg_blocks
+    cfgs = {s: cfgs[s] for s in systems}
     specs = traces.crono_nas_specs(inpkg_blocks, n_requests)
+    trace_list = [(spec.name, *traces.generate(spec)) for spec in specs]
+
+    timing: dict[str, float] = {}
+    with stopwatch(timing, "sweep_s"):
+        res = simulator.simulate_grid(cfgs, trace_list)
+    n_fam = simulator.n_shape_families(cfgs.values())
+    print(f"\n[fig9] {len(cfgs)} configs x {len(specs)} apps = "
+          f"{len(res)} sims via {n_fam} vmapped scan(s) "
+          f"in {timing['sweep_s']:.1f}s")
 
     speedups = {s: [] for s in systems}
     hitrates = {s: [] for s in systems}
@@ -47,19 +69,16 @@ def run(csv_rows: list[str], scale_blocks: int = 4096,
     print("\n== Fig 9/10: cache-mode performance (speedup vs D-Cache) ==")
     print(f"{'app':>6s} " + " ".join(f"{s:>15s}" for s in systems))
     for spec in specs:
-        addrs, wr = traces.generate(spec)
-        res = {}
-        for s in systems:
-            res[s] = simulator.simulate_trace(cfgs[s], addrs, wr)
-        base = res["d_cache"].total_cycles
+        base = res[("d_cache", spec.name)].total_cycles
         row = []
         for s in systems:
-            sp = base / res[s].total_cycles
+            r = res[(s, spec.name)]
+            sp = base / r.total_cycles
             speedups[s].append(sp)
-            hitrates[s].append(res[s].inpkg_hit_rate)
+            hitrates[s].append(r.inpkg_hit_rate)
             row.append(f"{sp:15.3f}")
         print(f"{spec.name:>6s} " + " ".join(row))
-        mu = res["monarch_unbound"].stats
+        mu = res[("monarch_unbound", spec.name)].stats
         total_ev = max(mu["l3_evictions"], 1)
         writes_saved.append(mu["writes_filtered"] / total_ev)
 
@@ -76,6 +95,7 @@ def run(csv_rows: list[str], scale_blocks: int = 4096,
     wsave = float(np.mean(writes_saved))
     print(f"\nC1 Monarch-unbound vs D-Cache: {unb:.3f}x   (paper: 1.61x)")
     print(f"C2 Monarch-unbound vs Ideal-DRAM: {unb / ideal:.3f}x (paper: 1.21x)")
+    best_m = None
     if m_means:
         best_m = max(m_means, key=m_means.get)
         print(f"C3 best bounded M: {best_m} ({m_means})  (paper: M=3)")
@@ -86,4 +106,23 @@ def run(csv_rows: list[str], scale_blocks: int = 4096,
     csv_rows.append(f"fig9_write_filtered_frac,0,{wsave:.3f}")
     for m, v in m_means.items():
         csv_rows.append(f"fig9_monarch_m{m}_speedup,0,{v:.3f}")
+
+    emit_json("fig9", {
+        "n_requests": n_requests,
+        "scale_blocks": scale_blocks,
+        "systems": systems,
+        "n_sims": len(res),
+        "n_vmapped_scans": n_fam,
+        "sweep_seconds": timing["sweep_s"],
+        "speedup_gmean": {
+            s: float(np.exp(np.mean(np.log(np.maximum(speedups[s], 1e-9)))))
+            for s in systems},
+        "hit_rate_mean": {s: float(np.mean(hitrates[s])) for s in systems},
+        "claims": {
+            "C1_unbound_vs_dcache": unb,
+            "C2_unbound_vs_ideal": unb / ideal,
+            "C3_best_m": best_m,
+            "C4_write_filtered_frac": wsave,
+        },
+    }, quick=quick)
     return {"speedups": speedups, "hitrates": hitrates}

@@ -1,62 +1,66 @@
 """Kernel micro-benchmarks: us/call of the three Pallas kernels (interpret
 mode on this CPU rig; the numbers are CI-tracking, not TPU projections) and
-of the MonarchKVIndex batched prefix lookup."""
+of the MonarchKVIndex batched prefix lookup.  Timing discipline (warmup,
+median-of-k, block_until_ready) comes from ``repro.bench.harness``."""
 from __future__ import annotations
-
-import time
 
 import numpy as np
 
+from repro.bench import BenchSizes, emit_json, time_callable
 from repro.kernels.hopscotch import ops as hop_ops
 from repro.kernels.string_match import ops as sm_ops
 from repro.kernels.xam_search import ops as xam_ops
 from repro.serve.kv_index import KVIndexConfig, MonarchKVIndex
 
 
-def _time(fn, reps=5):
-    fn()  # compile
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn()
-    try:
-        out.block_until_ready()
-    except AttributeError:
-        pass
-    return (time.time() - t0) / reps * 1e6
-
-
-def run(csv_rows: list[str]):
+def run(csv_rows: list[str], quick: bool = False):
     rng = np.random.default_rng(0)
+    reps = BenchSizes(quick=quick).kernel_reps
     print("\n== kernel micro-benchmarks (CPU interpret mode) ==")
+    timings = {}
 
     keys = rng.integers(0, 2, (64, 64)).astype(np.int8)
     data = rng.integers(0, 2, (64, 512)).astype(np.int8)
-    us = _time(lambda: xam_ops.xam_search(keys, data))
-    print(f"xam_search 64q x (64x512): {us:.0f} us")
-    csv_rows.append(f"kernel_xam_search,{us:.0f},64x512")
+    t = time_callable(lambda: xam_ops.xam_search(keys, data), reps=reps)
+    timings["xam_search"] = t
+    print(f"xam_search 64q x (64x512): {t.median_us:.0f} us")
+    csv_rows.append(f"kernel_xam_search,{t.median_us:.0f},64x512")
 
     h, n = 32, 32 * 256
     t_lo = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
     t_hi = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
     homes = rng.integers(0, n - 2 * h, 64).astype(np.int32)
     q = rng.integers(0, 2 ** 32, 64, dtype=np.uint32)
-    us = _time(lambda: hop_ops.hopscotch_lookup(t_lo, t_hi, homes, q, q, window=h))
-    print(f"hopscotch_lookup 64q w32: {us:.0f} us")
-    csv_rows.append(f"kernel_hopscotch,{us:.0f},w32")
+    t = time_callable(
+        lambda: hop_ops.hopscotch_lookup(t_lo, t_hi, homes, q, q, window=h),
+        reps=reps)
+    timings["hopscotch_lookup"] = t
+    print(f"hopscotch_lookup 64q w32: {t.median_us:.0f} us")
+    csv_rows.append(f"kernel_hopscotch,{t.median_us:.0f},w32")
 
     text = rng.integers(97, 113, 1 << 16).astype(np.uint8)
     pat = text[1000:1012].copy()
-    us = _time(lambda: sm_ops.string_match(text, pat, tile=4096))
-    print(f"string_match 64KiB p12: {us:.0f} us")
-    csv_rows.append(f"kernel_string_match,{us:.0f},64KiB")
+    t = time_callable(lambda: sm_ops.string_match(text, pat, tile=4096),
+                      reps=reps)
+    timings["string_match"] = t
+    print(f"string_match 64KiB p12: {t.median_us:.0f} us")
+    csv_rows.append(f"kernel_string_match,{t.median_us:.0f},64KiB")
 
     idx = MonarchKVIndex(KVIndexConfig(n_sets=8))
     toks = rng.integers(1, 1000, (4, 256)).astype(np.int32)
     idx.admit(toks)
     idx.admit(toks)   # second touch -> admitted
-    t0 = time.time()
-    hits = idx.lookup(toks)
-    us = (time.time() - t0) * 1e6
-    print(f"kv_index lookup 4x256 tokens: {us:.0f} us "
+    t = time_callable(lambda: idx.lookup(toks), warmup=1, reps=reps)
+    timings["kv_index_lookup"] = t
+    print(f"kv_index lookup 4x256 tokens: {t.median_us:.0f} us "
           f"(hit rate {idx.hit_rate:.2f})")
-    csv_rows.append(f"kv_index_lookup,{us:.0f},{idx.hit_rate:.2f}")
+    csv_rows.append(f"kv_index_lookup,{t.median_us:.0f},{idx.hit_rate:.2f}")
+
+    emit_json("kernels", {
+        "reps": reps,
+        "timings_us": {
+            name: {"median": t.median_us, "best": t.best_us,
+                   "mean": t.mean_us}
+            for name, t in timings.items()},
+        "kv_index_hit_rate": float(idx.hit_rate),
+    }, quick=quick)

@@ -12,7 +12,10 @@ Modules (paper artifact -> bench):
     §Roofline      -> roofline_summary   (dry-run three-term table)
 
 Each module appends ``name,us_per_call,derived`` CSV rows; the combined CSV
-lands in benchmarks/results.csv.
+lands in benchmarks/results.csv.  The figure modules additionally emit
+machine-readable ``BENCH_<name>.json`` artifacts (see ``repro.bench``);
+``--quick`` selects the CI-sized sweep policy from
+``repro.bench.harness.BenchSizes``.
 """
 from __future__ import annotations
 
@@ -20,6 +23,8 @@ import argparse
 import os
 import sys
 import time
+
+from repro.bench import BenchSizes
 
 from benchmarks import (fig9_cache, fig11_lifetime, fig12_14_hashing,
                         kernels_bench, roofline_summary, string_match,
@@ -35,19 +40,25 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="run a single module by name")
     args = ap.parse_args(argv)
+    sizes = BenchSizes(quick=args.quick)
 
     benches = [
         ("table1_tech", lambda rows: table1_tech.run(rows)),
-        ("kernels_bench", lambda rows: kernels_bench.run(rows)),
+        ("kernels_bench", lambda rows: kernels_bench.run(
+            rows, quick=args.quick)),
         ("fig9_cache", lambda rows: fig9_cache.run(
-            rows, n_requests=40_000 if args.quick else 120_000)),
+            rows, n_requests=sizes.fig_requests, systems=sizes.systems,
+            quick=args.quick)),
         ("fig11_lifetime", lambda rows: fig11_lifetime.run(
-            rows, n_requests=40_000 if args.quick else 120_000)),
+            rows, n_requests=sizes.fig_requests, quick=args.quick)),
         ("fig12_14_hashing", lambda rows: fig12_14_hashing.run(
             rows, quick=args.quick)),
         ("string_match", lambda rows: string_match.run(rows)),
         ("roofline_summary", lambda rows: roofline_summary.run(rows)),
     ]
+    if args.only and args.only not in {n for n, _ in benches}:
+        ap.error(f"--only {args.only!r}: unknown module "
+                 f"(choose from {', '.join(n for n, _ in benches)})")
 
     rows: list[str] = ["name,us_per_call,derived"]
     failures = []

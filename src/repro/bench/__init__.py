@@ -1,0 +1,15 @@
+"""Benchmark runtime subsystem: timing harness + machine-readable emission.
+
+``harness`` — warmup + median-of-k wall timing for callables returning JAX
+pytrees, a stopwatch for one-shot sweeps, and the quick/full size policy.
+``emit`` — ``BENCH_<name>.json`` artifact files with run metadata, the
+stable interface CI uploads and downstream tooling diffs.
+"""
+from repro.bench.emit import bench_out_dir, emit_json
+from repro.bench.harness import (BenchSizes, Timing, stopwatch,
+                                 time_callable)
+
+__all__ = [
+    "BenchSizes", "Timing", "bench_out_dir", "emit_json", "stopwatch",
+    "time_callable",
+]

@@ -1,0 +1,56 @@
+"""Machine-readable benchmark artifacts: ``BENCH_<name>.json``.
+
+Each figure benchmark emits one JSON file next to ``benchmarks/results.csv``
+(override with ``BENCH_OUT_DIR``).  The envelope carries enough metadata to
+interpret a number months later: which backend produced it, whether it was
+a quick (CI-sized) or full sweep, and when.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+
+def bench_out_dir() -> str:
+    """Artifact directory: ``$BENCH_OUT_DIR`` or the repo's benchmarks/."""
+    env = os.environ.get("BENCH_OUT_DIR")
+    if env:
+        os.makedirs(env, exist_ok=True)
+        return env
+    here = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    cand = os.path.join(here, "benchmarks")
+    return cand if os.path.isdir(cand) else os.getcwd()
+
+
+def emit_json(name: str, payload: dict, *, quick: bool | None = None) -> str:
+    """Write ``BENCH_<name>.json`` and return its path."""
+    doc = {
+        "bench": name,
+        "created_unix": round(time.time(), 3),
+        "jax_backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+    }
+    if quick is not None:
+        doc["quick"] = bool(quick)
+    doc.update(payload)
+    path = os.path.join(bench_out_dir(), f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False, default=_coerce)
+        f.write("\n")
+    return path
+
+
+def _coerce(obj):
+    """JSON fallback for numpy/JAX scalars and arrays."""
+    for attr in ("item", "tolist"):
+        fn = getattr(obj, attr, None)
+        if callable(fn):
+            try:
+                return fn()
+            except Exception:
+                pass
+    return str(obj)

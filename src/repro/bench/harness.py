@@ -1,0 +1,98 @@
+"""Timing harness: warmup + median-of-k, stopwatches, quick/full sizing.
+
+Every figure benchmark used to hand-roll its own ``time.time()`` loop with
+no warmup discipline and no record of what was measured.  This module is
+the one implementation: compile excluded via explicit warmup reps, JAX
+async dispatch closed out with ``block_until_ready``, and the median (not
+the mean) reported so one scheduler hiccup cannot move a tracked number.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import statistics
+import time
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One measured callable: all values in microseconds."""
+    median_us: float
+    best_us: float
+    mean_us: float
+    reps: int
+    warmup: int
+
+    @property
+    def median_s(self) -> float:
+        return self.median_us / 1e6
+
+    def row(self) -> str:
+        return f"{self.median_us:.0f}"
+
+
+def _block(out) -> None:
+    """Wait out JAX async dispatch; harmless on non-JAX results."""
+    try:
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+
+
+def time_callable(fn, *, warmup: int = 1, reps: int = 5) -> Timing:
+    """Median-of-``reps`` wall time of ``fn()`` after ``warmup`` unmeasured
+    calls (which absorb compilation and first-touch caches)."""
+    for _ in range(warmup):
+        _block(fn())
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        _block(out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return Timing(
+        median_us=statistics.median(samples),
+        best_us=min(samples),
+        mean_us=statistics.fmean(samples),
+        reps=len(samples),
+        warmup=warmup,
+    )
+
+
+@contextlib.contextmanager
+def stopwatch(record: dict, key: str):
+    """One-shot wall timing for sweeps too big to repeat: stores elapsed
+    seconds into ``record[key]``."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        record[key] = round(time.perf_counter() - t0, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSizes:
+    """The quick (CI smoke) vs full (paper figure) size policy, in one
+    place instead of scattered per-module constants."""
+    quick: bool = False
+
+    @property
+    def fig_requests(self) -> int:
+        """Trace length for the Fig. 9/10/11 sweeps."""
+        return 40_000 if self.quick else 120_000
+
+    @property
+    def kernel_reps(self) -> int:
+        return 3 if self.quick else 5
+
+    @property
+    def systems(self) -> list[str] | None:
+        """Config subset for the cache sweep (None = all §10.2 systems).
+        Quick mode keeps the C1-C4 claim set: the D-Cache baselines plus
+        the full Monarch M-sweep."""
+        if not self.quick:
+            return None
+        return ["d_cache", "d_cache_ideal", "monarch_unbound",
+                "monarch_m1", "monarch_m2", "monarch_m3", "monarch_m4"]

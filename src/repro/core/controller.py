@@ -239,6 +239,12 @@ def cache_install(state: CacheState, set_id, tag, make_dirty):
     return new, evicted_dirty, way
 
 
+def dirty_set_mask(state: CacheState) -> jnp.ndarray:
+    """(n_sets,) bool — sets holding at least one dirty line; the rotation
+    flush in the simulator invalidates exactly these."""
+    return state.dirty.sum(axis=1) > 0
+
+
 def cache_invalidate_sets(state: CacheState, set_mask: jnp.ndarray):
     """Flush whole sets (rotation): returns (state, n_dirty_written_back)."""
     dirty_per_set = jnp.sum(state.dirty * state.valid, axis=1)

@@ -32,6 +32,26 @@ Tag check:
 Capacity scaling: cache state arrays are scaled down by ``cfg.scale`` with
 all capacity *ratios* preserved (8GB Monarch : 4GB DRAM : 73MB CMOS); traces
 are generated against the scaled footprint.  Timing is never scaled.
+
+Batched multi-config engine
+---------------------------
+Everything that distinguishes one ``SimConfig`` from another is split into
+two layers:
+
+* **SimShape** — array-shape-determining statics (set/way counts, bank
+  counts).  One XLA compilation per distinct shape.
+* **DynParams** — everything else (Table 3 timing scalars, policy flags,
+  §8 wear knobs) as a pytree of traced scalars.  Former Python branches
+  (``if cfg.search_tags`` ...) are computed on both sides and selected with
+  ``jnp.where``, so two configs differing only in DynParams run through the
+  *same* compiled scan.
+
+``simulate_grid`` stacks DynParams for every config in a shape family and
+runs the whole config x trace grid as ONE ``jax.vmap``-ed scan per family
+(for the paper's C1-C8 sweep: the Monarch M-sweep, both DRAM caches, etc.
+each collapse into a single vmapped call instead of a serial Python loop).
+When the host exposes multiple JAX devices the grid axis is sharded across
+them via ``launch/mesh.py``.
 """
 from __future__ import annotations
 
@@ -40,6 +60,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import controller, wear
 from repro.core.timing import TECH_TIMING, TABLE1, InterfaceTiming
@@ -120,6 +141,80 @@ def baseline_configs(scale_blocks: int = 4096) -> dict[str, SimConfig]:
 
 
 # ---------------------------------------------------------------------------
+# Static shape family vs dynamic per-config parameters.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SimShape:
+    """Array-shape statics: configs sharing a SimShape compile once and can
+    run through one vmapped scan."""
+    l3_sets: int
+    l3_ways: int
+    inpkg_sets: int
+    inpkg_ways: int
+    n_banks: int        # in-package banks (vaults x banks/vault)
+
+
+def shape_of(cfg: SimConfig) -> SimShape:
+    t = cfg.timing
+    return SimShape(
+        l3_sets=cfg.l3_sets, l3_ways=cfg.l3_ways,
+        inpkg_sets=cfg.inpkg_sets, inpkg_ways=cfg.inpkg_ways,
+        n_banks=t.n_vaults * t.banks_per_vault,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DynTiming:
+    """The Table 3 scalars the scan body reads, as traced values (the DDR4
+    side stays a static ``InterfaceTiming`` — main memory is common to all
+    configs).  ``_access`` accepts either representation."""
+    tRCD: jnp.ndarray
+    tCAS: jnp.ndarray
+    tCCD: jnp.ndarray
+    tWR: jnp.ndarray
+    tBL: jnp.ndarray
+    tCWD: jnp.ndarray
+    tRP: jnp.ndarray
+    tRC: jnp.ndarray
+    needs_precharge: jnp.ndarray   # scalar bool
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DynParams:
+    """Per-config dynamic parameters: one pytree leafset per grid lane."""
+    timing: DynTiming
+    search_tags: jnp.ndarray       # scalar bool
+    allocate_on_miss: jnp.ndarray  # scalar bool (= not cfg.no_allocate)
+    dr_filter: jnp.ndarray         # scalar bool
+    wear_enabled: jnp.ndarray      # scalar bool
+    wear: wear.WearDyn
+
+
+def dyn_params(cfg: SimConfig) -> DynParams:
+    t = cfg.timing
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+    b = lambda v: jnp.asarray(v, bool)
+    return DynParams(
+        timing=DynTiming(
+            tRCD=i32(t.tRCD), tCAS=i32(t.tCAS), tCCD=i32(t.tCCD),
+            tWR=i32(t.tWR), tBL=i32(t.tBL), tCWD=i32(t.tCWD),
+            tRP=i32(t.tRP), tRC=i32(t.tRC),
+            needs_precharge=b(t.needs_precharge)),
+        search_tags=b(cfg.search_tags),
+        allocate_on_miss=b(not cfg.no_allocate),
+        dr_filter=b(cfg.dr_filter),
+        wear_enabled=b(cfg.wear_enabled),
+        wear=wear.dyn_of(wear.WearConfig(
+            n_supersets=cfg.inpkg_sets, m_writes=cfg.m_writes,
+            dc_limit=cfg.dc_limit, t_mww_cycles=cfg.t_mww_cycles,
+            blocks_per_superset=cfg.window_budget_blocks or cfg.inpkg_ways)),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Scan state.
 # ---------------------------------------------------------------------------
 
@@ -162,50 +257,53 @@ NSTATS = len(STAT_NAMES)
 SIDX = {n: i for i, n in enumerate(STAT_NAMES)}
 
 
-def init_state(cfg: SimConfig) -> SimState:
-    t = cfg.timing
-    n_banks = t.n_vaults * t.banks_per_vault
+def init_state(cfg: SimConfig | SimShape) -> SimState:
+    shape = cfg if isinstance(cfg, SimShape) else shape_of(cfg)
     dt = TECH_TIMING["ddr4"]
     ddr_banks = dt.n_vaults * dt.banks_per_vault
     return SimState(
-        l3_tags=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int32),
-        l3_valid=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int8),
-        l3_dirty=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int8),
-        l3_read=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int8),
-        l3_age=jnp.zeros((cfg.l3_sets, cfg.l3_ways), jnp.int32),
-        cache=controller.init_cache(cfg.inpkg_sets, cfg.inpkg_ways),
-        inpkg_bank_free=jnp.zeros((n_banks,), jnp.int32),
-        inpkg_open_row=-jnp.ones((n_banks,), jnp.int32),
+        l3_tags=jnp.zeros((shape.l3_sets, shape.l3_ways), jnp.int32),
+        l3_valid=jnp.zeros((shape.l3_sets, shape.l3_ways), jnp.int8),
+        l3_dirty=jnp.zeros((shape.l3_sets, shape.l3_ways), jnp.int8),
+        l3_read=jnp.zeros((shape.l3_sets, shape.l3_ways), jnp.int8),
+        l3_age=jnp.zeros((shape.l3_sets, shape.l3_ways), jnp.int32),
+        cache=controller.init_cache(shape.inpkg_sets, shape.inpkg_ways),
+        inpkg_bank_free=jnp.zeros((shape.n_banks,), jnp.int32),
+        inpkg_open_row=-jnp.ones((shape.n_banks,), jnp.int32),
         ddr_bank_free=jnp.zeros((ddr_banks,), jnp.int32),
         ddr_open_row=-jnp.ones((ddr_banks,), jnp.int32),
         completions=jnp.zeros((MLP,), jnp.int32),
         arrival=jnp.zeros((), jnp.int32),
-        wear=wear.init_state(wear.WearConfig(
-            n_supersets=cfg.inpkg_sets, m_writes=cfg.m_writes,
-            dc_limit=cfg.dc_limit, t_mww_cycles=cfg.t_mww_cycles)),
-        set_writes=jnp.zeros((cfg.inpkg_sets,), jnp.int32),
-        set_way_writes=jnp.zeros((cfg.inpkg_sets, cfg.inpkg_ways), jnp.int32),
+        wear=wear.init_state(wear.WearConfig(n_supersets=shape.inpkg_sets)),
+        set_writes=jnp.zeros((shape.inpkg_sets,), jnp.int32),
+        set_way_writes=jnp.zeros((shape.inpkg_sets, shape.inpkg_ways),
+                                 jnp.int32),
         stats=jnp.zeros((NSTATS,), jnp.int32),
     )
 
 
 # --------------------------- bank access helpers ---------------------------
 
-def _access(bank_free, open_row, bank, row, when, t: InterfaceTiming,
-            is_write: bool):
-    """Seize ``bank`` at >= ``when``; returns (bank_free', open_row', done)."""
+def _access(bank_free, open_row, bank, row, when, t, is_write):
+    """Seize ``bank`` at >= ``when``; returns (bank_free', open_row', done).
+
+    ``t`` is either a static ``InterfaceTiming`` (DDR4 path) or a traced
+    ``DynTiming``; both row-buffer disciplines are computed and selected on
+    ``needs_precharge`` so the choice can be per-lane data under vmap.
+    """
     start = jnp.maximum(when, bank_free[bank])
-    if t.needs_precharge:
-        row_hit = open_row[bank] == row
-        lat_r = jnp.where(row_hit, t.tCAS + t.tBL,
-                          t.tRP + t.tRCD + t.tCAS + t.tBL)
-        occ_r = jnp.where(row_hit, t.tCCD, t.tRC)
-        open_row = open_row.at[bank].set(row)
-    else:
-        lat_r = jnp.asarray(t.tRCD + t.tCAS + t.tBL)
-        occ_r = jnp.asarray(t.tCCD)
+    row_hit = open_row[bank] == row
+    lat_pre = jnp.where(row_hit, t.tCAS + t.tBL,
+                        t.tRP + t.tRCD + t.tCAS + t.tBL)
+    occ_pre = jnp.where(row_hit, t.tCCD, t.tRC)
+    lat_nopre = jnp.asarray(t.tRCD + t.tCAS + t.tBL)
+    occ_nopre = jnp.asarray(t.tCCD)
+    pre = t.needs_precharge
+    lat_r = jnp.where(pre, lat_pre, lat_nopre)
+    occ_r = jnp.where(pre, occ_pre, occ_nopre)
+    open_row = jnp.where(pre, open_row.at[bank].set(row), open_row)
     lat_w = t.tCWD + t.tWR + t.tBL
-    occ_w = max(t.tCCD, t.tWR)
+    occ_w = jnp.maximum(t.tCCD, t.tWR)
     lat = jnp.where(is_write, lat_w, lat_r).astype(jnp.int32)
     occ = jnp.where(is_write, occ_w, occ_r).astype(jnp.int32)
     done = start + lat
@@ -215,16 +313,20 @@ def _access(bank_free, open_row, bank, row, when, t: InterfaceTiming,
 
 # ------------------------------- step fn -----------------------------------
 
-def make_step(cfg: SimConfig):
-    t = cfg.timing
+def make_step(shape: SimShape, dyn: DynParams, wear_on: bool = True):
+    """Build the scan body.  ``shape`` is static (array sizes); every other
+    per-config parameter comes in through ``dyn`` as traced scalars, so the
+    same compiled step serves a whole stacked family of configs.
+
+    ``wear_on`` is a static escape hatch: when the caller knows NO config in
+    the batch has wear enabled (e.g. the DRAM-cache family), the §8 wear
+    accounting and the O(sets x ways) rotation-flush computation are elided
+    from the compiled step instead of computed-and-discarded per request."""
+    t = dyn.timing
     dt = TECH_TIMING["ddr4"]
-    n_banks = t.n_vaults * t.banks_per_vault
+    n_banks = shape.n_banks
     ddr_banks = dt.n_vaults * dt.banks_per_vault
-    wcfg = wear.WearConfig(
-        n_supersets=cfg.inpkg_sets, m_writes=cfg.m_writes,
-        dc_limit=cfg.dc_limit, t_mww_cycles=cfg.t_mww_cycles,
-        # Scaled sim: budget per (scaled) superset window.
-        blocks_per_superset=cfg.window_budget_blocks or cfg.inpkg_ways)
+    wdyn = dyn.wear
 
     def bump(stats, name, amount=1):
         return stats.at[SIDX[name]].add(amount)
@@ -239,8 +341,8 @@ def make_step(cfg: SimConfig):
                               state.completions[slot.astype(jnp.int32)])
 
         # ---- L3 ---------------------------------------------------------
-        l3_set = (addr % cfg.l3_sets).astype(jnp.int32)
-        l3_tag = addr // cfg.l3_sets
+        l3_set = (addr % shape.l3_sets).astype(jnp.int32)
+        l3_tag = addr // shape.l3_sets
         line = (state.l3_tags[l3_set] == l3_tag) & (state.l3_valid[l3_set] == 1)
         l3_hit = jnp.any(line)
         l3_way = jnp.argmax(line).astype(jnp.int32)
@@ -255,7 +357,7 @@ def make_step(cfg: SimConfig):
         ev_tag = state.l3_tags[l3_set, way]
         ev_dirty = state.l3_dirty[l3_set, way] == 1
         ev_read = state.l3_read[l3_set, way] == 1
-        ev_addr = ev_tag * cfg.l3_sets + l3_set
+        ev_addr = ev_tag * shape.l3_sets + l3_set
 
         l3_tags = state.l3_tags.at[l3_set, way].set(l3_tag)
         l3_valid = state.l3_valid.at[l3_set, way].set(1)
@@ -279,43 +381,49 @@ def make_step(cfg: SimConfig):
         # ~l3_hit (charged times multiplied to zero on hits).
         # =================================================================
         miss = ~l3_hit
-        set_id_log = (addr % cfg.inpkg_sets).astype(jnp.int32)
+        set_id_log = (addr % shape.inpkg_sets).astype(jnp.int32)
         # Rotary offset remap (wear leveling): logical set -> physical set.
         off = (state.wear.offsets.superset + state.wear.offsets.set_ +
                state.wear.offsets.bank + state.wear.offsets.vault)
-        set_id = ((set_id_log + off) % cfg.inpkg_sets).astype(jnp.int32)
-        tag = addr // cfg.inpkg_sets
+        set_id = ((set_id_log + off) % shape.inpkg_sets).astype(jnp.int32)
+        tag = addr // shape.inpkg_sets
         hit, hway = controller.cache_lookup(state.cache, set_id, tag)
         hit = hit & miss
 
-        locked = wear.is_locked(state.wear, set_id, arrival) & cfg.wear_enabled
+        locked = wear.is_locked(state.wear, set_id, arrival) & dyn.wear_enabled
         hit = hit & ~locked  # locked superset: bypass to main memory
         stats = bump(stats, "locked_bypass", (miss & locked).astype(jnp.int32))
 
         # Bank mapping: CAM lookup bank and RAM data bank (different banks,
         # §7 decoupled tags/data) vs single-bank tag+data for DRAM-style.
         cam_bank = (set_id % max(n_banks // 8, 1)).astype(jnp.int32)
-        ram_bank = ((addr // cfg.inpkg_sets + set_id) % n_banks).astype(jnp.int32)
-        inpkg_row = (addr // (cfg.inpkg_sets * 8)) % 1024
+        ram_bank = ((addr // shape.inpkg_sets + set_id) % n_banks).astype(jnp.int32)
+        inpkg_row = (addr // (shape.inpkg_sets * 8)) % 1024
 
         bank_free, open_row = state.inpkg_bank_free, state.inpkg_open_row
 
-        if cfg.search_tags:
-            # SEARCH in CAM bank: occupancy tCCD, latency tRCD+tCAS+tBL.
-            s_start = jnp.maximum(arrival, bank_free[cam_bank])
-            s_done = s_start + (t.tRCD + t.tCAS + t.tBL)
-            bank_free = bank_free.at[cam_bank].set(
-                jnp.where(miss, s_start + t.tCCD, bank_free[cam_bank]))
-            tag_done = jnp.where(miss, s_done, arrival)
-            stats = bump(stats, "inpkg_searches", miss.astype(jnp.int32))
-        else:
-            # Tag READ in the data bank (Loh-Hill compound access).
-            bf2, or2, tag_done_r = _access(bank_free, open_row, ram_bank,
+        # Tag check: both flavors are computed from the same pre-access
+        # state and selected on dyn.search_tags.
+        # (a) SEARCH in CAM bank: occupancy tCCD, latency tRCD+tCAS+tBL.
+        s_start = jnp.maximum(arrival, bank_free[cam_bank])
+        s_done = s_start + (t.tRCD + t.tCAS + t.tBL)
+        bf_search = bank_free.at[cam_bank].set(
+            jnp.where(miss, s_start + t.tCCD, bank_free[cam_bank]))
+        # (b) Tag READ in the data bank (Loh-Hill compound access).
+        bf_tr, or_tr, tag_done_r = _access(bank_free, open_row, ram_bank,
                                            inpkg_row, arrival, t, False)
-            bank_free = jnp.where(miss, bf2, bank_free)
-            open_row = jnp.where(miss, or2, open_row)
-            tag_done = jnp.where(miss, tag_done_r, arrival)
-            stats = bump(stats, "inpkg_reads", miss.astype(jnp.int32))
+        bf_tag = jnp.where(miss, bf_tr, bank_free)
+        or_tag = jnp.where(miss, or_tr, open_row)
+
+        bank_free = jnp.where(dyn.search_tags, bf_search, bf_tag)
+        open_row = jnp.where(dyn.search_tags, open_row, or_tag)
+        tag_done = jnp.where(miss,
+                             jnp.where(dyn.search_tags, s_done, tag_done_r),
+                             arrival)
+        stats = bump(stats, "inpkg_searches",
+                     (miss & dyn.search_tags).astype(jnp.int32))
+        stats = bump(stats, "inpkg_reads",
+                     (miss & ~dyn.search_tags).astype(jnp.int32))
 
         # Data read on hit.
         bf3, or3, data_done = _access(bank_free, open_row, ram_bank,
@@ -345,15 +453,14 @@ def make_step(cfg: SimConfig):
         # The legacy allocate-on-miss path (baselines) installs now.
         cache = state.cache
         wstate = state.wear
-        do_install_miss = inpkg_miss & (not cfg.no_allocate)
+        do_install_miss = inpkg_miss & dyn.allocate_on_miss
 
         # ---- L3 eviction handling (install / forward / drop, §8) ---------
-        if cfg.dr_filter:
-            inst, fwd = wear.install_decision(ev_dirty, ev_read)
-        else:
-            # plain writeback cache: dirty evictions update the in-package
-            # copy; clean evictions are dropped (fills happened on miss).
-            inst, fwd = ev_dirty, jnp.asarray(False)
+        inst_dr, fwd_dr = wear.install_decision(ev_dirty, ev_read)
+        # plain writeback cache (no D/R filter): dirty evictions update the
+        # in-package copy; clean evictions are dropped (fills on miss).
+        inst = jnp.where(dyn.dr_filter, inst_dr, ev_dirty)
+        fwd = jnp.where(dyn.dr_filter, fwd_dr, False)
         ev_install = ev_valid & inst & ~locked
         ev_forward = ev_valid & (fwd | locked) & ev_dirty
         # Write traffic removed from the in-package memory by the D/R rules:
@@ -362,9 +469,9 @@ def make_step(cfg: SimConfig):
         stats = bump(stats, "writes_filtered",
                      (ev_valid & ~inst).astype(jnp.int32))
 
-        ev_set_log = (ev_addr % cfg.inpkg_sets).astype(jnp.int32)
-        ev_set = ((ev_set_log + off) % cfg.inpkg_sets).astype(jnp.int32)
-        ev_tag_c = ev_addr // cfg.inpkg_sets
+        ev_set_log = (ev_addr % shape.inpkg_sets).astype(jnp.int32)
+        ev_set = ((ev_set_log + off) % shape.inpkg_sets).astype(jnp.int32)
+        ev_tag_c = ev_addr // shape.inpkg_sets
         # Install into in-package cache (a XAM/DRAM write).
         install_any = ev_install | do_install_miss
         inst_set = jnp.where(ev_install, ev_set, set_id)
@@ -381,7 +488,7 @@ def make_step(cfg: SimConfig):
         # Charge the write on the RAM bank (occupancy tWR — the RRAM pain).
         w_bank = ((inst_tag + inst_set) % n_banks).astype(jnp.int32)
         w_start = jnp.maximum(arrival, bank_free[w_bank])
-        w_occ = jnp.int32(max(t.tCCD, t.tWR))
+        w_occ = jnp.maximum(t.tCCD, t.tWR).astype(jnp.int32)
         bank_free = bank_free.at[w_bank].set(
             jnp.where(install_any, w_start + w_occ, bank_free[w_bank]))
 
@@ -394,14 +501,18 @@ def make_step(cfg: SimConfig):
         stats = bump(stats, "ddr_writes", ddr_w.astype(jnp.int32))
 
         # ---- wear accounting + rotation ----------------------------------
-        if cfg.wear_enabled:
+        # Computed for every lane, applied only when (install_any &
+        # wear_enabled) — matching the former Python-level branch; a
+        # statically wear-free batch skips the whole block.
+        if wear_on:
             wstate2, rotated, flushed = wear.record_write(
-                wstate, wcfg, inst_set, inst_dirty, arrival)
+                wstate, wdyn, inst_set, inst_dirty, arrival)
+            wear_apply = install_any & dyn.wear_enabled
             wstate = jax.tree.map(
-                lambda a, b: jnp.where(install_any, b, a), wstate, wstate2)
-            rot_now = install_any & rotated
+                lambda a, b: jnp.where(wear_apply, b, a), wstate, wstate2)
+            rot_now = wear_apply & rotated
             # On rotation: invalidate dirty sets (flush); charge writebacks.
-            set_mask = (state.cache.dirty.sum(axis=1) > 0)
+            set_mask = controller.dirty_set_mask(state.cache)
             cache3, n_flush = controller.cache_invalidate_sets(cache, set_mask)
             cache = jax.tree.map(
                 lambda a, b: jnp.where(rot_now, b, a), cache, cache3)
@@ -434,13 +545,23 @@ def make_step(cfg: SimConfig):
     return step
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _run(cfg: SimConfig, addrs: jnp.ndarray, is_write: jnp.ndarray):
-    state = init_state(cfg)
-    step = make_step(cfg)
-    final, completions = jax.lax.scan(
-        step, state, {"addr": addrs, "is_write": is_write})
-    return final, completions
+def _scan(shape: SimShape, wear_on: bool, dyn: DynParams, addrs, is_write):
+    state = init_state(shape)
+    step = make_step(shape, dyn, wear_on)
+    return jax.lax.scan(step, state, {"addr": addrs, "is_write": is_write})
+
+
+@partial(jax.jit, static_argnames=("shape", "wear_on"))
+def _run_dyn(shape: SimShape, wear_on: bool, dyn: DynParams, addrs, is_write):
+    return _scan(shape, wear_on, dyn, addrs, is_write)
+
+
+@partial(jax.jit, static_argnames=("shape", "wear_on"))
+def _run_grid(shape: SimShape, wear_on: bool, dyn_stack: DynParams,
+              addrs, is_write):
+    """One vmapped scan over a whole (config x trace) grid: ``dyn_stack``
+    leaves and the trace arrays all carry a leading grid axis."""
+    return jax.vmap(partial(_scan, shape, wear_on))(dyn_stack, addrs, is_write)
 
 
 @dataclasses.dataclass
@@ -456,15 +577,11 @@ class SimResult:
         return h / max(h + m, 1)
 
 
-def simulate_trace(cfg: SimConfig, addrs, is_write,
-                   return_state: bool = False):
-    addrs = jnp.asarray(addrs, jnp.int32)
-    is_write = jnp.asarray(is_write, bool)
-    final, completions = _run(cfg, addrs, is_write)
-    total = float(jnp.max(completions))
-    # Refresh tax: DRAM loses a bandwidth fraction.
+def _finish(cfg: SimConfig, max_completion, stats_row) -> SimResult:
+    """Shared post-processing: refresh bandwidth tax + Table 1 energy."""
+    total = float(max_completion)
     total *= 1.0 / (1.0 - cfg.timing.refresh_overhead)
-    stats = {n: int(final.stats[i]) for i, n in enumerate(STAT_NAMES)}
+    stats = {n: int(stats_row[i]) for i, n in enumerate(STAT_NAMES)}
     e = TABLE1[cfg.energy_tech]
     ddr_e = TABLE1["DRAM"]
     energy = (
@@ -476,7 +593,99 @@ def simulate_trace(cfg: SimConfig, addrs, is_write,
     # DRAM static/refresh energy tax (per §10.2's energy trends).
     if cfg.timing.needs_refresh:
         energy *= 1.30
-    result = SimResult(cfg.name, total, stats, energy)
+    return SimResult(cfg.name, total, stats, energy)
+
+
+def simulate_trace(cfg: SimConfig, addrs, is_write,
+                   return_state: bool = False):
+    addrs = jnp.asarray(addrs, jnp.int32)
+    is_write = jnp.asarray(is_write, bool)
+    final, completions = _run_dyn(shape_of(cfg), cfg.wear_enabled,
+                                  dyn_params(cfg), addrs, is_write)
+    result = _finish(cfg, jnp.max(completions), final.stats)
     if return_state:
         return result, final
     return result
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-config grid.
+# ---------------------------------------------------------------------------
+
+def _shard_grid(tree, grid_size: int):
+    """Shard the leading grid axis across this host's JAX devices (no-op on
+    a single device or when the grid does not divide)."""
+    from repro.launch import mesh as mesh_mod
+    mesh = mesh_mod.make_grid_mesh(grid_size)
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.device_put(tree, NamedSharding(mesh, P("grid")))
+
+
+def simulate_grid(cfgs, trace_list, *, return_state: bool = False,
+                  shard: bool = True):
+    """Run every (config, trace) pair through vmapped scans.
+
+    ``cfgs``: dict name -> SimConfig, or an iterable of SimConfigs (their
+    ``.name`` is used).  ``trace_list``: iterable of (name, addrs, is_write);
+    all traces must share one length.  Configs are grouped into shape
+    families (identical array shapes); each family's whole config x trace
+    sub-grid runs as ONE vmapped ``lax.scan`` — no per-config Python loop.
+
+    Returns dict[(cfg_name, trace_name)] -> SimResult, plus a dict of final
+    SimStates (same keys) when ``return_state``.
+    """
+    named = list(cfgs.items()) if isinstance(cfgs, dict) \
+        else [(c.name, c) for c in cfgs]
+    tr = [(n, jnp.asarray(a, jnp.int32), jnp.asarray(w, bool))
+          for n, a, w in trace_list]
+    if not named or not tr:
+        return ({}, {}) if return_state else {}
+    n_req = int(tr[0][1].shape[0])
+    for n, a, _ in tr:
+        if int(a.shape[0]) != n_req:
+            raise ValueError(f"trace {n!r} length {a.shape[0]} != {n_req}; "
+                             "grid traces must share one length")
+    addrs_all = jnp.stack([a for _, a, _ in tr])      # (n_traces, T)
+    wr_all = jnp.stack([w for _, _, w in tr])
+    n_traces = len(tr)
+
+    families: dict[SimShape, list[tuple[str, SimConfig]]] = {}
+    for cname, cfg in named:
+        families.setdefault(shape_of(cfg), []).append((cname, cfg))
+
+    results: dict[tuple[str, str], SimResult] = {}
+    states: dict[tuple[str, str], SimState] = {}
+    for shape, fam in families.items():
+        # Grid layout is config-major: lane i*n_traces + j = (cfg i, trace j).
+        dyn_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[dyn_params(cfg) for _, cfg in fam])
+        dyn_stack = jax.tree.map(
+            lambda x: jnp.repeat(x, n_traces, axis=0), dyn_stack)
+        a_g = jnp.tile(addrs_all, (len(fam), 1))
+        w_g = jnp.tile(wr_all, (len(fam), 1))
+        if shard:
+            dyn_stack, a_g, w_g = _shard_grid(
+                (dyn_stack, a_g, w_g), len(fam) * n_traces)
+        wear_on = any(cfg.wear_enabled for _, cfg in fam)
+        finals, completions = _run_grid(shape, wear_on, dyn_stack, a_g, w_g)
+        max_comp = np.asarray(jnp.max(completions, axis=1))
+        stats_np = np.asarray(finals.stats)
+        for i, (cname, cfg) in enumerate(fam):
+            for j, (tname, _, _) in enumerate(tr):
+                g = i * n_traces + j
+                results[(cname, tname)] = _finish(cfg, max_comp[g],
+                                                  stats_np[g])
+                if return_state:
+                    states[(cname, tname)] = jax.tree.map(
+                        lambda x: x[g], finals)
+    if return_state:
+        return results, states
+    return results
+
+
+def n_shape_families(cfgs) -> int:
+    """How many compiled scans a ``simulate_grid`` over ``cfgs`` needs."""
+    named = cfgs.values() if isinstance(cfgs, dict) else cfgs
+    return len({shape_of(c) for c in named})

@@ -61,6 +61,32 @@ def make_config(n_supersets: int, m_writes: int = 3,
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class WearDyn:
+    """Dynamic (traced) wear knobs — the batched simulator stacks one of
+    these per config and ``jax.vmap``s over them, so the durability
+    parameters (M, counter limits, window length) become data rather than
+    compile-time constants.  Field names mirror the ``WearConfig``
+    attributes ``record_write``/``rotate_signal``/``wr_signal`` read, so
+    either can be passed as ``cfg``; only ``n_supersets`` (an array shape)
+    must stay static."""
+    window_write_budget: jnp.ndarray   # scalar int32 = blocks/superset * M
+    dc_limit: jnp.ndarray              # scalar int32
+    wc_limit: jnp.ndarray              # scalar int32
+    wr_shift: jnp.ndarray              # scalar int32
+    t_mww_cycles: jnp.ndarray          # scalar int32
+
+
+def dyn_of(cfg: WearConfig) -> WearDyn:
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+    return WearDyn(
+        window_write_budget=i32(cfg.window_write_budget),
+        dc_limit=i32(cfg.dc_limit), wc_limit=i32(cfg.wc_limit),
+        wr_shift=i32(cfg.wr_shift), t_mww_cycles=i32(cfg.t_mww_cycles),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class WearState:
     swt_w: jnp.ndarray          # (S,) int8 — written flag
     swt_d: jnp.ndarray          # (S,) int8 — dirty flag
@@ -131,7 +157,9 @@ def record_write(state: WearState, cfg: WearConfig, superset: jnp.ndarray,
     cycle = cycle.astype(jnp.int32)
 
     # --- t_MWW window ----------------------------------------------------
-    win = jnp.int32(max(cfg.t_mww_cycles, 1))
+    # jnp.maximum (not Python max): t_mww_cycles may be a traced scalar
+    # when the batched simulator passes a WearDyn.
+    win = jnp.maximum(jnp.asarray(cfg.t_mww_cycles, jnp.int32), 1)
     expired = (cycle - state.window_start[s]) >= win
     w_writes = jnp.where(expired, 0, state.window_writes[s])
     w_start = jnp.where(expired, cycle, state.window_start[s])

@@ -11,6 +11,7 @@ recorded per app so the calibration is inspectable.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -92,7 +93,9 @@ def generate(spec: TraceSpec, seed: int = 0):
 
 def _gen_thread(spec: TraceSpec, seed: int = 0):
     """One thread's stream (shared footprint + shared conflict family)."""
-    rng = np.random.default_rng(seed + hash(spec.name) % (2 ** 16))
+    # crc32, NOT hash(): str hashing is salted per process, which silently
+    # made every trace (and so every benchmark number) run-dependent.
+    rng = np.random.default_rng(seed + zlib.crc32(spec.name.encode()) % (2 ** 16))
     n = max(spec.n_requests // N_THREADS, 1024)
     # power-law base stream over the footprint
     base = rng.zipf(spec.zipf_a, n).astype(np.int64) % spec.footprint_blocks

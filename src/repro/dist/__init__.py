@@ -1,0 +1,6 @@
+"""Distribution layer: partition-spec rules, atomic checkpoints, gradient
+compression, elastic restart, and straggler handling.
+
+Every module is importable on a single-host CPU rig (tests run there); the
+same code drives the 512-device dry-run meshes.
+"""

@@ -1,0 +1,114 @@
+"""Atomic-publish checkpoints: write to ``step_N.tmp``, fsync, rename.
+
+A checkpoint directory holds ``step_<N>/`` dirs; each contains one
+``leaf_<i>.npy`` per pytree leaf (template order) plus ``manifest.json``.
+A step dir WITHOUT a manifest is an unfinished writer crash and is ignored
+by readers and eventually garbage-collected by writers — that is the whole
+crash-safety story: the rename is the publish.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+_PREFIX = "step_"
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"{_PREFIX}{step}")
+
+
+def published_steps(root: str) -> list[int]:
+    """Sorted steps with a complete (manifest-bearing) checkpoint."""
+    if not os.path.isdir(root):
+        return []
+    steps = []
+    for name in os.listdir(root):
+        if not name.startswith(_PREFIX) or name.endswith(".tmp"):
+            continue
+        try:
+            step = int(name[len(_PREFIX):])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(root, name, MANIFEST)):
+            steps.append(step)
+    return sorted(steps)
+
+
+def _gc(root: str, keep_last: int | None) -> None:
+    """Remove crashed-writer droppings and over-retention checkpoints."""
+    for name in os.listdir(root):
+        if name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+    if keep_last is not None:
+        for step in published_steps(root)[:-keep_last]:
+            shutil.rmtree(_step_dir(root, step), ignore_errors=True)
+
+
+def save(root: str, step: int, state, keep_last: int | None = None,
+         process_index: int | None = None) -> str:
+    """Publish ``state`` at ``step``; returns the published directory.
+
+    Only process 0 writes in a multi-process run (every process may call
+    this; non-zero writers return the would-be path without touching disk).
+    """
+    if process_index is None:
+        process_index = jax.process_index()
+    final = _step_dir(root, step)
+    if process_index != 0:
+        return final
+    os.makedirs(root, exist_ok=True)
+    tmp = final + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    leaves = jax.tree.leaves(state)
+    for i, leaf in enumerate(leaves):
+        with open(os.path.join(tmp, f"leaf_{i}.npy"), "wb") as f:
+            np.save(f, np.asarray(leaf))
+            f.flush()
+            os.fsync(f.fileno())
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves)}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    shutil.rmtree(final, ignore_errors=True)
+    os.rename(tmp, final)        # the atomic publish
+    # Make the rename itself durable before gc deletes older steps —
+    # otherwise a crash can surface the new dir with stale data blocks
+    # while the previous complete checkpoint is already gone.
+    dirfd = os.open(root, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
+    _gc(root, keep_last)
+    return final
+
+
+def restore(root: str, step: int, template):
+    """Load the checkpoint at ``step`` into ``template``'s structure."""
+    d = _step_dir(root, step)
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    treedef = jax.tree.structure(template)
+    n = treedef.num_leaves
+    if manifest["n_leaves"] != n:
+        raise ValueError(
+            f"checkpoint at {d} has {manifest['n_leaves']} leaves; "
+            f"template expects {n}")
+    leaves = [np.load(os.path.join(d, f"leaf_{i}.npy")) for i in range(n)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def restore_latest(root: str, template):
+    """(step, state) of the newest published checkpoint, or (0, None)."""
+    steps = published_steps(root)
+    if not steps:
+        return 0, None
+    step = steps[-1]
+    return step, restore(root, step, template)

@@ -1,0 +1,42 @@
+"""Elastic rescaling: resume the newest checkpoint onto whatever mesh the
+current launch has, and re-split the global batch over the worker count.
+
+The checkpoint format is topology-free (host numpy per leaf), so a run
+killed on N devices restarts on M by restoring and letting GSPMD place the
+arrays under the new mesh's shardings.  Every resume appends a record to
+``scale_events.jsonl`` so rescale history is auditable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.dist import checkpoint
+
+
+def elastic_batch(global_batch: int, n_workers: int) -> tuple[int, int]:
+    """(per_worker, used_global): the largest even split not exceeding the
+    requested global batch — never below 1 per worker, so a shrink-below-
+    batch-size event rounds the effective batch UP to one per worker."""
+    per = max(global_batch // n_workers, 1)
+    return per, per * n_workers
+
+
+def resume_elastic(ckpt_dir: str, template, mesh, run_dir: str | None = None):
+    """(step, state-or-None) from the newest checkpoint, logging the
+    rescale event.  ``mesh`` is the CURRENT launch topology."""
+    step, restored = checkpoint.restore_latest(ckpt_dir, template)
+    event = {
+        "time_unix": round(time.time(), 3),
+        "step": step,
+        "restored": restored is not None,
+        "n_devices": int(mesh.devices.size),
+        "mesh_axes": dict(zip(mesh.axis_names,
+                              [int(s) for s in mesh.devices.shape])),
+    }
+    log_dir = run_dir or ckpt_dir
+    os.makedirs(log_dir, exist_ok=True)
+    with open(os.path.join(log_dir, "scale_events.jsonl"), "a") as f:
+        f.write(json.dumps(event) + "\n")
+    return step, restored

@@ -34,3 +34,15 @@ def make_host_mesh() -> Mesh:
     """Whatever this host has (tests / examples): (1, N) data x model."""
     devices = jax.devices()
     return Mesh(np.asarray(devices).reshape(len(devices), 1), ("data", "model"))
+
+
+def make_grid_mesh(grid_size: int) -> Mesh | None:
+    """1-D mesh over this host's devices for the batched simulator's
+    config x trace grid axis.  Returns None when sharding cannot help
+    (single device) or cannot be even (grid not divisible by device
+    count) — callers fall back to an unsharded vmap."""
+    devices = jax.devices()
+    n = len(devices)
+    if n <= 1 or grid_size % n != 0:
+        return None
+    return Mesh(np.asarray(devices), ("grid",))

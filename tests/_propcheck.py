@@ -1,0 +1,116 @@
+"""Deterministic fallback for ``hypothesis`` so the property tests still
+exercise their core assertions from a clean checkout (no test extras
+installed).
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+
+The shim implements exactly the strategy surface this repo uses
+(``st.integers``, ``st.sampled_from``): each strategy carries a small fixed
+list of example values (bounds, near-bounds, and seeded pseudo-random
+interior points — derived from the bounds only, so runs are reproducible),
+and ``given`` expands into a loop over those cases.  This is NOT a property
+tester — no shrinking, no coverage-guided generation — it is a
+deterministic-cases harness that keeps the assertions live; CI installs
+real hypothesis via the ``test`` extra.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+N_INTERIOR = 5   # seeded interior points per integer strategy
+
+
+class Strategy:
+    def __init__(self, examples):
+        # dedupe, preserve order
+        self.examples = list(dict.fromkeys(examples))
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    """Bounds, near-bounds, midpoint, and a few seeded interior values."""
+    if min_value > max_value:
+        raise ValueError("empty integer range")
+    pts = [min_value, max_value, min_value + 1, max_value - 1,
+           (min_value + max_value) // 2]
+    # Seed from the bounds so the cases depend only on the strategy, never
+    # on call order or process state.
+    rng = np.random.default_rng([min_value & 0xFFFFFFFF,
+                                 max_value & 0xFFFFFFFF, 0x9E3779B9])
+    pts += [int(v) for v in
+            rng.integers(min_value, max_value + 1, N_INTERIOR, np.int64)]
+    return Strategy([p for p in pts if min_value <= p <= max_value])
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from of empty collection")
+    return Strategy(elements)
+
+
+def booleans() -> Strategy:
+    return Strategy([False, True])
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+strategies = _StrategiesNamespace()
+st = strategies
+
+
+def settings(*_args, **_kwargs):
+    """No-op stand-in for ``hypothesis.settings``."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**named_strategies):
+    """Run the test over a deterministic case matrix.
+
+    Cases = round-robin alignment of each strategy's example list (so the
+    case count is the LONGEST list, not the product — mirrors hypothesis's
+    bounded example budget), plus the all-first and all-last corners.
+    """
+    for name, strat in named_strategies.items():
+        if not isinstance(strat, Strategy):
+            raise TypeError(f"{name}: expected _propcheck.Strategy, "
+                            f"got {type(strat).__name__}")
+
+    names = list(named_strategies)
+    lists = [named_strategies[n].examples for n in names]
+    n_cases = max(len(ex) for ex in lists)
+    cases = [tuple(ex[i % len(ex)] for ex in lists) for i in range(n_cases)]
+    cases.append(tuple(ex[0] for ex in lists))
+    cases.append(tuple(ex[-1] for ex in lists))
+    cases = list(dict.fromkeys(cases))
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            for case in cases:
+                try:
+                    fn(*args, **dict(zip(names, case)), **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"deterministic case {dict(zip(names, case))!r} "
+                        f"failed: {e}") from e
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (functools.wraps copies the full signature otherwise).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for pname, p in sig.parameters.items() if pname not in names])
+        return wrapper
+    return deco

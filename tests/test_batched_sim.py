@@ -1,0 +1,118 @@
+"""Batched multi-config simulation engine tests: the vmapped grid must
+bit-match the single-config ``simulate_trace`` path, across shape families
+and dynamic-parameter differences (timing, policy flags, wear knobs)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.data import traces
+
+
+def _cfgs():
+    cfgs = simulator.baseline_configs(scale_blocks=512)
+    for name in list(cfgs):
+        cfgs[name] = dataclasses.replace(cfgs[name], l3_sets=16)
+        if cfgs[name].wear_enabled:
+            cfgs[name] = dataclasses.replace(
+                cfgs[name], t_mww_cycles=(1 << 12) * cfgs[name].m_writes,
+                dc_limit=32, window_budget_blocks=16)
+    return cfgs
+
+
+def _trace_list(cfgs, n_traces=2, n_requests=3_000):
+    specs = traces.crono_nas_specs(cfgs["monarch_unbound"].inpkg_blocks,
+                                   n_requests)
+    picked = [specs[0], specs[-1]][:n_traces]   # BC (graph) + EP (writes)
+    return [(s.name, *traces.generate(s)) for s in picked]
+
+
+# The C1/C3/C7 claim configs: the D-Cache baseline, Monarch unbounded, and
+# the bounded M=3 system (wear machinery on) — plus s_cache for a second
+# shape family with CAM search under CMOS timing.
+GRID_SYSTEMS = ["d_cache", "s_cache", "monarch_unbound", "monarch_m3"]
+
+
+def test_grid_bitmatches_single_config_path():
+    cfgs = _cfgs()
+    sub = {n: cfgs[n] for n in GRID_SYSTEMS}
+    trace_list = _trace_list(cfgs)
+    grid = simulator.simulate_grid(sub, trace_list)
+    assert set(grid) == {(c, t) for c in sub for t, _, _ in trace_list}
+    for tname, addrs, wr in trace_list:
+        for cname in sub:
+            single = simulator.simulate_trace(sub[cname], addrs, wr)
+            batched = grid[(cname, tname)]
+            assert batched.stats == single.stats, (cname, tname)
+            assert batched.total_cycles == single.total_cycles, (cname, tname)
+            assert batched.energy_nj == pytest.approx(single.energy_nj,
+                                                      rel=0, abs=1e-9)
+
+
+def test_grid_final_states_match_single_config():
+    cfgs = _cfgs()
+    sub = {n: cfgs[n] for n in ("monarch_m3",)}
+    trace_list = _trace_list(cfgs, n_traces=2)
+    _, states = simulator.simulate_grid(sub, trace_list, return_state=True)
+    for tname, addrs, wr in trace_list:
+        _, st_single = simulator.simulate_trace(
+            sub["monarch_m3"], addrs, wr, return_state=True)
+        st_grid = states[("monarch_m3", tname)]
+        np.testing.assert_array_equal(np.asarray(st_grid.set_writes),
+                                      np.asarray(st_single.set_writes))
+        np.testing.assert_array_equal(np.asarray(st_grid.set_way_writes),
+                                      np.asarray(st_single.set_way_writes))
+        np.testing.assert_array_equal(
+            np.asarray(st_grid.wear.offsets.rotate_count),
+            np.asarray(st_single.wear.offsets.rotate_count))
+
+
+def test_shape_families_group_compatible_configs():
+    cfgs = _cfgs()
+    # All four Monarch M systems + unbound share one compiled shape.
+    monarchs = [cfgs[f"monarch_m{m}"] for m in (1, 2, 3, 4)]
+    monarchs.append(cfgs["monarch_unbound"])
+    assert simulator.n_shape_families(monarchs) == 1
+    # The DRAM pair shares a family; s_cache is its own.
+    assert simulator.n_shape_families(
+        [cfgs["d_cache"], cfgs["d_cache_ideal"]]) == 1
+    assert simulator.n_shape_families(
+        [cfgs["d_cache"], cfgs["s_cache"]]) == 2
+
+
+def test_grid_rejects_mismatched_trace_lengths():
+    cfgs = _cfgs()
+    a = np.zeros(100, np.int64)
+    w = np.zeros(100, bool)
+    with pytest.raises(ValueError, match="length"):
+        simulator.simulate_grid(
+            {"d_cache": cfgs["d_cache"]},
+            [("t0", a, w), ("t1", a[:50], w[:50])])
+
+
+def test_dyn_params_roundtrip_flags():
+    cfgs = _cfgs()
+    for name, cfg in cfgs.items():
+        dyn = simulator.dyn_params(cfg)
+        assert bool(dyn.search_tags) == cfg.search_tags, name
+        assert bool(dyn.allocate_on_miss) == (not cfg.no_allocate), name
+        assert bool(dyn.wear_enabled) == cfg.wear_enabled, name
+        assert bool(dyn.dr_filter) == cfg.dr_filter, name
+        assert int(dyn.wear.t_mww_cycles) == cfg.t_mww_cycles, name
+
+
+def test_trace_generation_is_process_stable():
+    """Trace content must depend only on (spec, seed) — the seed repo keyed
+    a generator on str hash(), which is salted per process, making every
+    benchmark number run-dependent.  The pinned fingerprint fails if that
+    regresses (or if generation semantics drift silently)."""
+    spec = traces.crono_nas_specs(1024, 2_000)[0]   # BC
+    a1, w1 = traces.generate(spec)
+    a2, w2 = traces.generate(spec)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(w1, w2)
+    assert int(np.int64(a1.sum()) % 1_000_003) == 166957
+    assert int(w1.sum()) == 139

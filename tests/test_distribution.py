@@ -7,7 +7,10 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean checkout: deterministic-cases fallback
+    from _propcheck import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,10 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean checkout: deterministic-cases fallback
+    from _propcheck import given, settings, strategies as st
 
 import jax.numpy as jnp
 
