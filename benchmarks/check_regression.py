@@ -1,0 +1,88 @@
+"""CI perf smoke: compare a fresh ``BENCH_kernels.json`` against the
+committed baseline and fail on large median regressions.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only kernels_bench
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+A kernel regresses when ``current_median > threshold * baseline_median``
+(default threshold 2.0 — interpret-mode medians on shared runners are
+noisy, so only a gross slowdown trips it).  Kernels present in only one
+file are reported but never fatal (new benches land before their baseline
+is refreshed).  Set ``BENCH_WARN_ONLY=1`` to downgrade failures to
+warnings on cold/shared runners; refresh the baseline by copying the
+emitted file over ``benchmarks/baselines/BENCH_kernels.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "baselines", "BENCH_kernels.json")
+DEFAULT_CURRENT = os.path.join(HERE, "BENCH_kernels.json")
+
+
+def load_medians(path: str) -> dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {name: float(t["median"])
+            for name, t in doc.get("timings_us", {}).items()}
+
+
+def compare(baseline: dict[str, float], current: dict[str, float],
+            threshold: float) -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes) as printable lines."""
+    regressions, notes = [], []
+    for name in sorted(set(baseline) | set(current)):
+        if name not in current:
+            notes.append(f"  {name}: in baseline only (bench removed?)")
+            continue
+        if name not in baseline:
+            notes.append(f"  {name}: new bench ({current[name]:.0f} us), "
+                         "no baseline yet")
+            continue
+        ratio = current[name] / max(baseline[name], 1e-9)
+        line = (f"  {name}: {current[name]:.0f} us vs baseline "
+                f"{baseline[name]:.0f} us ({ratio:.2f}x)")
+        if ratio > threshold:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--current", default=DEFAULT_CURRENT)
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when current_median > threshold * baseline")
+    args = ap.parse_args(argv)
+
+    warn_only = os.environ.get("BENCH_WARN_ONLY", "") not in ("", "0")
+    baseline = load_medians(args.baseline)
+    current = load_medians(args.current)
+    regressions, notes = compare(baseline, current, args.threshold)
+
+    print(f"[perf-smoke] baseline: {args.baseline}")
+    print(f"[perf-smoke] current:  {args.current}")
+    for line in notes:
+        print(line)
+    if not regressions:
+        print(f"[perf-smoke] OK: no kernel median regressed "
+              f">{args.threshold:.1f}x")
+        return 0
+    print(f"[perf-smoke] REGRESSIONS (>{args.threshold:.1f}x median):")
+    for line in regressions:
+        print(line)
+    if warn_only:
+        print("[perf-smoke] BENCH_WARN_ONLY set: reporting only, not "
+              "failing (cold-runner mode)")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

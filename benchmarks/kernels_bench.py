@@ -1,10 +1,17 @@
 """Kernel micro-benchmarks: us/call of the three Pallas kernels (interpret
 mode on this CPU rig; the numbers are CI-tracking, not TPU projections) and
-of the MonarchKVIndex batched prefix lookup.  Timing discipline (warmup,
-median-of-k, block_until_ready) comes from ``repro.bench.harness``."""
+of the MonarchKVIndex batched prefix lookup — the device-resident CAM fast
+path (one fused multi-set launch per batch).  Timing discipline (warmup,
+median-of-k, block_until_ready) comes from ``repro.bench.harness``.
+
+``benchmarks/check_regression.py`` compares the emitted medians against the
+committed ``benchmarks/baselines/BENCH_kernels.json``.
+"""
 from __future__ import annotations
 
 import numpy as np
+
+import jax.numpy as jnp
 
 from repro.bench import BenchSizes, emit_json, time_callable
 from repro.kernels.hopscotch import ops as hop_ops
@@ -25,6 +32,20 @@ def run(csv_rows: list[str], quick: bool = False):
     timings["xam_search"] = t
     print(f"xam_search 64q x (64x512): {t.median_us:.0f} us")
     csv_rows.append(f"kernel_xam_search,{t.median_us:.0f},64x512")
+
+    # fused multi-set search: 128 queries over 8 device-resident planes
+    n_sets, r, c = 8, 32, 512
+    planes = jnp.asarray(rng.integers(0, 2, (n_sets, r, c)).astype(np.int8))
+    valid = jnp.asarray(rng.integers(0, 2, (n_sets, c)).astype(np.int8))
+    m_words = rng.integers(0, 2 ** 32, 128, dtype=np.uint32)
+    m_sets = rng.integers(0, n_sets, 128).astype(np.int32)
+    m_bits = xam_ops.words_to_bits_np(m_words, r)
+    t = time_callable(
+        lambda: xam_ops.xam_search_multiset(m_bits, m_sets, planes, valid),
+        reps=reps)
+    timings["xam_multiset"] = t
+    print(f"xam_multiset 128q x 8 sets (32x512): {t.median_us:.0f} us")
+    csv_rows.append(f"kernel_xam_multiset,{t.median_us:.0f},8x32x512")
 
     h, n = 32, 32 * 256
     t_lo = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
@@ -53,8 +74,19 @@ def run(csv_rows: list[str], quick: bool = False):
     t = time_callable(lambda: idx.lookup(toks), warmup=1, reps=reps)
     timings["kv_index_lookup"] = t
     print(f"kv_index lookup 4x256 tokens: {t.median_us:.0f} us "
-          f"(hit rate {idx.hit_rate:.2f})")
+          f"(hit rate {idx.hit_rate:.2f}, "
+          f"{idx.stats.searches} launches/{idx.stats.lookups} lookups)")
     csv_rows.append(f"kv_index_lookup,{t.median_us:.0f},{idx.hit_rate:.2f}")
+
+    # batch scaling: one launch regardless of batch width
+    toks_big = rng.integers(1, 4000, (32, 512)).astype(np.int32)
+    idx.admit(toks_big)
+    idx.admit(toks_big)
+    t = time_callable(lambda: idx.lookup(toks_big), warmup=1, reps=reps)
+    timings["kv_index_lookup_32x512"] = t
+    print(f"kv_index lookup 32x512 tokens: {t.median_us:.0f} us "
+          f"({t.median_us / (32 * 512 // 16):.1f} us/chunk)")
+    csv_rows.append(f"kv_index_lookup_32x512,{t.median_us:.0f},")
 
     emit_json("kernels", {
         "reps": reps,

@@ -5,9 +5,10 @@ serving stack uses them (vLLM-style prefix caching).
     PYTHONPATH=src python examples/serve_prefix_cache.py [--requests 24]
 
 Requests share zipf-distributed prompt prefixes; the index answers "is
-this 16-token chunk's KV already resident?" with one XAM search per set,
-admits chunks under the no-allocate + t_MWW-throttled policy, and rotates
-placement for wear evenness.  Prefill skips the longest cached prefix.
+this 16-token chunk's KV already resident?" with ONE fused multi-set XAM
+search per request batch, admits chunks under the no-allocate +
+t_MWW-throttled policy, and rotates placement for wear evenness.  Prefill
+skips the longest cached prefix.
 """
 from __future__ import annotations
 

@@ -22,6 +22,8 @@ import dataclasses
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.data.pipeline import murmur3_np
 from repro.kernels.hopscotch import ops as hop_ops
 
@@ -52,6 +54,8 @@ class HopscotchTable:
         # +2 windows of pad so windows never wrap (kernel contract too).
         self.keys = np.zeros(n + 2 * self.window, np.uint64)
         self.vals = np.zeros(n + 2 * self.window, np.uint64)
+        self._table_version = getattr(self, "_table_version", 0) + 1
+        self._dev_planes = None     # (version, t_lo, t_hi) device cache
 
     # ------------------------------------------------------------------
     def home(self, key) -> np.ndarray:
@@ -85,6 +89,7 @@ class HopscotchTable:
             self.keys[h + free[0]] = key
             self.vals[h + free[0]] = np.uint64(val)
             self.stats.writes += 1
+            self._table_version += 1
             return True
         # walk forward for a free bucket, then hop it back
         j = h + w
@@ -106,6 +111,7 @@ class HopscotchTable:
                     self.keys[j] = self.keys[k]
                     self.vals[j] = self.vals[k]
                     self.keys[k] = EMPTY
+                    self._table_version += 1
                     self.stats.swaps += 1
                     self.stats.writes += 2
                     j = k
@@ -117,6 +123,7 @@ class HopscotchTable:
         self.keys[j] = key
         self.vals[j] = np.uint64(val)
         self.stats.writes += 1
+        self._table_version += 1
         return True
 
     def _rehash(self):
@@ -128,16 +135,26 @@ class HopscotchTable:
                 self.insert(int(k), int(v))
 
     # ------------------------------------------------------------------
+    def _table_planes(self):
+        """Device-resident uint32 key planes, rebuilt only after inserts
+        dirty the table (read-heavy phases skip the host->device upload)."""
+        if (self._dev_planes is None
+                or self._dev_planes[0] != self._table_version):
+            t_lo = (self.keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+            t_hi = (self.keys >> np.uint64(32)).astype(np.uint32)
+            pad = (-t_lo.shape[0]) % self.window
+            if pad:
+                t_lo = np.pad(t_lo, (0, pad))
+                t_hi = np.pad(t_hi, (0, pad))
+            self._dev_planes = (self._table_version, jnp.asarray(t_lo),
+                                jnp.asarray(t_hi))
+        return self._dev_planes[1], self._dev_planes[2]
+
     def _lookup_window(self, keys: np.ndarray) -> np.ndarray:
         homes = self.home(keys).astype(np.int32)
         lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
         hi = (keys >> np.uint64(32)).astype(np.uint32)
-        t_lo = (self.keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-        t_hi = (self.keys >> np.uint64(32)).astype(np.uint32)
-        pad = (-t_lo.shape[0]) % self.window
-        if pad:
-            t_lo = np.pad(t_lo, (0, pad))
-            t_hi = np.pad(t_hi, (0, pad))
+        t_lo, t_hi = self._table_planes()
         out = hop_ops.hopscotch_lookup(
             t_lo, t_hi, homes, lo, hi, window=self.window)
         return np.asarray(out)
@@ -174,5 +191,5 @@ class HopscotchTable:
                     # hopscotch guarantee: key would have been within window
                     # of its home; empty home-window slot -> miss (with
                     # metadata bitmap the baseline stops here too)
-                    continue
+                    break
         return vals, hits

@@ -98,6 +98,9 @@ def ycsb_ops(cfg: YcsbConfig):
     # writes beyond the keyspace are inserts of fresh keys
     fresh = rng.integers(cfg.n_keys, cfg.n_keys * 2, cfg.n_ops).astype(np.uint64)
     keys = np.where(is_read, keys, (murmur3_np(fresh.astype(np.uint32)).astype(np.uint64) << np.uint64(16)) | fresh)
+    # 0 is the hash-table EMPTY sentinel (murmur3(0) == 0, so rank
+    # multiples of n_keys would produce it)
+    keys = np.where(keys == 0, np.uint64(1), keys)
     return keys, is_read
 
 

@@ -1,0 +1,11 @@
+"""Helpers shared by the kernel packages."""
+from __future__ import annotations
+
+
+def bucket_pow2(n: int, lo: int) -> int:
+    """Next power of two >= max(n, lo) — the recompile-killing bucket
+    policy for ragged query counts (one compiled shape per bucket)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b

@@ -1,19 +1,28 @@
 """Jit'd wrappers for the hopscotch window-lookup kernel."""
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hopscotch.kernel import hopscotch_lookup_pallas
+from repro.kernels.common import bucket_pow2
+from repro.kernels.hopscotch.kernel import BLOCK_Q, hopscotch_lookup_pallas
 from repro.kernels.hopscotch.ref import hopscotch_lookup_ref
 
 _ON_TPU = jax.default_backend() == "tpu"
 
 
 def hopscotch_lookup(table_lo, table_hi, homes, q_lo, q_hi, *, window: int,
+                     block_q: int | None = None,
                      use_kernel: bool = True,
                      interpret: bool | None = None) -> jnp.ndarray:
-    """First-match offset within each query's H-bucket window (-1 = miss)."""
+    """First-match offset within each query's H-bucket window (-1 = miss).
+    The kernel path processes ``block_q`` (default 8) queries per grid
+    step, gather-DMAing all their window tiles together.  The query count
+    is bucketed to a power of two HERE, on the host, so ragged batches
+    reuse a handful of compiled shapes (the jitted kernel specializes on
+    its input shapes)."""
     table_lo = jnp.asarray(table_lo, jnp.uint32)
     table_hi = jnp.asarray(table_hi, jnp.uint32)
     homes = jnp.asarray(homes, jnp.int32)
@@ -23,6 +32,17 @@ def hopscotch_lookup(table_lo, table_hi, homes, q_lo, q_hi, *, window: int,
         return hopscotch_lookup_ref(table_lo, table_hi, homes, q_lo, q_hi, window)
     if interpret is None:
         interpret = not _ON_TPU
-    return hopscotch_lookup_pallas(
+    if block_q is None:
+        block_q = BLOCK_Q
+    q = homes.shape[0]
+    qp = bucket_pow2(q, block_q)
+    if qp != q:
+        # pad rows carry home 0 / key 0 and are sliced off below
+        pad = np.zeros(qp - q, np.int32)
+        homes = jnp.concatenate([homes, jnp.asarray(pad)])
+        q_lo = jnp.concatenate([q_lo, jnp.asarray(pad.view(np.uint32))])
+        q_hi = jnp.concatenate([q_hi, jnp.asarray(pad.view(np.uint32))])
+    out = hopscotch_lookup_pallas(
         table_lo, table_hi, homes, q_lo, q_hi,
-        window=window, interpret=interpret)
+        window=window, block_q=block_q, interpret=interpret)
+    return out[:q]

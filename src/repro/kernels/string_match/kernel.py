@@ -21,11 +21,15 @@ TILE = 4096  # bytes per command (paper: "each search covering upto 4KB")
 def _make_kernel(pattern_len: int, tile: int):
     def kernel(text_ref, halo_ref, pattern_ref, out_ref):
         # (1, tile) current tile, (1, tile) next tile, (1, P_pad) pattern.
+        # Compare in int8 (uint8 -> int8 is a bijection, so equality is
+        # preserved): 8-bit lanes pack 4x denser on the VPU than the old
+        # int32 upcast.
         window = jnp.concatenate([text_ref[...], halo_ref[...]], axis=1)
-        window = window.astype(jnp.int32)
+        window = window.astype(jnp.int8)
+        pat = pattern_ref[...].astype(jnp.int8)
         acc = jnp.ones((1, tile), bool)
         for k in range(pattern_len):  # static unroll: P vector compares
-            acc = acc & (window[:, k:k + tile] == pattern_ref[0, k].astype(jnp.int32))
+            acc = acc & (window[:, k:k + tile] == pat[0, k])
         out_ref[...] = acc.astype(jnp.int8)
     return kernel
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the XAM CAM search — the paper's core primitive
+"""Pallas TPU kernels for the XAM CAM search — the paper's core primitive
 re-thought for the MXU.
 
 Hardware mapping (DESIGN.md §2b): the XAM crossbar answers a search by
@@ -14,9 +14,27 @@ One kernel invocation searches a whole superset tile: a (block_q x R) key
 block is broadcast against (R x block_c) stored columns entirely in VMEM —
 the same "one key vs 512 columns per command" granularity as the paper.
 
+Two scoring paths share the encoding:
+
+* ``int8`` (default): ±1 operands stay int8 and the MXU accumulates into
+  int32 (``preferred_element_type=jnp.int32``) — native int8 MXU rate,
+  exact integer sense-amp compare, no guard band needed.
+* ``f32``: the original float32 path, kept as a fallback flag and pinned
+  bit-identical to int8 by tests/test_kernels.py.
+
 Block shapes are MXU-aligned: block_q multiple of 8 (sublanes), block_c a
 multiple of 128 (lanes); R (key bits, 64 for a Monarch set) rides in one
 block — 64..512 bit keys fit VMEM trivially.
+
+``xam_search_multiset_pallas`` is the device-resident fast path: stored
+bits for ALL sets live on device as one (n_sets, R, C) array, and a whole
+query batch — each query addressed to its own set — is answered by ONE
+``pallas_call``.  Queries are grouped into per-set blocks on the host; the
+per-block set ids ride in SMEM (scalar prefetch) and the BlockSpec
+index_map uses them to DMA exactly the one stored-bit plane and validity
+row each block needs, paged-attention-block-table style.  Validity masking
+and the first-match reduction are fused, so the kernel returns a compact
+(Q, 1) way index (-1 = miss) instead of a (Q, C) bitmap.
 """
 from __future__ import annotations
 
@@ -25,35 +43,52 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_C = 512
+MULTISET_BLOCK_Q = 16  # queries per grid step in the fused multi-set kernel
 
 
-def _xam_search_kernel(keys_ref, data_ref, masks_ref, out_ref):
-    """keys/masks: (bq, R) int8; data: (R, bc) int8; out: (bq, bc) int8."""
-    keys = keys_ref[...].astype(jnp.float32)
-    masks = masks_ref[...].astype(jnp.float32)
-    data = data_ref[...].astype(jnp.float32)
-
-    # ±1 encoding; masked-out key rows contribute 0 current.
-    k_enc = (2.0 * keys - 1.0) * masks          # (bq, R)
-    d_enc = 2.0 * data - 1.0                    # (R, bc)
-    n_sel = jnp.sum(masks, axis=1, keepdims=True)  # (bq, 1) — integer Ref_S
-
+def _match_bitmap(keys, masks, data, scoring: str):
+    """±1-encoded XNOR-current matmul -> (bq, bc) int8 match bitmap."""
+    if scoring == "int8":
+        k_enc = ((2 * keys - 1) * masks).astype(jnp.int8)      # {-1, 0, 1}
+        d_enc = (2 * data - 1).astype(jnp.int8)                # {-1, 1}
+        n_sel = jnp.sum(masks.astype(jnp.int32), axis=1, keepdims=True)
+        score = jax.lax.dot_general(
+            k_enc, d_enc,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )                                        # int8 x int8 -> int32 MXU
+        # Integer sense amp: all-match <=> score == n_sel exactly.
+        return (score >= n_sel).astype(jnp.int8)
+    keys = keys.astype(jnp.float32)
+    masks = masks.astype(jnp.float32)
+    data = data.astype(jnp.float32)
+    k_enc = (2.0 * keys - 1.0) * masks
+    d_enc = 2.0 * data - 1.0
+    n_sel = jnp.sum(masks, axis=1, keepdims=True)
     score = jax.lax.dot_general(
         k_enc, d_enc,
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
-    )                                            # (bq, bc) on the MXU
+    )
     # All-match  <=>  score == n_sel  (sense amp threshold).  0.5 guard band
     # = half the two-unit gap to a single-mismatch column (analog margin).
-    out_ref[...] = (score >= n_sel - 0.5).astype(jnp.int8)
+    return (score >= n_sel - 0.5).astype(jnp.int8)
+
+
+def _xam_search_kernel(keys_ref, data_ref, masks_ref, out_ref, *,
+                       scoring: str):
+    """keys/masks: (bq, R) int8; data: (R, bc) int8; out: (bq, bc) int8."""
+    out_ref[...] = _match_bitmap(
+        keys_ref[...], masks_ref[...], data_ref[...], scoring)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_q", "block_c", "interpret"))
+    jax.jit, static_argnames=("block_q", "block_c", "scoring", "interpret"))
 def xam_search_pallas(
     keys: jnp.ndarray,
     data: jnp.ndarray,
@@ -61,6 +96,7 @@ def xam_search_pallas(
     *,
     block_q: int = DEFAULT_BLOCK_Q,
     block_c: int = DEFAULT_BLOCK_C,
+    scoring: str = "int8",
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Batched masked CAM search.  keys/masks (Q, R), data (R, C) ->
@@ -69,6 +105,7 @@ def xam_search_pallas(
     q, r = keys.shape
     r2, c = data.shape
     assert r == r2 and masks.shape == keys.shape
+    assert scoring in ("int8", "f32"), scoring
 
     bq = min(block_q, _round_up(q, 8))
     bc = min(block_c, _round_up(c, 128))
@@ -81,7 +118,7 @@ def xam_search_pallas(
     data_p = jnp.zeros((r, cp), jnp.int8).at[:, :c].set(data.astype(jnp.int8))
 
     out = pl.pallas_call(
-        _xam_search_kernel,
+        functools.partial(_xam_search_kernel, scoring=scoring),
         grid=(qp // bq, cp // bc),
         in_specs=[
             pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
@@ -93,6 +130,74 @@ def xam_search_pallas(
         interpret=interpret,
     )(keys_p, data_p, masks_p)
     return out[:q, :c]
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-set search: one launch serves a query batch spanning sets.
+# ---------------------------------------------------------------------------
+
+def _xam_multiset_kernel(block_sets_ref,       # (n_qb,) int32 in SMEM
+                         keys_ref, masks_ref,  # (bq, R) int8
+                         plane_ref,            # (1, R, C) int8 — this block's set
+                         valid_ref,            # (1, C) int8
+                         out_ref,              # (bq, 1) int32
+                         *, scoring: str):
+    del block_sets_ref  # consumed by the index maps
+    match = _match_bitmap(
+        keys_ref[...], masks_ref[...], plane_ref[0], scoring)   # (bq, C)
+    live = match * valid_ref[...]                               # fused validity
+    bq, c = live.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
+    big = jnp.int32(c)
+    first = jnp.min(jnp.where(live == 1, pos, big), axis=1, keepdims=True)
+    out_ref[...] = jnp.where(first < big, first, -1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "scoring", "interpret"))
+def xam_search_multiset_pallas(
+    keys: jnp.ndarray,        # (Q, R) int8 — block_q-grouped by set (host)
+    masks: jnp.ndarray,       # (Q, R) int8 — all-zero rows = padding
+    planes: jnp.ndarray,      # (n_sets, R, C) int8 device-resident bits
+    valid: jnp.ndarray,       # (n_sets, C) int8 device-resident validity
+    block_sets: jnp.ndarray,  # (Q // block_q,) int32 set id per query block
+    *,
+    block_q: int = MULTISET_BLOCK_Q,
+    scoring: str = "int8",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One fused launch over a set-grouped query batch.  Returns (Q,) int32
+    first matching *valid* way per query, -1 = miss.  Q must be a multiple
+    of ``block_q`` and every query in block b must belong to set
+    ``block_sets[b]`` (padding rows carry all-zero masks and are ignored by
+    callers)."""
+    q, r = keys.shape
+    n_sets, r2, c = planes.shape
+    assert r == r2 and masks.shape == keys.shape
+    assert valid.shape == (n_sets, c)
+    assert q % block_q == 0 and block_sets.shape == (q // block_q,)
+    assert scoring in ("int8", "f32"), scoring
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, r), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_q, r), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, r, c), lambda i, s: (s[i], 0, 0)),
+            pl.BlockSpec((1, c), lambda i, s: (s[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1), lambda i, s: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_xam_multiset_kernel, scoring=scoring),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, 1), jnp.int32),
+        interpret=interpret,
+    )(block_sets.astype(jnp.int32), keys.astype(jnp.int8),
+      masks.astype(jnp.int8), planes.astype(jnp.int8),
+      valid.astype(jnp.int8))
+    return out[:, 0]
 
 
 def _round_up(x: int, m: int) -> int:

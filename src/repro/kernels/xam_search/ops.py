@@ -1,20 +1,37 @@
-"""Jit'd public wrappers for the XAM search kernel.
+"""Jit'd public wrappers for the XAM search kernels.
 
 ``interpret`` defaults to True on CPU (this rig) and should be False on real
-TPUs; the flag is threaded, never hard-coded in callers.
+TPUs; the flag is threaded, never hard-coded in callers.  ``scoring``
+selects the MXU arithmetic: ``"int8"`` (default — int8 x int8 -> int32
+accumulate) or ``"f32"`` (the original float32 path); the default can be
+flipped rig-wide via ``REPRO_XAM_SCORING=f32``.
 """
 from __future__ import annotations
+
+import os
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.xam_search.kernel import xam_search_pallas
+from repro.kernels.common import bucket_pow2
+from repro.kernels.xam_search.kernel import (
+    MULTISET_BLOCK_Q, xam_search_multiset_pallas, xam_search_pallas)
 from repro.kernels.xam_search.ref import xam_search_ref
 
 _ON_TPU = jax.default_backend() == "tpu"
 
 
+def _resolve_scoring(scoring: str | None) -> str:
+    if scoring is None:
+        scoring = os.environ.get("REPRO_XAM_SCORING", "int8")
+    assert scoring in ("int8", "f32"), scoring
+    return scoring
+
+
 def xam_search(keys, data, masks=None, *, use_kernel: bool = True,
+               scoring: str | None = None,
                interpret: bool | None = None) -> jnp.ndarray:
     """Masked CAM search: (Q,R) keys x (R,C) stored bits -> (Q,C) matches."""
     keys = jnp.asarray(keys, jnp.int8)
@@ -26,7 +43,9 @@ def xam_search(keys, data, masks=None, *, use_kernel: bool = True,
         return xam_search_ref(keys, data, masks)
     if interpret is None:
         interpret = not _ON_TPU
-    return xam_search_pallas(keys, data, masks, interpret=interpret)
+    return xam_search_pallas(keys, data, masks,
+                             scoring=_resolve_scoring(scoring),
+                             interpret=interpret)
 
 
 def xam_match_index(keys, data, masks=None, **kw) -> jnp.ndarray:
@@ -36,6 +55,77 @@ def xam_match_index(keys, data, masks=None, **kw) -> jnp.ndarray:
     return jnp.where(any_m, jnp.argmax(m, axis=1), -1).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-set fast path (device-resident planes, one launch per batch).
+# ---------------------------------------------------------------------------
+
+def group_queries_by_set(set_ids: np.ndarray, n_sets: int,
+                         block_q: int = MULTISET_BLOCK_Q):
+    """Host-side layout for the fused kernel: pack queries into per-set
+    blocks of ``block_q`` and bucket the block count to a power of two (so
+    varying batch sizes hit a handful of compiled shapes, not one each).
+
+    Returns ``(slot, block_sets, padded_q)``: query i goes to padded row
+    ``slot[i]``; grid block b searches set ``block_sets[b]``.
+    """
+    set_ids = np.asarray(set_ids, np.int64)
+    q = set_ids.shape[0]
+    counts = np.bincount(set_ids, minlength=n_sets)
+    blocks_per_set = -(-counts // block_q)          # ceil
+    total_blocks = max(int(blocks_per_set.sum()), 1)
+    n_qb = bucket_pow2(total_blocks, lo=4)
+
+    block_start = np.zeros(n_sets + 1, np.int64)
+    np.cumsum(blocks_per_set, out=block_start[1:])
+    set_start = np.zeros(n_sets + 1, np.int64)
+    np.cumsum(counts, out=set_start[1:])
+
+    order = np.argsort(set_ids, kind="stable")
+    sorted_sets = set_ids[order]
+    rank_in_set = np.arange(q, dtype=np.int64) - set_start[sorted_sets]
+    slot = np.empty(q, np.int64)
+    slot[order] = block_start[sorted_sets] * block_q + rank_in_set
+
+    block_sets = np.zeros(n_qb, np.int32)
+    block_sets[:total_blocks] = np.repeat(
+        np.arange(n_sets, dtype=np.int32), blocks_per_set)
+    return slot, block_sets, n_qb * block_q
+
+
+def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
+                        planes: jnp.ndarray, valid: jnp.ndarray, *,
+                        block_q: int = MULTISET_BLOCK_Q,
+                        scoring: str | None = None,
+                        interpret: bool | None = None) -> np.ndarray:
+    """Batched CAM search across sets in ONE kernel launch.
+
+    key_bits: (Q, R) {0,1} bit rows (host), set_ids: (Q,) int — which of the
+    device-resident (n_sets, R, C) ``planes`` each query searches.  ``valid``
+    (n_sets, C) int8 masks dead columns inside the kernel.  Returns (Q,)
+    int32 first matching valid way per query, -1 = miss.
+    """
+    key_bits = np.asarray(key_bits, np.int8)
+    q, r = key_bits.shape
+    n_sets = planes.shape[0]
+    if interpret is None:
+        interpret = not _ON_TPU
+    slot, block_sets, padded_q = group_queries_by_set(
+        set_ids, n_sets, block_q)
+    keys_p = np.zeros((padded_q, r), np.int8)
+    masks_p = np.zeros((padded_q, r), np.int8)
+    keys_p[slot] = key_bits
+    masks_p[slot] = 1
+    out = xam_search_multiset_pallas(
+        jnp.asarray(keys_p), jnp.asarray(masks_p), planes, valid,
+        jnp.asarray(block_sets), block_q=block_q,
+        scoring=_resolve_scoring(scoring), interpret=interpret)
+    return np.asarray(out)[slot]
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane packing helpers.
+# ---------------------------------------------------------------------------
+
 def words_to_bits(words: jnp.ndarray, n_bits: int = 32) -> jnp.ndarray:
     """(...,) uint words -> (..., n_bits) int8 bit planes (LSB first).
     ``n_bits`` must not exceed the word dtype's width."""
@@ -43,6 +133,14 @@ def words_to_bits(words: jnp.ndarray, n_bits: int = 32) -> jnp.ndarray:
     assert n_bits <= jnp.iinfo(words.dtype).bits, "n_bits exceeds word width"
     shifts = jnp.arange(n_bits, dtype=words.dtype)
     return ((words[..., None] >> shifts) & 1).astype(jnp.int8)
+
+
+def words_to_bits_np(words: np.ndarray, n_bits: int = 32) -> np.ndarray:
+    """Host-side twin of :func:`words_to_bits` (no device round-trip)."""
+    words = np.asarray(words)
+    assert n_bits <= np.iinfo(words.dtype).bits, "n_bits exceeds word width"
+    shifts = np.arange(n_bits, dtype=words.dtype)
+    return ((words[..., None] >> shifts) & 1).astype(np.int8)
 
 
 def bits_to_words(bits: jnp.ndarray) -> jnp.ndarray:

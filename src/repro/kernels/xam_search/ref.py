@@ -32,3 +32,18 @@ def xam_match_index_ref(keys, data, masks) -> jnp.ndarray:
     m = xam_search_ref(keys, data, masks)
     any_m = jnp.any(m == 1, axis=1)
     return jnp.where(any_m, jnp.argmax(m, axis=1), -1).astype(jnp.int32)
+
+
+def xam_search_multiset_ref(keys, masks, set_ids, planes,
+                            valid) -> jnp.ndarray:
+    """Oracle for the fused multi-set search: per query q, the first column
+    of plane ``set_ids[q]`` that is valid and matches under the mask, else
+    -1.  keys/masks (Q, R), planes (n_sets, R, C), valid (n_sets, C)."""
+    keys = keys.astype(jnp.int8)
+    masks = masks.astype(jnp.int8)
+    set_ids = set_ids.astype(jnp.int32)
+    d = planes.astype(jnp.int8)[set_ids]                # (Q, R, C)
+    eq = (keys[:, :, None] == d) | (masks[:, :, None] == 0)
+    m = jnp.all(eq, axis=1) & (valid.astype(jnp.int8)[set_ids] == 1)
+    any_m = jnp.any(m, axis=1)
+    return jnp.where(any_m, jnp.argmax(m, axis=1), -1).astype(jnp.int32)

@@ -3,9 +3,16 @@
 A vLLM-style paged KV prefix cache whose INDEX is a Monarch flat-CAM:
 
 * every 16-token chunk of a request's prefix is fingerprinted (murmur3) and
-  the fingerprints are matched against the resident-block index with ONE
-  XAM search per 512-entry set (kernels/xam_search) instead of a hash-map
-  walk — the exact hash-table-lookup pattern §10.4 accelerates;
+  the whole fingerprint batch is matched against the resident-block index
+  with ONE fused multi-set XAM search (kernels/xam_search) — a single
+  ``pallas_call`` per lookup batch, not a hash-map walk and not a Python
+  loop over sets.  Per-query set ids ride in scalar prefetch and select
+  each query block's stored-bit plane; validity masking is fused into the
+  kernel, so dead ways never produce false hits;
+* the CAM state is device-resident: ``bits`` (n_sets, key_bits, set_ways),
+  ``valid`` and ``fp_of`` live on device and installs update exactly one
+  column via a donated jitted scatter — admission no longer rebuilds a
+  whole (key_bits, set_ways) plane per fingerprint;
 * admission mirrors the paper's cache-mode durability policy (§8):
   - no-allocate on first touch (a block must be seen R times before it is
     admitted — the D̄&R̄ "never accessed" filter),
@@ -21,14 +28,16 @@ A vLLM-style paged KV prefix cache whose INDEX is a Monarch flat-CAM:
   lifetime-bounded admission exactly as §6.2 specifies.
 
 The index is exercised by examples/serve_prefix_cache.py and
-benchmarks/kv_index.py.
+benchmarks/kernels_bench.py.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.data.pipeline import fingerprint_blocks, murmur3_np
@@ -58,18 +67,35 @@ class KVIndexStats:
     throttled: int = 0            # t_MWW window exhausted
     evictions: int = 0
     rotations: int = 0
-    searches: int = 0
+    searches: int = 0             # fused kernel launches (1 per batch)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _install_column(bits, valid, fp_of, s, w, bitcol, fp):
+    """Device-side install: write one CAM column + its valid/fp_of entry."""
+    bits = bits.at[s, :, w].set(bitcol)
+    valid = valid.at[s, w].set(jnp.int8(1))
+    fp_of = fp_of.at[s, w].set(fp)
+    return bits, valid, fp_of
 
 
 class MonarchKVIndex:
-    def __init__(self, cfg: KVIndexConfig = KVIndexConfig(), seed: int = 0):
-        self.cfg = cfg
-        c = cfg
-        # CAM planes: fingerprint bits stored column-wise per set.
+    def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0):
+        # cfg default constructed per instance: a shared KVIndexConfig()
+        # default would alias mutable config across indexes.
+        self.cfg = KVIndexConfig() if cfg is None else cfg
+        c = self.cfg
+        # Device-resident CAM state: fingerprint bits column-wise per set,
+        # plus the validity and fingerprint planes the fused kernel reads.
         self.bits = jnp.zeros((c.n_sets, c.key_bits, c.set_ways), jnp.int8)
-        self.valid = np.zeros((c.n_sets, c.set_ways), bool)
+        self.valid = jnp.zeros((c.n_sets, c.set_ways), jnp.int8)
+        self.fp_of = jnp.zeros((c.n_sets, c.set_ways), jnp.uint32)
+        # Host-side policy state (shadow map + replacement metadata);
+        # valid/fp_of mirrors keep eviction decisions off the device sync
+        # path.
+        self.valid_np = np.zeros((c.n_sets, c.set_ways), bool)
+        self.fp_of_np = np.zeros((c.n_sets, c.set_ways), np.uint32)
         self.slot_of = {}           # fp -> (set, way) (host-side shadow map)
-        self.fp_of = np.zeros((c.n_sets, c.set_ways), np.uint32)
         self.read_after = np.zeros((c.n_sets, c.set_ways), np.int32)
         self.first_touch = {}       # fp -> touch count (pre-admission)
         self.counter = 0            # free-running replacement counter
@@ -86,24 +112,27 @@ class MonarchKVIndex:
 
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
         """tokens: (B, S).  Returns (B, S//16) bool — chunk already cached.
-        One CAM search per distinct set touched."""
+        ONE fused multi-set CAM search for the whole batch."""
         fps = fingerprint_blocks(tokens, CHUNK_TOKENS)
         flat = fps.reshape(-1)
-        sets = self._set_of(flat)
-        hit = np.zeros(flat.shape[0], bool)
         self.stats.lookups += 1
-        for s in np.unique(sets):
-            sel = sets == s
-            keys = xam_ops.words_to_bits(jnp.asarray(flat[sel], jnp.uint32), 32)
-            m = xam_ops.xam_search(keys, self.bits[int(s)])
-            self.stats.searches += 1
-            valid_row = jnp.asarray(self.valid[int(s)][None, :].astype(np.int8))
-            m = np.asarray(m & valid_row)
-            hit[sel] = m.any(axis=1)
+        if flat.size == 0:
+            return np.zeros(fps.shape, bool)
+        sets = self._set_of(flat)
+        key_bits = xam_ops.words_to_bits_np(
+            flat.astype(np.uint32), self.cfg.key_bits)
+        ways = xam_ops.xam_search_multiset(
+            key_bits, sets, self.bits, self.valid)
+        self.stats.searches += 1
+        hit = ways >= 0
         self.stats.chunk_hits += int(hit.sum())
         self.stats.chunk_misses += int((~hit).sum())
         self._account_ops(flat.shape[0])
         return hit.reshape(fps.shape)
+
+    def _shadow_hits(self, flat_fps: np.ndarray) -> np.ndarray:
+        """Oracle for lookup(): hits according to the host shadow map."""
+        return np.asarray([int(fp) in self.slot_of for fp in flat_fps], bool)
 
     # ------------------------------------------------------------------
     def _account_ops(self, n: int):
@@ -142,7 +171,7 @@ class MonarchKVIndex:
         self._install(s, w, fp)
 
     def _pick_way(self, s: int) -> int:
-        free = np.nonzero(~self.valid[s])[0]
+        free = np.nonzero(~self.valid_np[s])[0]
         if free.size:
             return int(free[0])
         ways = self.cfg.set_ways
@@ -151,19 +180,21 @@ class MonarchKVIndex:
         # prefer blocks never re-read after install (D̄&R̄-style victims)
         cold = order[self.read_after[s][order] == 0]
         victim = int(cold[0]) if cold.size else int(order[0])
-        old_fp = self.fp_of[s, victim]
-        self.slot_of.pop(int(old_fp), None)
+        old_fp = int(self.fp_of_np[s, victim])
+        self.slot_of.pop(old_fp, None)
         self.stats.evictions += 1
         self.counter += 1
         return victim
 
     def _install(self, s: int, w: int, fp: np.uint32):
-        bits = xam_ops.words_to_bits(jnp.asarray([fp], jnp.uint32), 32)[0]
-        col = jnp.arange(self.cfg.set_ways) == w
-        plane = jnp.where(col[None, :], bits[:, None], self.bits[s])
-        self.bits = self.bits.at[s].set(plane)
-        self.valid[s, w] = True
-        self.fp_of[s, w] = fp
+        bitcol = jnp.asarray(
+            xam_ops.words_to_bits_np(np.asarray([fp], np.uint32),
+                                     self.cfg.key_bits)[0])
+        self.bits, self.valid, self.fp_of = _install_column(
+            self.bits, self.valid, self.fp_of,
+            jnp.int32(s), jnp.int32(w), bitcol, jnp.uint32(fp))
+        self.valid_np[s, w] = True
+        self.fp_of_np[s, w] = fp
         self.read_after[s, w] = 0
         self.slot_of[int(fp)] = (s, w)
         self.first_touch.pop(int(fp), None)
@@ -184,4 +215,4 @@ class MonarchKVIndex:
 
     def write_distribution(self) -> np.ndarray:
         """Installs per set — wear-evenness metric for tests/benchmarks."""
-        return self.valid.sum(axis=1)
+        return self.valid_np.sum(axis=1)

@@ -13,8 +13,11 @@ except ImportError:  # clean checkout: deterministic-cases fallback
 import jax.numpy as jnp
 
 from repro.kernels.xam_search import ops as xam_ops
-from repro.kernels.xam_search.ref import xam_search_ref, xam_match_index_ref
+from repro.kernels.xam_search.kernel import MULTISET_BLOCK_Q
+from repro.kernels.xam_search.ref import (
+    xam_search_ref, xam_match_index_ref, xam_search_multiset_ref)
 from repro.kernels.hopscotch import ops as hop_ops
+from repro.kernels.hopscotch.kernel import BLOCK_Q as HOP_BLOCK_Q
 from repro.kernels.hopscotch.ref import hopscotch_lookup_ref
 from repro.kernels.string_match import ops as sm_ops
 from repro.kernels.string_match.ref import string_match_ref
@@ -112,6 +115,115 @@ def test_words_bits_roundtrip(rng):
     bits = xam_ops.words_to_bits(jnp.asarray(words), 32)
     back = xam_ops.bits_to_words(bits)
     np.testing.assert_array_equal(np.asarray(back), words)
+    np.testing.assert_array_equal(
+        xam_ops.words_to_bits_np(words, 32), np.asarray(bits))
+
+
+@pytest.mark.parametrize("q,r,c", [(3, 64, 512), (64, 32, 128), (1, 8, 8)])
+def test_xam_int8_and_f32_scoring_bit_identical(q, r, c, rng):
+    """The int8 MXU path and the float32 fallback are pinned equal."""
+    keys = rng.integers(0, 2, (q, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    masks = rng.integers(0, 2, (q, r)).astype(np.int8)
+    got8 = np.asarray(xam_ops.xam_search(keys, data, masks, scoring="int8"))
+    got32 = np.asarray(xam_ops.xam_search(keys, data, masks, scoring="f32"))
+    np.testing.assert_array_equal(got8, got32)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-set xam search
+# ---------------------------------------------------------------------------
+
+def _random_multiset(rng, n_sets, r, c, n_q, plant_every=3):
+    planes = rng.integers(0, 2, (n_sets, r, c)).astype(np.int8)
+    valid = rng.integers(0, 2, (n_sets, c)).astype(np.int8)
+    words = rng.integers(0, 2 ** 32, n_q, dtype=np.uint32)
+    sets = rng.integers(0, n_sets, n_q).astype(np.int32)
+    bits = xam_ops.words_to_bits_np(words, r)
+    for i in range(0, n_q, plant_every):   # guaranteed valid hits
+        w = i % c                          # distinct way per plant in a set
+        planes[sets[i], :, w] = bits[i]
+        valid[sets[i], w] = 1
+    return planes, valid, bits, sets
+
+
+@pytest.mark.parametrize("n_q", [1, 7, 64, 130])
+@pytest.mark.parametrize("scoring", ["int8", "f32"])
+def test_xam_multiset_matches_ref(n_q, scoring, rng):
+    n_sets, r, c = 8, 32, 256
+    planes, valid, bits, sets = _random_multiset(rng, n_sets, r, c, n_q)
+    got = xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid), scoring=scoring)
+    want = np.asarray(xam_search_multiset_ref(
+        jnp.asarray(bits), jnp.ones_like(jnp.asarray(bits)),
+        jnp.asarray(sets), jnp.asarray(planes), jnp.asarray(valid)))
+    np.testing.assert_array_equal(got, want)
+    assert (got[::3] >= 0).all()           # planted hits found
+
+
+def test_xam_multiset_validity_fused(rng):
+    """A matching column with valid=0 must NOT hit (dead-way masking is
+    inside the kernel, not a host-side post-pass)."""
+    n_sets, r, c = 2, 16, 128
+    planes = np.zeros((n_sets, r, c), np.int8)
+    valid = np.zeros((n_sets, c), np.int8)
+    word = np.asarray([0xABCD], np.uint32)
+    bits = xam_ops.words_to_bits_np(word, r)
+    planes[1, :, 5] = bits[0]
+    got = xam_ops.xam_search_multiset(
+        bits, np.asarray([1]), jnp.asarray(planes), jnp.asarray(valid))
+    assert got[0] == -1                    # stored but invalid: miss
+    valid[1, 5] = 1
+    got = xam_ops.xam_search_multiset(
+        bits, np.asarray([1]), jnp.asarray(planes), jnp.asarray(valid))
+    assert got[0] == 5
+
+
+def test_xam_multiset_first_valid_way_wins(rng):
+    n_sets, r, c = 1, 16, 128
+    planes = np.zeros((n_sets, r, c), np.int8)
+    valid = np.zeros((n_sets, c), np.int8)
+    word = np.asarray([77], np.uint32)
+    bits = xam_ops.words_to_bits_np(word, r)
+    for w in (9, 40):
+        planes[0, :, w] = bits[0]
+        valid[0, w] = 1
+    got = xam_ops.xam_search_multiset(
+        bits, np.asarray([0]), jnp.asarray(planes), jnp.asarray(valid))
+    assert got[0] == 9
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_q=st.integers(1, 40), n_sets=st.sampled_from([1, 3, 8]),
+       seed=st.integers(0, 2 ** 31))
+def test_xam_multiset_property(n_q, n_sets, seed):
+    rng = np.random.default_rng(seed)
+    r, c = 16, 128
+    planes, valid, bits, sets = _random_multiset(rng, n_sets, r, c, n_q)
+    got = xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid))
+    want = np.asarray(xam_search_multiset_ref(
+        jnp.asarray(bits), jnp.ones_like(jnp.asarray(bits)),
+        jnp.asarray(sets), jnp.asarray(planes), jnp.asarray(valid)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multiset_grouping_layout(rng):
+    """Every query lands in a block whose block_set matches its set id."""
+    sets = rng.integers(0, 5, 37)
+    bq = MULTISET_BLOCK_Q
+    slot, block_sets, padded_q = xam_ops.group_queries_by_set(sets, 5, bq)
+    assert padded_q % bq == 0 and len(block_sets) == padded_q // bq
+    assert len(np.unique(slot)) == len(slot)       # injective placement
+    for i, s in enumerate(sets):
+        assert block_sets[slot[i] // bq] == s
+
+
+def test_batched_block_sizes_meet_floor():
+    """Acceptance pin: both fused kernels batch >= 8 queries per grid
+    step."""
+    assert MULTISET_BLOCK_Q >= 8
+    assert HOP_BLOCK_Q >= 8
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +252,24 @@ def test_hopscotch_matches_ref(window, n_q, rng):
     np.testing.assert_array_equal(got, want)
     for i in range(0, n_q, 2):  # planted hits found
         assert got[i] >= 0
+
+
+@pytest.mark.parametrize("block_q", [8, 16])
+def test_hopscotch_block_q_equivalent(block_q, rng):
+    """Any per-step batch size yields the same offsets as the oracle."""
+    window, n_q = 16, 27                   # ragged vs both block sizes
+    n_slots = window * 16
+    t_lo = rng.integers(0, 8, n_slots, dtype=np.uint32)   # dense collisions
+    t_hi = rng.integers(0, 2, n_slots, dtype=np.uint32)
+    homes = rng.integers(0, n_slots - 2 * window, n_q).astype(np.int32)
+    q_lo = rng.integers(0, 8, n_q, dtype=np.uint32)
+    q_hi = rng.integers(0, 2, n_q, dtype=np.uint32)
+    got = np.asarray(hop_ops.hopscotch_lookup(
+        t_lo, t_hi, homes, q_lo, q_hi, window=window, block_q=block_q))
+    want = np.asarray(hopscotch_lookup_ref(
+        jnp.asarray(t_lo), jnp.asarray(t_hi), jnp.asarray(homes),
+        jnp.asarray(q_lo), jnp.asarray(q_hi), window))
+    np.testing.assert_array_equal(got, want)
 
 
 def test_hopscotch_first_match_wins(rng):
