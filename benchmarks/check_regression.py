@@ -1,16 +1,26 @@
-"""CI perf smoke: compare a fresh ``BENCH_kernels.json`` against the
-committed baseline and fail on large median regressions.
+"""CI perf/claims smoke: compare fresh ``BENCH_*.json`` artifacts against
+the committed baselines and fail on large regressions.
 
     PYTHONPATH=src python -m benchmarks.run --quick --only kernels_bench
     PYTHONPATH=src python -m benchmarks.check_regression
 
-A kernel regresses when ``current_median > threshold * baseline_median``
-(default threshold 2.0 — interpret-mode medians on shared runners are
-noisy, so only a gross slowdown trips it).  Kernels present in only one
-file are reported but never fatal (new benches land before their baseline
-is refreshed).  Set ``BENCH_WARN_ONLY=1`` to downgrade failures to
-warnings on cold/shared runners; refresh the baseline by copying the
-emitted file over ``benchmarks/baselines/BENCH_kernels.json``.
+Two kinds of coverage:
+
+* ``kernels``: median timings.  A kernel regresses when ``current_median >
+  threshold * baseline_median`` (default threshold 2.0 — interpret-mode
+  medians on shared runners are noisy, so only a gross slowdown trips it).
+* ``fig9`` / ``fig11``: the figure claims (speedups, lifetime-years
+  medians, write-filter fractions) are MODEL OUTPUT, deterministic for a
+  fixed quick sweep — they drift only when the simulator/wear semantics
+  change.  Values are compared both ways against ``--fig-threshold``
+  (default 1.05x), so an unintended durability-model change fails CI even
+  when no kernel slowed down.
+
+Artifacts present in only one file are reported but never fatal (new
+benches land before their baseline is refreshed; a missing figure baseline
+is skipped).  Set ``BENCH_WARN_ONLY=1`` to downgrade failures to warnings
+on cold/shared runners; refresh a baseline by copying the emitted file
+over ``benchmarks/baselines/BENCH_<name>.json``.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ import sys
 HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_BASELINE = os.path.join(HERE, "baselines", "BENCH_kernels.json")
 DEFAULT_CURRENT = os.path.join(HERE, "BENCH_kernels.json")
+FIG_BENCHES = ("fig9", "fig11")
 
 
 def load_medians(path: str) -> dict[str, float]:
@@ -31,8 +42,24 @@ def load_medians(path: str) -> dict[str, float]:
             for name, t in doc.get("timings_us", {}).items()}
 
 
+def load_claims(path: str) -> dict[str, float]:
+    """Numeric figure-claim values (the committed model-output medians)."""
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for k, v in doc.get("claims", {}).items():
+        if isinstance(v, (int, float)):
+            out[f"claims.{k}"] = float(v)
+    # fig11 also pins the per-app lifetime medians
+    for k, v in doc.get("years", {}).items():
+        if isinstance(v, (int, float)):
+            out[f"years.{k}"] = float(v)
+    return out
+
+
 def compare(baseline: dict[str, float], current: dict[str, float],
-            threshold: float) -> tuple[list[str], list[str]]:
+            threshold: float, *, two_sided: bool = False,
+            unit: str = "us") -> tuple[list[str], list[str]]:
     """Returns (regressions, notes) as printable lines."""
     regressions, notes = [], []
     for name in sorted(set(baseline) | set(current)):
@@ -40,16 +67,14 @@ def compare(baseline: dict[str, float], current: dict[str, float],
             notes.append(f"  {name}: in baseline only (bench removed?)")
             continue
         if name not in baseline:
-            notes.append(f"  {name}: new bench ({current[name]:.0f} us), "
-                         "no baseline yet")
+            notes.append(f"  {name}: new bench ({current[name]:.0f} {unit}),"
+                         " no baseline yet")
             continue
-        ratio = current[name] / max(baseline[name], 1e-9)
-        line = (f"  {name}: {current[name]:.0f} us vs baseline "
-                f"{baseline[name]:.0f} us ({ratio:.2f}x)")
-        if ratio > threshold:
-            regressions.append(line)
-        else:
-            notes.append(line)
+        ratio = current[name] / max(abs(baseline[name]), 1e-9)
+        line = (f"  {name}: {current[name]:.4g} {unit} vs baseline "
+                f"{baseline[name]:.4g} {unit} ({ratio:.2f}x)")
+        bad = ratio > threshold or (two_sided and ratio < 1.0 / threshold)
+        (regressions if bad else notes).append(line)
     return regressions, notes
 
 
@@ -59,25 +84,48 @@ def main(argv=None) -> int:
     ap.add_argument("--current", default=DEFAULT_CURRENT)
     ap.add_argument("--threshold", type=float, default=2.0,
                     help="fail when current_median > threshold * baseline")
+    ap.add_argument("--fig-threshold", type=float, default=1.05,
+                    help="two-sided drift bound for fig9/fig11 claim values")
     args = ap.parse_args(argv)
 
     warn_only = os.environ.get("BENCH_WARN_ONLY", "") not in ("", "0")
-    baseline = load_medians(args.baseline)
-    current = load_medians(args.current)
-    regressions, notes = compare(baseline, current, args.threshold)
-
+    regressions, notes = compare(load_medians(args.baseline),
+                                 load_medians(args.current), args.threshold)
     print(f"[perf-smoke] baseline: {args.baseline}")
     print(f"[perf-smoke] current:  {args.current}")
+
+    # Figure-claim drift is DETERMINISTIC model output — unlike the timing
+    # medians it is immune to runner noise, so it stays fatal even under
+    # BENCH_WARN_ONLY.
+    fig_regressions: list[str] = []
+    for fig in FIG_BENCHES:
+        base_p = os.path.join(HERE, "baselines", f"BENCH_{fig}.json")
+        cur_p = os.path.join(HERE, f"BENCH_{fig}.json")
+        if not (os.path.exists(base_p) and os.path.exists(cur_p)):
+            notes.append(f"  {fig}: artifact or baseline missing, skipped")
+            continue
+        r, n = compare(load_claims(base_p), load_claims(cur_p),
+                       args.fig_threshold, two_sided=True, unit="")
+        fig_regressions += [f"  [{fig}]{x.rstrip()}" for x in r]
+        notes += [f"  [{fig}]{x.rstrip()}" for x in n]
+
     for line in notes:
         print(line)
-    if not regressions:
+    if not regressions and not fig_regressions:
         print(f"[perf-smoke] OK: no kernel median regressed "
-              f">{args.threshold:.1f}x")
+              f">{args.threshold:.1f}x, no figure claim drifted "
+              f">{args.fig_threshold:.2f}x")
         return 0
-    print(f"[perf-smoke] REGRESSIONS (>{args.threshold:.1f}x median):")
-    for line in regressions:
-        print(line)
-    if warn_only:
+    if regressions:
+        print(f"[perf-smoke] REGRESSIONS (>{args.threshold:.1f}x median):")
+        for line in regressions:
+            print(line)
+    if fig_regressions:
+        print(f"[perf-smoke] CLAIM DRIFT (>{args.fig_threshold:.2f}x, "
+              "deterministic — always fatal):")
+        for line in fig_regressions:
+            print(line)
+    if warn_only and not fig_regressions:
         print("[perf-smoke] BENCH_WARN_ONLY set: reporting only, not "
               "failing (cold-runner mode)")
         return 0

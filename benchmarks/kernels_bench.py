@@ -13,11 +13,34 @@ import numpy as np
 
 import jax.numpy as jnp
 
+import jax
+
 from repro.bench import BenchSizes, emit_json, time_callable
+from repro.core import wear
 from repro.kernels.hopscotch import ops as hop_ops
 from repro.kernels.string_match import ops as sm_ops
 from repro.kernels.xam_search import ops as xam_ops
-from repro.serve.kv_index import KVIndexConfig, MonarchKVIndex
+from repro.serve.kv_index import (KVIndexConfig, MonarchKVIndex,
+                                  _install_column)
+
+
+def _admit_hostloop(idx: MonarchKVIndex, fps: np.ndarray):
+    """The pre-batching admission flow (PR 2's `_admit_one` loop): one
+    jitted install dispatch + per-fingerprint host bookkeeping PER
+    fingerprint.  Kept here as the measured comparator for the O(1)-call
+    batched pipeline (`kv_index_admit` vs `kv_index_admit_hostloop`)."""
+    for fp in fps:
+        s = int(idx._set_of(np.asarray([fp], np.uint32))[0])
+        free = np.nonzero(~idx.valid_np[s])[0]
+        w = int(free[0]) if free.size else 0
+        bitcol = jnp.asarray(xam_ops.words_to_bits_np(
+            np.asarray([fp], np.uint32), idx.cfg.key_bits)[0])
+        idx.bits, idx.valid, idx.fp_of = _install_column(
+            idx.bits, idx.valid, idx.fp_of,
+            jnp.int32(s), jnp.int32(w), bitcol, jnp.uint32(fp))
+        idx.valid_np[s, w] = True
+        idx.slot_of[int(fp)] = (s, w)
+    jax.block_until_ready(idx.valid)
 
 
 def run(csv_rows: list[str], quick: bool = False):
@@ -87,6 +110,53 @@ def run(csv_rows: list[str], quick: bool = False):
     print(f"kv_index lookup 32x512 tokens: {t.median_us:.0f} us "
           f"({t.median_us / (32 * 512 // 16):.1f} us/chunk)")
     csv_rows.append(f"kv_index_lookup_32x512,{t.median_us:.0f},")
+
+    # batched admission: ONE jitted device call per 64-fingerprint batch,
+    # vs the pre-PR host loop (one install dispatch per fingerprint).
+    # Fresh unique fingerprints every rep so the install path (not the
+    # resident fast path) is what's timed.
+    n_fp, n_batches = 64, reps + 4
+    all_fps = (1 + np.arange(n_fp * n_batches, dtype=np.uint32))
+    fp_batches = iter(np.split(all_fps, n_batches))
+    idx_b = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=0))
+    t = time_callable(lambda: idx_b.admit_fps(next(fp_batches)),
+                      warmup=2, reps=reps)
+    timings["kv_index_admit"] = t
+    assert idx_b.stats.admit_calls == reps + 2   # O(1) calls per batch
+    print(f"kv_index admit 64 fps (batched): {t.median_us:.0f} us "
+          f"({t.median_us / n_fp:.1f} us/install)")
+    csv_rows.append(f"kv_index_admit,{t.median_us:.0f},64fp")
+
+    loop_batches = iter(np.split(all_fps + 1_000_000, n_batches))
+    idx_l = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=0))
+    t2 = time_callable(lambda: _admit_hostloop(idx_l, next(loop_batches)),
+                       warmup=2, reps=reps)
+    timings["kv_index_admit_hostloop"] = t2
+    print(f"kv_index admit 64 fps (pre-PR host loop): {t2.median_us:.0f} us "
+          f"-> batched speedup {t2.median_us / t.median_us:.1f}x")
+    csv_rows.append(f"kv_index_admit_hostloop,{t2.median_us:.0f},"
+                    f"{t2.median_us / t.median_us:.1f}x")
+
+    # wear-op microbench: a 256-write trace through the donated device op
+    # (the §8 accounting the admit pipeline fuses per install).
+    wcfg = wear.WearConfig(n_supersets=64, m_writes=3, dc_limit=1 << 20,
+                           t_mww_cycles=1 << 20)
+    ss = rng.integers(0, 64, 256).astype(np.int32)
+    dirty = rng.integers(0, 2, 256).astype(bool)
+    cycles = np.arange(256, dtype=np.int32)
+    wstate_box = [wear.init_state(wcfg)]
+
+    def _wear_call():
+        st, _, _ = wear.record_writes_device(
+            wstate_box[0], wcfg, ss, dirty, cycles)
+        wstate_box[0] = st
+        return st.write_counter
+
+    t = time_callable(_wear_call, warmup=2, reps=reps)
+    timings["wear_record_batch"] = t
+    print(f"wear record_writes 256-write trace: {t.median_us:.0f} us "
+          f"({t.median_us / 256:.2f} us/write)")
+    csv_rows.append(f"wear_record_batch,{t.median_us:.0f},256w")
 
     emit_json("kernels", {
         "reps": reps,

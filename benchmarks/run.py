@@ -8,7 +8,8 @@ Modules (paper artifact -> bench):
     Fig. 11        -> fig11_lifetime     (M=3 lifetime vs ideal leveling, C7/C8)
     Figs. 12-14    -> fig12_14_hashing   (hopscotch/YCSB flat-CAM, C5)
     §10.5          -> string_match       (Phoenix String-Match, C6)
-    kernels        -> kernels_bench      (Pallas kernels us/call + KV index)
+    kernels        -> kernels_bench      (Pallas kernels us/call + KV index
+                                          lookup/admit + wear-op microbench)
     §Roofline      -> roofline_summary   (dry-run three-term table)
 
 Each module appends ``name,us_per_call,derived`` CSV rows; the combined CSV

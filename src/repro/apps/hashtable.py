@@ -24,10 +24,12 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import wear
 from repro.data.pipeline import murmur3_np
 from repro.kernels.hopscotch import ops as hop_ops
 
 EMPTY = np.uint64(0)
+WEAR_FLUSH_EVERY = 256      # bucket writes buffered per device wear call
 
 
 @dataclasses.dataclass
@@ -44,8 +46,24 @@ class HashStats:
 
 
 class HopscotchTable:
-    def __init__(self, log2_size: int, window: int = 32, seed: int = 0):
+    def __init__(self, log2_size: int, window: int = 32, seed: int = 0,
+                 wear_cfg: wear.WearConfig | None = None):
+        """``wear_cfg``: optional §8 wear accounting over the table's
+        backing store (a flat-CAM in the paper's deployment).  Bucket
+        writes are charged to ``n_supersets`` equal superset stripes via
+        the SAME ``wear.record_writes`` device op the simulator and the
+        serving index use; writes are buffered and applied in batched
+        device calls, not one dispatch per insert."""
         self.window = window
+        self.wear_cfg = wear_cfg
+        if wear_cfg is not None:
+            self.wear_state = wear.init_state(wear_cfg)
+            self.wear_dyn = wear.dyn_of(wear_cfg)
+            self.writes_per_superset = np.zeros(
+                wear_cfg.n_supersets, np.int64)
+            self._pending_ss: list[int] = []
+            self._wear_rotates = 0
+            self._wear_op = 0
         self._alloc(1 << log2_size)
         self.stats = HashStats()
 
@@ -56,6 +74,78 @@ class HopscotchTable:
         self.vals = np.zeros(n + 2 * self.window, np.uint64)
         self._table_version = getattr(self, "_table_version", 0) + 1
         self._dev_planes = None     # (version, t_lo, t_hi) device cache
+        if self.wear_cfg is not None:
+            # superset stripe width over the (padded) bucket array
+            self._ss_stripe = -(-len(self.keys) // self.wear_cfg.n_supersets)
+
+    # ------------------------------------------------------------------
+    # §8 wear accounting (shared core/wear.py machinery).
+    # ------------------------------------------------------------------
+    def _record_write(self, bucket: int):
+        if self.wear_cfg is None:
+            return
+        ss = min(int(bucket) // self._ss_stripe, self.wear_cfg.n_supersets - 1)
+        self.writes_per_superset[ss] += 1
+        self._pending_ss.append(ss)
+        if len(self._pending_ss) >= WEAR_FLUSH_EVERY:
+            self.flush_wear()
+
+    def flush_wear(self):
+        """Apply buffered bucket writes to the device WearState in ONE
+        ``wear.record_writes_device`` call (insert paths only buffer).
+        The trace is pow2-bucketed with the op's ``active`` mask so ragged
+        flush lengths reuse a handful of compiled scans."""
+        if self.wear_cfg is None or not self._pending_ss:
+            return
+        from repro.kernels.common import bucket_pow2
+        # fold the op clock before the int32 cycle domain wraps
+        self.wear_state, self._wear_op = wear.maybe_rebase(
+            self.wear_state, self._wear_op)
+        n = len(self._pending_ss)
+        nb = bucket_pow2(n, lo=32)
+        ss = np.zeros(nb, np.int32)
+        ss[:n] = self._pending_ss
+        cycles = (self._wear_op + np.arange(nb)).astype(np.int32)
+        active = np.zeros(nb, bool)
+        active[:n] = True
+        self.wear_state, rotated, _fl = wear.record_writes_device(
+            self.wear_state, self.wear_dyn, ss,
+            np.ones(nb, bool), cycles, active)
+        self._wear_rotates += int(np.asarray(rotated).sum())
+        self._wear_op += n
+        self._pending_ss = []
+
+    def _require_wear(self, what: str):
+        if self.wear_cfg is None:
+            raise ValueError(
+                f"{what} requires wear tracking; construct the table with "
+                "a wear_cfg (see repro.core.wear.WearConfig)")
+
+    def wear_report(self) -> dict:
+        """Wear summary for benchmarks/launchers (flushes first)."""
+        self._require_wear("wear_report()")
+        self.flush_wear()
+        w = self.writes_per_superset.astype(np.float64)
+        mean = float(w.mean()) if w.size else 0.0
+        return {
+            "writes_total": int(w.sum()),
+            "writes_per_superset_max": float(w.max()) if w.size else 0.0,
+            "skew_max_over_mean": float(w.max() / mean) if mean > 0 else 1.0,
+            "rotates": self._wear_rotates,
+            "locked_now": int(np.asarray(
+                self.wear_state.locked_until > self._wear_op).sum()),
+        }
+
+    def lifetime_estimate(self, endurance: float = 1e8,
+                          ops_per_second: float = 1e6):
+        """Fig. 11-style lifetime projection for the table's write stream —
+        the simulator's cumulative-crossing replay fed by app-level wear."""
+        from repro.core import lifetime
+        self._require_wear("lifetime_estimate()")
+        self.flush_wear()
+        return lifetime.estimate_from_ops(
+            self.writes_per_superset, self._wear_op, self._wear_rotates,
+            endurance=endurance, ops_per_second=ops_per_second)
 
     # ------------------------------------------------------------------
     def home(self, key) -> np.ndarray:
@@ -79,6 +169,7 @@ class HopscotchTable:
         if off >= 0:
             self.vals[h + off] = np.uint64(val)
             self.stats.writes += 1
+            self._record_write(h + off)
             return True
         # free bucket within window (probes up to the first free slot;
         # with the metadata bitmap this is 1 line read + the jump)
@@ -89,6 +180,7 @@ class HopscotchTable:
             self.keys[h + free[0]] = key
             self.vals[h + free[0]] = np.uint64(val)
             self.stats.writes += 1
+            self._record_write(h + int(free[0]))
             self._table_version += 1
             return True
         # walk forward for a free bucket, then hop it back
@@ -114,6 +206,8 @@ class HopscotchTable:
                     self._table_version += 1
                     self.stats.swaps += 1
                     self.stats.writes += 2
+                    self._record_write(j)
+                    self._record_write(k)
                     j = k
                     moved = True
                     break
@@ -123,6 +217,7 @@ class HopscotchTable:
         self.keys[j] = key
         self.vals[j] = np.uint64(val)
         self.stats.writes += 1
+        self._record_write(j)
         self._table_version += 1
         return True
 

@@ -31,7 +31,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import xam
+from repro.core import wear, xam
 
 RAM, CAM = 0, 1
 ROW_IN, COL_IN = 0, 1
@@ -161,6 +161,23 @@ def search_read(state: FlatCamState, set_id) -> tuple[FlatCamState, jnp.ndarray,
         return st, idx.astype(jnp.int32), c_t + _count(searches=1, writes=km_writes)
 
     return jax.lax.cond(state.match_fresh, fresh, stale, state)
+
+
+def cam_data_write_tracked(state: FlatCamState, wstate: wear.WearState,
+                           wcfg, set_id, col, key_bits, superset, cycle):
+    """flat-CAM data write with §8 wear accounting fused into the command
+    trace: the write command charged by the controller is the SAME event
+    the wear state records (one implementation — ``wear.record_write`` —
+    shared with the cache-mode simulator and the serving index).
+
+    Returns ``(state, wstate, rotated, counts)``; ``rotated`` is the §8
+    rotate signal so the caller can remap placement.
+    """
+    state, counts = cam_data_write(state, set_id, col, key_bits)
+    wstate, rotated, _flushed = wear.record_write(
+        wstate, wcfg, jnp.asarray(superset, jnp.int32),
+        jnp.asarray(True), jnp.asarray(cycle, jnp.int32))
+    return state, wstate, rotated, counts
 
 
 def cam_row_read(state: FlatCamState, set_id, row) -> tuple[FlatCamState, jnp.ndarray, CommandCounts]:

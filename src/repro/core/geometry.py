@@ -114,8 +114,10 @@ class RotaryOffsets:
 
 
 def zero_offsets() -> RotaryOffsets:
-    z = jnp.zeros((), jnp.int32)
-    return RotaryOffsets(z, z, z, z, z)
+    # Five DISTINCT zero buffers: sharing one array across fields makes any
+    # donated-state op over a fresh state an XLA double-donation error.
+    z = lambda: jnp.zeros((), jnp.int32)
+    return RotaryOffsets(z(), z(), z(), z(), z())
 
 
 def apply_rotate(off: RotaryOffsets) -> RotaryOffsets:

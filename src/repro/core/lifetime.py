@@ -33,6 +33,27 @@ class LifetimeResult:
     epochs_to_death: float
 
 
+def estimate_from_ops(
+    writes_per_set: np.ndarray,
+    ops_total: int,
+    rotations: int,
+    endurance: float = DEFAULT_ENDURANCE,
+    ops_per_second: float = 1e6,
+) -> "LifetimeResult":
+    """Serving-side bridge: op-counter clock -> the Fig. 11 replay.
+
+    The serving layers (MonarchKVIndex, HopscotchTable) count ops instead
+    of cycles; this is the ONE conversion (ops / ops_per_second seconds,
+    then CPU cycles) both use, so the cycle-proxy semantics cannot drift
+    between them."""
+    epoch_s = max(int(ops_total), 1) / ops_per_second
+    return estimate_lifetime(
+        np.asarray(writes_per_set, np.float64),
+        epoch_cycles=epoch_s * CPU_HZ,
+        rotations_per_epoch=int(rotations),
+        endurance=endurance)
+
+
 def _offsets_sequence(n_rotations: int) -> np.ndarray:
     """Cumulative combined offset (superset-granularity permutation shift)
     after each rotation, following the prime schedule of §8."""

@@ -23,6 +23,7 @@ Components reproduced:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -156,12 +157,9 @@ def record_write(state: WearState, cfg: WearConfig, superset: jnp.ndarray,
     s = superset
     cycle = cycle.astype(jnp.int32)
 
-    # --- t_MWW window ----------------------------------------------------
-    # jnp.maximum (not Python max): t_mww_cycles may be a traced scalar
-    # when the batched simulator passes a WearDyn.
-    win = jnp.maximum(jnp.asarray(cfg.t_mww_cycles, jnp.int32), 1)
-    expired = (cycle - state.window_start[s]) >= win
-    w_writes = jnp.where(expired, 0, state.window_writes[s])
+    # --- t_MWW window (rollover arithmetic shared with the reject-
+    # before-write predicate, see _window_now) ----------------------------
+    win, expired, w_writes = _window_now(state, cfg, s, cycle)
     w_start = jnp.where(expired, cycle, state.window_start[s])
     w_writes = w_writes + 1
     over = w_writes > cfg.window_write_budget
@@ -209,6 +207,103 @@ def record_write(state: WearState, cfg: WearConfig, superset: jnp.ndarray,
 
     new_state = jax.lax.cond(rot, do_rotate, lambda st: st, mid)
     return new_state, rot, flushed
+
+
+# ---------------------------------------------------------------------------
+# Batched device ops.  The serving path (serve/kv_index.py), the hashtable
+# app, and the differential tests all consume the SAME per-write semantics as
+# the simulator — there is exactly one implementation of §8, this module —
+# but amortize dispatch by applying a whole write trace per device call:
+# ``record_writes`` is a ``lax.scan`` over ``record_write``, so it is
+# step-for-step identical to the host loop while costing one dispatch.
+# ---------------------------------------------------------------------------
+
+def _window_now(state: WearState, cfg, superset, cycle):
+    """THE t_MWW window-rollover arithmetic (one implementation, shared by
+    ``record_write`` and ``window_would_exceed``): returns
+    ``(win, expired, writes_now)`` for ``superset`` at ``cycle``."""
+    win = jnp.maximum(jnp.asarray(cfg.t_mww_cycles, jnp.int32), 1)
+    expired = (cycle - state.window_start[superset]) >= win
+    writes_now = jnp.where(expired, 0, state.window_writes[superset])
+    return win, expired, writes_now
+
+
+def window_would_exceed(state: WearState, cfg, superset: jnp.ndarray,
+                        cycle: jnp.ndarray) -> jnp.ndarray:
+    """True when one more write to ``superset`` at ``cycle`` would blow the
+    t_MWW window budget.  Admission controllers (cache mode serving) consult
+    this BEFORE spending the XAM write — the §6.2 lifetime throttle as a
+    reject-before-write predicate rather than the simulator's lock-after-
+    overflow accounting.  ``cfg`` may be a WearConfig or a WearDyn."""
+    cycle = jnp.asarray(cycle, jnp.int32)
+    _, _, writes_now = _window_now(state, cfg, superset, cycle)
+    return (writes_now + 1) > cfg.window_write_budget
+
+
+def record_writes(state: WearState, cfg, supersets, makes_dirty, cycles,
+                  active=None):
+    """Batched :func:`record_write`: apply a trace of writes in order.
+
+    supersets/makes_dirty/cycles : (B,) arrays; ``active`` (B,) bool masks
+    padding lanes (pow2-bucketed callers) — an inactive lane is a no-op.
+    Returns ``(state, rotated (B,) bool, flushed (B,) int32)``; the per-step
+    outputs match a Python loop over ``record_write`` exactly (pinned by
+    tests/test_wear.py's differential trace tests).
+    """
+    supersets = jnp.asarray(supersets, jnp.int32)
+    makes_dirty = jnp.asarray(makes_dirty, bool)
+    cycles = jnp.asarray(cycles, jnp.int32)
+    act = (jnp.ones(supersets.shape, bool) if active is None
+           else jnp.asarray(active, bool))
+
+    def step(st, x):
+        s, d, c, a = x
+        st2, rot, fl = record_write(st, cfg, s, d, c)
+        st = jax.tree.map(lambda o, n: jnp.where(a, n, o), st, st2)
+        return st, (rot & a, jnp.where(a, fl, 0))
+
+    state, (rots, fls) = jax.lax.scan(
+        step, state, (supersets, makes_dirty, cycles, act))
+    return state, rots, fls
+
+
+#: Device entry point: donated state, one dispatch per write batch.
+record_writes_device = functools.partial(
+    jax.jit, donate_argnums=(0,))(record_writes)
+
+
+#: Serving clock re-base threshold.  The cycle domain is int32 (JAX's
+#: default integer width); a long-lived op-counter clock must be folded
+#: back before it wraps.  Every window comparison is difference-based, so
+#: shifting the clock AND every stored timestamp by the same delta is an
+#: exact no-op semantically.
+CLOCK_REBASE_AT = 1 << 30
+
+
+def maybe_rebase(state: WearState, op_counter: int):
+    """The serving wrap policy in one place: fold ``op_counter`` (and the
+    state's timestamps, via :func:`rebase_clock`) once it reaches
+    CLOCK_REBASE_AT.  Returns ``(state, op_counter)``."""
+    if op_counter >= CLOCK_REBASE_AT:
+        state = rebase_clock(state, CLOCK_REBASE_AT)
+        op_counter -= CLOCK_REBASE_AT
+    return state, op_counter
+
+
+def rebase_clock(state: WearState, delta) -> WearState:
+    """Shift all stored timestamps down by ``delta`` (callers shift their
+    op counter in lockstep).  Timestamps are floored at -CLOCK_REBASE_AT so
+    repeated rebases cannot underflow int32: an entry at the floor is, and
+    behaves as, long-expired/unlocked (exact as long as window lengths are
+    <= CLOCK_REBASE_AT, which the int32 ``t_mww_cycles`` domain and callers
+    guarantee)."""
+    d = jnp.asarray(delta, jnp.int32)
+    floor = jnp.int32(-CLOCK_REBASE_AT)
+    return dataclasses.replace(
+        state,
+        window_start=jnp.maximum(state.window_start - d, floor),
+        locked_until=jnp.maximum(state.locked_until - d, floor),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,18 @@ def main(argv=None):
     ap.add_argument("--decode-tokens", type=int, default=8)
     ap.add_argument("--seq-shard-kv", action="store_true",
                     help="§Perf: split-KV decode cache layout")
+    # §6.2 durability knobs: the index derives its t_MWW admission window
+    # from the lifetime target via the same formula as core/wear.py.
+    ap.add_argument("--lifetime-years", type=float, default=None,
+                    help="target index lifetime (enables the derived t_MWW "
+                         "admission window; default: fixed window_ops)")
+    ap.add_argument("--endurance", type=float, default=1e8,
+                    help="cell endurance for --lifetime-years")
+    ap.add_argument("--m-writes", type=int, default=3,
+                    help="per-way write budget per t_MWW window")
+    ap.add_argument("--ops-per-sec", type=float, default=1e6,
+                    help="expected index op rate (cycle proxy) for "
+                         "--lifetime-years")
     args = ap.parse_args(argv)
 
     cfg = configs.get_arch(args.arch)
@@ -51,7 +63,17 @@ def main(argv=None):
 
     rng = np.random.default_rng(0)
     max_seq = args.prompt_len + args.decode_tokens
-    idx = MonarchKVIndex(KVIndexConfig(n_sets=8))
+    if args.lifetime_years is not None:
+        kv_cfg = KVIndexConfig.with_lifetime(
+            t_life_years=args.lifetime_years, endurance=args.endurance,
+            ops_per_second=args.ops_per_sec, m_writes=args.m_writes,
+            n_sets=8)
+        print(f"[serve] lifetime target {args.lifetime_years}y @ "
+              f"{args.endurance:.0e} endurance -> t_MWW window = "
+              f"{kv_cfg.window_ops} ops, M={kv_cfg.m_writes}")
+    else:
+        kv_cfg = KVIndexConfig(n_sets=8, m_writes=args.m_writes)
+    idx = MonarchKVIndex(kv_cfg)
 
     with mesh:
         params = transformer.init_params(jax.random.PRNGKey(0), cfg)
@@ -90,7 +112,16 @@ def main(argv=None):
     s = idx.stats
     print(f"[serve] {served} requests in {dt:.1f}s; index hit rate "
           f"{idx.hit_rate:.1%}, {s.searches} CAM searches, "
-          f"{s.admissions} admissions, {s.throttled} throttles")
+          f"{s.admissions} admissions ({s.admit_calls} device calls), "
+          f"{s.throttled} throttles")
+    w = idx.wear_report()
+    lt = idx.lifetime_estimate(endurance=args.endurance,
+                               ops_per_second=args.ops_per_sec)
+    print(f"[serve] wear: installs/set max {w['installs_per_set_max']:.0f} "
+          f"(skew {w['skew_max_over_mean']:.2f}x mean), "
+          f"{w['rotations']} rotations, "
+          f"{w['throttled_sets_now']} sets at window budget; "
+          f"projected lifetime {lt.years:.1f}y (ideal {lt.ideal_years:.1f}y)")
 
 
 if __name__ == "__main__":

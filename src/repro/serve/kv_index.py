@@ -10,25 +10,43 @@ A vLLM-style paged KV prefix cache whose INDEX is a Monarch flat-CAM:
   each query block's stored-bit plane; validity masking is fused into the
   kernel, so dead ways never produce false hits;
 * the CAM state is device-resident: ``bits`` (n_sets, key_bits, set_ways),
-  ``valid`` and ``fp_of`` live on device and installs update exactly one
-  column via a donated jitted scatter — admission no longer rebuilds a
-  whole (key_bits, set_ways) plane per fingerprint;
+  ``valid``, ``fp_of``, the D̄&R̄ ``read_after`` metadata, the per-set
+  install counters and the §8 ``WearState`` all live on device;
+* ADMISSION IS BATCHED: one request batch's worth of candidate
+  fingerprints goes through ONE jitted, donated-state device call
+  (``_admit_batch``) — a ``lax.scan`` that fuses residency probing,
+  t_MWW throttling, way selection, column install and wear recording.
+  Same-set collisions are resolved by the scan order (ascending unique
+  fingerprints — the seed's sequential admission order), so the batched
+  pipeline is step-for-step equivalent to admitting one fingerprint at a
+  time while issuing O(1) device calls per batch;
 * admission mirrors the paper's cache-mode durability policy (§8):
   - no-allocate on first touch (a block must be seen R times before it is
     admitted — the D̄&R̄ "never accessed" filter),
-  - D/R-flag selective install: blocks evicted from the on-device pool are
-    only written to the host tier when they were re-read after install,
   - random-counter replacement via a free-running counter shared by all
-    sets,
-  - rotary offset remapping of block→slot placement with prime strides
-    (wear leveling — here it levels HBM slot reuse and, on NVM-backed
-    hosts, literal cell wear).
-* ``t_MWW``-style write throttling: a set whose admission rate exceeds the
-  budget within a window stops admitting (serves misses from recompute) —
-  lifetime-bounded admission exactly as §6.2 specifies.
+    sets, preferring never-re-read (cold) victims,
+  - the t_MWW lifetime throttle comes from ``core/wear.py`` — the SAME
+    ``record_write``/``window_would_exceed``/``is_locked`` machinery the
+    Fig. 11 simulator runs, parameterized by a ``WearDyn``.  A set whose
+    admission rate exceeds the window budget stops admitting (serves
+    misses from recompute) exactly as §6.2 specifies.  The op counter
+    (lookup queries + admission attempts) stands in for cycles;
+* rotation is a device start-gap-style remap: the set planes (bits /
+  valid / fp_of / read_after) are cyclically shifted by the prime stride 7
+  in one donated device call — no host rebuild — while ``_set_of`` shifts
+  its offset in lockstep, so resident entries REMAIN searchable after the
+  remap (the seed's lazy-flush rotation orphaned them; this intentional
+  change is pinned by tests/test_kv_index.py).
+
+Lifetime targeting: ``KVIndexConfig.with_lifetime`` derives the t_MWW
+window length (in ops) from a target lifetime in years, the cell
+endurance and an expected op rate — the serving twin of
+``wear.make_config``.  ``launch/serve.py`` surfaces it as
+``--lifetime-years``.
 
 The index is exercised by examples/serve_prefix_cache.py and
-benchmarks/kernels_bench.py.
+benchmarks/kernels_bench.py (``kv_index_admit`` pins the batched path's
+advantage over the pre-batching host loop).
 """
 from __future__ import annotations
 
@@ -40,10 +58,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import lifetime as lifetime_mod
+from repro.core import wear
+from repro.core.timing import SECONDS_PER_YEAR, t_mww_seconds
 from repro.data.pipeline import fingerprint_blocks, murmur3_np
+from repro.kernels.common import bucket_pow2
 from repro.kernels.xam_search import ops as xam_ops
 
 CHUNK_TOKENS = 16
+ROTATE_STRIDE = 7          # prime set stride per rotation (§8)
+ADMIT_BUCKET_LO = 8        # pow2 bucket floor for admit batch shapes
 
 
 @dataclasses.dataclass
@@ -52,9 +76,21 @@ class KVIndexConfig:
     set_ways: int = 512           # CAM columns per set
     key_bits: int = 32
     admit_after_reads: int = 1    # no-allocate: admit on 2nd touch
-    m_writes: int = 3             # admissions per set per window
+    m_writes: int = 3             # per-way write budget per t_MWW window
     window_ops: int = 4096        # ops per t_MWW window (op-count proxy)
     rotate_every: int = 50_000    # admissions between rotary remaps
+
+    @classmethod
+    def with_lifetime(cls, *, t_life_years: float, endurance: float = 1e8,
+                      ops_per_second: float = 1e6, m_writes: int = 3,
+                      **kw) -> "KVIndexConfig":
+        """Derive ``window_ops`` from a lifetime target (§6.2): the t_MWW
+        window in seconds comes from ``wear``'s own formula; the serving op
+        counter stands in for cycles at ``ops_per_second``."""
+        t_mww_s = t_mww_seconds(m_writes, t_life_years * SECONDS_PER_YEAR,
+                                endurance)
+        window_ops = max(int(t_mww_s * ops_per_second), 1)
+        return cls(m_writes=m_writes, window_ops=window_ops, **kw)
 
 
 @dataclasses.dataclass
@@ -68,15 +104,117 @@ class KVIndexStats:
     evictions: int = 0
     rotations: int = 0
     searches: int = 0             # fused kernel launches (1 per batch)
+    admit_calls: int = 0          # jitted admit launches (1 per batch)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
 def _install_column(bits, valid, fp_of, s, w, bitcol, fp):
-    """Device-side install: write one CAM column + its valid/fp_of entry."""
+    """Device-side install of ONE CAM column.  Kept as the pre-batching
+    primitive: benchmarks/kernels_bench.py uses it to measure the host-loop
+    admission flow the batched pipeline replaced."""
     bits = bits.at[s, :, w].set(bitcol)
     valid = valid.at[s, w].set(jnp.int8(1))
     fp_of = fp_of.at[s, w].set(fp)
     return bits, valid, fp_of
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _admit_batch(bits, valid, fp_of, read_after, set_writes, counter,
+                 wstate, wdyn, admit_after, sets, fps, bitcols, cycles,
+                 touches, active):
+    """ONE device call admits a whole candidate batch.
+
+    A ``lax.scan`` over the (order-preserving) candidate list; each step is
+    the full per-fingerprint admission pipeline: residency probe ->
+    read_after bump | no-allocate gate | t_MWW throttle -> way select ->
+    column install fused with §8 wear recording.  Same-set collisions
+    resolve through the scan carry (segment conflicts never race — later
+    candidates see earlier installs AND earlier evictions: the residency
+    and no-allocate decisions are made against the in-batch state, exactly
+    as a sequential per-fingerprint loop would), which keeps the batched
+    path bit-equivalent to sequential admission.  ``touches`` carries the
+    host first_touch counts (unique fps, so they cannot change mid-batch).
+    All mutable planes are donated; outputs feed the host shadow map in
+    one transfer.
+    """
+    n_ways = valid.shape[1]
+    iota = jnp.arange(n_ways, dtype=jnp.int32)
+
+    def step(carry, x):
+        bits, valid, fp_of, read_after, set_writes, counter, ws = carry
+        s, fp, bitcol, cycle, touch, act = x
+
+        vrow = valid[s]
+        frow = fp_of[s]
+        hitv = (vrow == 1) & (frow == fp)
+        is_res = jnp.any(hitv) & act
+        res_w = jnp.argmax(hitv).astype(jnp.int32)
+        # resident re-offer: D/R metadata only (marks the way re-read).
+        read_after = read_after.at[s, res_w].add(
+            jnp.where(is_res, 1, 0).astype(jnp.int32))
+
+        # no-allocate gate (D̄&R̄ "never accessed" filter): evaluated against
+        # the CURRENT residency, so a fingerprint evicted by an earlier
+        # same-batch install re-enters the touch count like the sequential
+        # flow would.
+        skipped = act & ~is_res & (touch < admit_after)
+
+        # t_MWW lifetime throttle — shared wear machinery (§6.2/§8).
+        # window_would_exceed rejects BEFORE the write, so under this
+        # policy record_write's lock branch never fires; is_locked is kept
+        # as a guard for wear states also driven by other writers.
+        locked = wear.is_locked(ws, s, cycle)
+        over = wear.window_would_exceed(ws, wdyn, s, cycle)
+        throttled = act & ~is_res & ~skipped & (locked | over)
+        do_install = act & ~is_res & ~skipped & ~throttled
+
+        # Way selection: first free way, else counter-ordered cold victim
+        # (never-re-read ways first — D̄&R̄-style replacement).
+        free = vrow == 0
+        has_free = jnp.any(free)
+        free_w = jnp.argmax(free).astype(jnp.int32)
+        order = ((iota + counter) % n_ways).astype(jnp.int32)
+        cold = read_after[s][order] == 0
+        victim = jnp.where(jnp.any(cold), order[jnp.argmax(cold)], order[0])
+        way = jnp.where(has_free, free_w, victim).astype(jnp.int32)
+        evict = do_install & ~has_free
+        old_fp = frow[way]
+        counter = counter + jnp.where(evict, 1, 0).astype(jnp.int32)
+
+        # Column install (one CAM column + metadata).
+        bits = bits.at[s, :, way].set(
+            jnp.where(do_install, bitcol.astype(jnp.int8), bits[s, :, way]))
+        valid = valid.at[s, way].set(
+            jnp.where(do_install, 1, vrow[way]).astype(jnp.int8))
+        fp_of = fp_of.at[s, way].set(jnp.where(do_install, fp, old_fp))
+        read_after = read_after.at[s, way].set(
+            jnp.where(do_install, 0, read_after[s, way]).astype(jnp.int32))
+        set_writes = set_writes.at[s].add(
+            jnp.where(do_install, 1, 0).astype(jnp.int32))
+
+        # Wear recording fused with the install (one implementation: §8's
+        # record_write — the same function the Fig. 11 simulator scans).
+        ws2, rot, _fl = wear.record_write(ws, wdyn, s, jnp.asarray(True),
+                                          cycle)
+        ws = jax.tree.map(lambda o, n: jnp.where(do_install, n, o), ws, ws2)
+
+        out = (is_res, skipped, throttled, do_install, way, evict, old_fp)
+        return (bits, valid, fp_of, read_after, set_writes, counter, ws), out
+
+    carry = (bits, valid, fp_of, read_after, set_writes, counter, wstate)
+    carry, outs = jax.lax.scan(step, carry,
+                               (sets, fps, bitcols, cycles, touches, active))
+    return carry, outs
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("shift",))
+def _rotate_planes(bits, valid, fp_of, read_after, shift: int):
+    """Device start-gap-style remap: cyclically shift every set plane by the
+    prime stride — resident entries move WITH the ``_set_of`` offset bump,
+    so they stay searchable under the rotated mapping.  No host rebuild."""
+    roll = lambda x: jnp.roll(x, shift, axis=0)
+    return roll(bits), roll(valid), roll(fp_of), roll(read_after)
 
 
 class MonarchKVIndex:
@@ -86,22 +224,32 @@ class MonarchKVIndex:
         self.cfg = KVIndexConfig() if cfg is None else cfg
         c = self.cfg
         # Device-resident CAM state: fingerprint bits column-wise per set,
-        # plus the validity and fingerprint planes the fused kernel reads.
+        # plus the validity / fingerprint / D-R metadata planes, the
+        # replacement counter and the per-set install (wear) counters.
         self.bits = jnp.zeros((c.n_sets, c.key_bits, c.set_ways), jnp.int8)
         self.valid = jnp.zeros((c.n_sets, c.set_ways), jnp.int8)
         self.fp_of = jnp.zeros((c.n_sets, c.set_ways), jnp.uint32)
-        # Host-side policy state (shadow map + replacement metadata);
-        # valid/fp_of mirrors keep eviction decisions off the device sync
-        # path.
+        self.read_after = jnp.zeros((c.n_sets, c.set_ways), jnp.int32)
+        self.set_writes = jnp.zeros((c.n_sets,), jnp.int32)
+        self.counter = jnp.zeros((), jnp.int32)  # free-running replacement
+        # §8 wear state over the physical sets — the simulator's own
+        # machinery with serving knobs: window length = window_ops (op-count
+        # cycle proxy), budget = set_ways * m_writes, WR/WC/DC rotation
+        # signals disabled (serving rotates on the rotate_every cadence).
+        self.wear_cfg = wear.WearConfig(
+            n_supersets=c.n_sets, m_writes=c.m_writes,
+            dc_limit=1 << 30, wc_limit=1 << 30,
+            t_mww_cycles=c.window_ops, blocks_per_superset=c.set_ways)
+        self.wear_dyn = wear.dyn_of(self.wear_cfg)
+        self.wear_state = wear.init_state(self.wear_cfg)
+        # Host-side policy shadow (map + mirrors): keeps assertions and
+        # eviction bookkeeping off the device sync path.
         self.valid_np = np.zeros((c.n_sets, c.set_ways), bool)
         self.fp_of_np = np.zeros((c.n_sets, c.set_ways), np.uint32)
         self.slot_of = {}           # fp -> (set, way) (host-side shadow map)
-        self.read_after = np.zeros((c.n_sets, c.set_ways), np.int32)
         self.first_touch = {}       # fp -> touch count (pre-admission)
-        self.counter = 0            # free-running replacement counter
         self.offset = 0             # rotary set offset
-        self.window_admits = np.zeros((c.n_sets,), np.int32)
-        self.ops_in_window = 0
+        self.ops_total = 0          # op counter == t_MWW cycle proxy
         self.stats = KVIndexStats()
 
     # ------------------------------------------------------------------
@@ -110,9 +258,18 @@ class MonarchKVIndex:
         return ((base.astype(np.int64) + self.offset) % self.cfg.n_sets
                 ).astype(np.int32)
 
+    def _maybe_rebase_clock(self):
+        """Fold the op-counter clock before the int32 cycle domain wraps
+        (timestamps shift in lockstep, so window/lock decisions are
+        unchanged — a ~2.1e9-op serving instance would otherwise see its
+        windows stop expiring and throttle forever)."""
+        self.wear_state, self.ops_total = wear.maybe_rebase(
+            self.wear_state, self.ops_total)
+
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
         """tokens: (B, S).  Returns (B, S//16) bool — chunk already cached.
         ONE fused multi-set CAM search for the whole batch."""
+        self._maybe_rebase_clock()
         fps = fingerprint_blocks(tokens, CHUNK_TOKENS)
         flat = fps.reshape(-1)
         self.stats.lookups += 1
@@ -127,7 +284,7 @@ class MonarchKVIndex:
         hit = ways >= 0
         self.stats.chunk_hits += int(hit.sum())
         self.stats.chunk_misses += int((~hit).sum())
-        self._account_ops(flat.shape[0])
+        self.ops_total += int(flat.shape[0])   # t_MWW cycle proxy advances
         return hit.reshape(fps.shape)
 
     def _shadow_hits(self, flat_fps: np.ndarray) -> np.ndarray:
@@ -135,84 +292,140 @@ class MonarchKVIndex:
         return np.asarray([int(fp) in self.slot_of for fp in flat_fps], bool)
 
     # ------------------------------------------------------------------
-    def _account_ops(self, n: int):
-        self.ops_in_window += n
-        if self.ops_in_window >= self.cfg.window_ops:
-            self.ops_in_window = 0
-            self.window_admits[:] = 0
-
     def admit(self, tokens: np.ndarray):
-        """Offer chunks for admission (after their KV was computed)."""
+        """Offer chunks for admission (after their KV was computed).
+        Issues O(1) jitted device calls regardless of batch size."""
         fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
-        for fp in fps:
-            self._admit_one(np.uint32(fp))
-        if (self.stats.admissions and
-                self.stats.admissions % self.cfg.rotate_every == 0):
-            self._rotate()
+        self.admit_fps(fps)
 
     def _admit_one(self, fp: np.uint32):
-        if int(fp) in self.slot_of:
-            s, w = self.slot_of[int(fp)]
-            self.read_after[s, w] += 1
-            return
-        touches = self.first_touch.get(int(fp), 0)
-        if touches < self.cfg.admit_after_reads:
-            # no-allocate: don't spend a XAM write on a once-seen block.
-            self.first_touch[int(fp)] = touches + 1
-            self.stats.admission_skips += 1
-            return
-        s = int(self._set_of(np.asarray([fp]))[0])
-        budget = self.cfg.m_writes * self.cfg.set_ways // 512 + self.cfg.m_writes
-        if self.window_admits[s] >= budget * 64:
-            self.stats.throttled += 1   # t_MWW lock: serve by recompute
-            return
-        self.window_admits[s] += 1
-        w = self._pick_way(s)
-        self._install(s, w, fp)
+        """Single-fingerprint compatibility shim over the batched path."""
+        self.admit_fps(np.asarray([fp], np.uint32))
 
-    def _pick_way(self, s: int) -> int:
-        free = np.nonzero(~self.valid_np[s])[0]
-        if free.size:
-            return int(free[0])
-        ways = self.cfg.set_ways
-        start = self.counter % ways
-        order = (np.arange(ways) + start) % ways
-        # prefer blocks never re-read after install (D̄&R̄-style victims)
-        cold = order[self.read_after[s][order] == 0]
-        victim = int(cold[0]) if cold.size else int(order[0])
-        old_fp = int(self.fp_of_np[s, victim])
-        self.slot_of.pop(old_fp, None)
-        self.stats.evictions += 1
-        self.counter += 1
-        return victim
+    def admit_fps(self, fps: np.ndarray):
+        """Batched admission of (unique, order-preserved) fingerprints:
+        ONE ``_admit_batch`` device call, then one host shadow-map pass
+        over the outputs.  Every offered fingerprint is a device lane —
+        the no-allocate gate runs on device against the evolving in-batch
+        residency, so the pipeline is bit-equivalent to admitting the same
+        fingerprints one call at a time."""
+        fps = np.asarray(fps, np.uint32)
+        b = int(fps.size)
+        if b == 0:
+            return
+        self._maybe_rebase_clock()
+        bb = bucket_pow2(b, lo=ADMIT_BUCKET_LO)
+        fps_p = np.zeros(bb, np.uint32)
+        fps_p[:b] = fps
+        sets_p = np.zeros(bb, np.int32)
+        sets_p[:b] = self._set_of(fps)
+        bitcols = np.zeros((bb, self.cfg.key_bits), np.int8)
+        bitcols[:b] = xam_ops.words_to_bits_np(fps, self.cfg.key_bits)
+        cycles = (self.ops_total + np.arange(bb)).astype(np.int32)
+        touches = np.zeros(bb, np.int32)
+        touches[:b] = [self.first_touch.get(int(fp), 0) for fp in fps]
+        active = np.zeros(bb, bool)
+        active[:b] = True
 
-    def _install(self, s: int, w: int, fp: np.uint32):
-        bitcol = jnp.asarray(
-            xam_ops.words_to_bits_np(np.asarray([fp], np.uint32),
-                                     self.cfg.key_bits)[0])
-        self.bits, self.valid, self.fp_of = _install_column(
-            self.bits, self.valid, self.fp_of,
-            jnp.int32(s), jnp.int32(w), bitcol, jnp.uint32(fp))
-        self.valid_np[s, w] = True
-        self.fp_of_np[s, w] = fp
-        self.read_after[s, w] = 0
-        self.slot_of[int(fp)] = (s, w)
-        self.first_touch.pop(int(fp), None)
-        self.stats.admissions += 1
+        carry, outs = _admit_batch(
+            self.bits, self.valid, self.fp_of, self.read_after,
+            self.set_writes, self.counter, self.wear_state, self.wear_dyn,
+            jnp.asarray(self.cfg.admit_after_reads, jnp.int32),
+            jnp.asarray(sets_p), jnp.asarray(fps_p), jnp.asarray(bitcols),
+            jnp.asarray(cycles), jnp.asarray(touches), jnp.asarray(active))
+        (self.bits, self.valid, self.fp_of, self.read_after,
+         self.set_writes, self.counter, self.wear_state) = carry
+        self.stats.admit_calls += 1
+        self.ops_total += b
+
+        # Host shadow-map pass (one device->host transfer for the batch).
+        _res, skip, thr, inst, way, evict, old_fp = (np.asarray(o)[:b]
+                                                     for o in outs)
+        for i in range(b):
+            if evict[i]:
+                self.slot_of.pop(int(old_fp[i]), None)
+            fp = int(fps_p[i])
+            if skip[i]:
+                self.first_touch[fp] = self.first_touch.get(fp, 0) + 1
+            if inst[i]:
+                s, w = int(sets_p[i]), int(way[i])
+                self.slot_of[fp] = (s, w)
+                self.first_touch.pop(fp, None)
+                self.valid_np[s, w] = True
+                self.fp_of_np[s, w] = fps_p[i]
+        self.stats.admissions += int(inst.sum())
+        self.stats.admission_skips += int(skip.sum())
+        self.stats.evictions += int(evict.sum())
+        self.stats.throttled += int(thr.sum())
+
+        # Rotate when the admission count crosses a rotate_every multiple
+        # (a plain modulo check would skip the boundary whenever a batch
+        # jumps over it).  At most one remap per admit call — batched
+        # rotation lands at the batch boundary rather than mid-sequence;
+        # the equivalence test pins auto-rotation off for that reason.
+        prev = self.stats.admissions - int(inst.sum())
+        if (self.stats.admissions // self.cfg.rotate_every
+                > prev // self.cfg.rotate_every):
+            self._rotate()
 
     def _rotate(self):
-        """Rotary remap (prime stride 7): flush-and-remap set placement so
-        hot fingerprint clusters move across physical sets."""
-        self.offset = (self.offset + 7) % self.cfg.n_sets
+        """Rotary remap (prime stride 7): ONE donated device call shifts
+        the set planes; the ``_set_of`` offset moves in lockstep, so
+        resident entries stay searchable under the rotated placement (the
+        pre-batching implementation orphaned them until eviction)."""
+        n = self.cfg.n_sets
+        shift = ROTATE_STRIDE % n
+        self.offset = (self.offset + ROTATE_STRIDE) % n
         self.stats.rotations += 1
-        # remap = lazy flush: entries stay searchable under old placement
-        # until evicted; new admissions land under the rotated mapping.
+        if shift:
+            self.bits, self.valid, self.fp_of, self.read_after = \
+                _rotate_planes(self.bits, self.valid, self.fp_of,
+                               self.read_after, shift=shift)
+            self.valid_np = np.roll(self.valid_np, shift, axis=0)
+            self.fp_of_np = np.roll(self.fp_of_np, shift, axis=0)
+            self.slot_of = {fp: ((s + shift) % n, w)
+                            for fp, (s, w) in self.slot_of.items()}
 
+    # ------------------------------------------------------------------
     @property
     def hit_rate(self) -> float:
         t = self.stats.chunk_hits + self.stats.chunk_misses
         return self.stats.chunk_hits / max(t, 1)
 
     def write_distribution(self) -> np.ndarray:
-        """Installs per set — wear-evenness metric for tests/benchmarks."""
-        return self.valid_np.sum(axis=1)
+        """Installs per PHYSICAL set — the wear-evenness metric (device
+        counter; unlike residency it never decays on eviction)."""
+        return np.asarray(self.set_writes)
+
+    def wear_report(self) -> dict:
+        """Serving-side §8 wear stats from the shared WearState."""
+        ws = self.wear_state
+        w = self.write_distribution().astype(np.float64)
+        mean = float(w.mean()) if w.size else 0.0
+        return {
+            "installs_per_set_max": float(w.max()) if w.size else 0.0,
+            "installs_per_set_mean": mean,
+            "skew_max_over_mean": float(w.max() / mean) if mean > 0 else 1.0,
+            "window_writes": np.asarray(ws.window_writes).tolist(),
+            # sets an admission would be rejected from right now (the
+            # admit path rejects via window_would_exceed BEFORE the write,
+            # so record_write's post-overflow lock never engages here).
+            "throttled_sets_now": int(np.asarray(wear.window_would_exceed(
+                ws, self.wear_dyn,
+                jnp.arange(self.cfg.n_sets),
+                jnp.asarray(min(self.ops_total, 2 ** 31 - 1), jnp.int32)
+            )).sum()),
+            "throttled": self.stats.throttled,
+            "rotations": self.stats.rotations,
+        }
+
+    def lifetime_estimate(self, endurance: float = 1e8,
+                          ops_per_second: float = 1e6
+                          ) -> lifetime_mod.LifetimeResult:
+        """Fig. 11-style lifetime projection from the serving write
+        snapshot — the same cumulative-crossing replay the simulator's
+        curves use, fed by the device install counters."""
+        return lifetime_mod.estimate_from_ops(
+            self.write_distribution(), self.ops_total,
+            self.stats.rotations, endurance=endurance,
+            ops_per_second=ops_per_second)

@@ -208,6 +208,98 @@ def test_xam_multiset_property(n_q, n_sets, seed):
     np.testing.assert_array_equal(got, want)
 
 
+# Parity matrix (PR 3): ragged / non-power-of-two batch sizes, empty sets
+# (no queries and/or no valid columns) and both scoring modes, pinned
+# bit-identical against the PER-SET single-plane reference — extends PR 2's
+# single-shape bit-identity tests to the whole shape envelope the batched
+# admission pipeline exercises.
+
+def _per_set_reference(bits, sets, planes, valid):
+    """Loop of single-set xam_search_ref calls + host validity masking +
+    first-valid-way reduce — the seed's lookup flow."""
+    out = -np.ones(bits.shape[0], np.int32)
+    for i in range(bits.shape[0]):
+        s = int(sets[i])
+        m = np.asarray(xam_search_ref(
+            jnp.asarray(bits[i:i + 1]), jnp.asarray(planes[s]),
+            jnp.ones((1, bits.shape[1]), jnp.int8)))[0]
+        m = m & valid[s]
+        hits = np.nonzero(m)[0]
+        if hits.size:
+            out[i] = hits[0]
+    return out
+
+
+@pytest.mark.parametrize("scoring", ["int8", "f32"])
+@pytest.mark.parametrize("n_q,n_sets", [
+    (1, 1), (5, 3), (13, 8), (31, 5), (100, 6),
+])
+def test_xam_multiset_parity_matrix(n_q, n_sets, scoring, rng):
+    r, c = 24, 96                          # ragged rows AND columns
+    planes, valid, bits, sets = _random_multiset(rng, n_sets, r, c, n_q)
+    # half the sets are EMPTY (no valid column at all)...
+    valid[::2] = 0
+    # ...and (when possible) one set receives no queries
+    if n_sets > 1:
+        sets[sets == n_sets - 1] = 0
+    got = np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid),
+        scoring=scoring))
+    want = _per_set_reference(bits, sets, planes, valid)
+    np.testing.assert_array_equal(got, want)
+    want_ref = np.asarray(xam_search_multiset_ref(
+        jnp.asarray(bits), jnp.ones_like(jnp.asarray(bits)),
+        jnp.asarray(sets), jnp.asarray(planes), jnp.asarray(valid)))
+    np.testing.assert_array_equal(got, want_ref)
+
+
+@pytest.mark.parametrize("scoring", ["int8", "f32"])
+def test_xam_multiset_all_sets_empty(scoring, rng):
+    """Fully empty index (cold start): every query must miss in both
+    scoring modes."""
+    n_sets, r, c = 4, 16, 128
+    planes = np.zeros((n_sets, r, c), np.int8)
+    valid = np.zeros((n_sets, c), np.int8)
+    bits = xam_ops.words_to_bits_np(
+        rng.integers(0, 2 ** 32, 11, dtype=np.uint32), r)
+    sets = rng.integers(0, n_sets, 11).astype(np.int32)
+    got = np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid),
+        scoring=scoring))
+    assert (got == -1).all()
+
+
+@pytest.mark.parametrize("n_q", [1, 2, 3, 9, 17, 33, 100])
+@pytest.mark.parametrize("window", [8, 32])
+def test_hopscotch_parity_matrix(n_q, window, rng):
+    """Ragged / non-pow2 batch sizes through the batched hopscotch kernel,
+    bit-identical to the per-query reference (dense collisions so
+    first-match tie-breaks are actually exercised)."""
+    n_slots = window * 16
+    t_lo = rng.integers(0, 6, n_slots, dtype=np.uint32)
+    t_hi = rng.integers(0, 2, n_slots, dtype=np.uint32)
+    homes = rng.integers(0, n_slots - 2 * window, n_q).astype(np.int32)
+    q_lo = rng.integers(0, 6, n_q, dtype=np.uint32)
+    q_hi = rng.integers(0, 2, n_q, dtype=np.uint32)
+    got = np.asarray(hop_ops.hopscotch_lookup(
+        t_lo, t_hi, homes, q_lo, q_hi, window=window))
+    want = np.asarray(hopscotch_lookup_ref(
+        jnp.asarray(t_lo), jnp.asarray(t_hi), jnp.asarray(homes),
+        jnp.asarray(q_lo), jnp.asarray(q_hi), window))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hopscotch_empty_table(rng):
+    """All-EMPTY (zero) table: every non-zero query misses."""
+    window, n_q = 16, 9
+    t = np.zeros(window * 8, np.uint32)
+    homes = rng.integers(0, window * 6, n_q).astype(np.int32)
+    q = rng.integers(1, 2 ** 32, n_q, dtype=np.uint32)
+    got = np.asarray(hop_ops.hopscotch_lookup(
+        t, t, homes, q, q, window=window))
+    assert (got == -1).all()
+
+
 def test_multiset_grouping_layout(rng):
     """Every query lands in a block whose block_set matches its set id."""
     sets = rng.integers(0, 5, 37)

@@ -119,14 +119,20 @@ def test_t_mww_throttle_blocks_admissions(rng):
 
 
 def test_t_mww_window_reset_reopens_admission(rng):
+    # budget = set_ways * m_writes = 4 installs per 16-op window (the shared
+    # core/wear.py accounting; ops stand in for cycles).
     idx = MonarchKVIndex(KVIndexConfig(
-        n_sets=1, set_ways=64, admit_after_reads=0, m_writes=0,
-        window_ops=4))
-    toks = rng.integers(1, 100_000, (1, 64)).astype(np.int32)
-    idx.admit(toks)
-    assert idx.stats.throttled > 0
-    idx.lookup(toks)                   # ops roll the window over
-    assert (idx.window_admits == 0).all()
+        n_sets=1, set_ways=4, admit_after_reads=0, m_writes=1,
+        window_ops=16))
+    idx.admit_fps(np.arange(1, 9, dtype=np.uint32))
+    assert idx.stats.admissions == 4       # budget exhausted mid-batch
+    assert idx.stats.throttled == 4
+    toks = rng.integers(1, 100_000, (1, 8 * CHUNK_TOKENS)).astype(np.int32)
+    idx.lookup(toks)                       # ops advance past the window
+    assert idx.ops_total >= 16
+    idx.admit_fps(np.arange(100, 103, dtype=np.uint32))
+    assert idx.stats.admissions == 7       # window rolled over: admitting again
+    assert idx.stats.throttled == 4
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +190,156 @@ def test_rotary_remap_moves_new_placements(rng):
     idx._rotate()
     after = idx._set_of(np.asarray([fp]))[0]
     assert after == (before + 7) % idx.cfg.n_sets
+
+
+# ---------------------------------------------------------------------------
+# Batched admission: one device call, sequential-order equivalence.
+# ---------------------------------------------------------------------------
+
+def test_admit_is_single_device_call(rng):
+    """The whole admission batch goes through ONE jitted device launch (the
+    pre-PR implementation issued one install call per fingerprint)."""
+    idx = MonarchKVIndex(_small_cfg(n_sets=8))
+    toks = rng.integers(1, 50_000, (4, 256)).astype(np.int32)
+    idx.admit(toks)                        # 64 unique chunks, 8 sets
+    assert idx.stats.admit_calls == 1
+    idx.admit(toks)                        # resident re-offers: still 1 call
+    assert idx.stats.admit_calls == 2
+    assert idx.stats.admissions == 64
+
+
+def _snapshot(idx: MonarchKVIndex):
+    return dict(
+        slot_of=dict(idx.slot_of),
+        valid=np.asarray(idx.valid).copy(),
+        fp_of=np.asarray(idx.fp_of).copy(),
+        read_after=np.asarray(idx.read_after).copy(),
+        set_writes=np.asarray(idx.set_writes).copy(),
+        counter=int(idx.counter),
+        ops=idx.ops_total,
+        window_writes=np.asarray(idx.wear_state.window_writes).copy(),
+        locked_until=np.asarray(idx.wear_state.locked_until).copy(),
+        stats=(idx.stats.admissions, idx.stats.admission_skips,
+               idx.stats.throttled, idx.stats.evictions),
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), n_sets=st.sampled_from([1, 4, 8]))
+def test_batched_admit_equals_sequential_order(seed, n_sets):
+    """Satellite pin: a randomized admit/lookup/evict/rotate schedule run
+    through the batched pipeline must equal the same schedule admitted one
+    fingerprint at a time (the seed's sequential admission order) — same
+    shadow map, device planes, wear state and stats.  The only intentional
+    divergence from the seed is documented in kv_index.py: rotation now
+    remaps resident entries instead of orphaning them, and the t_MWW window
+    is the shared core/wear.py accounting."""
+    rng = np.random.default_rng(seed)
+    cfg = dict(n_sets=n_sets, set_ways=16, admit_after_reads=1,
+               m_writes=1, window_ops=64, rotate_every=1 << 30)
+    a = MonarchKVIndex(KVIndexConfig(**cfg))
+    b = MonarchKVIndex(KVIndexConfig(**cfg))
+    for step in range(6):
+        toks = rng.integers(1, 2000, (2, 8 * CHUNK_TOKENS)).astype(np.int32)
+        op = rng.random()
+        if op < 0.55:
+            fps = np.unique(
+                fingerprint_blocks(toks, CHUNK_TOKENS).reshape(-1))
+            a.admit_fps(fps)               # one batched device call
+            for fp in fps:                 # sequential reference order
+                b.admit_fps(np.asarray([fp], np.uint32))
+        elif op < 0.85:
+            got = a.lookup(toks)
+            want = b.lookup(toks)
+            np.testing.assert_array_equal(got, want)
+        else:
+            a._rotate()
+            b._rotate()
+        sa, sb = _snapshot(a), _snapshot(b)
+        for k in sa:
+            if isinstance(sa[k], np.ndarray):
+                np.testing.assert_array_equal(sa[k], sb[k], err_msg=k)
+            else:
+                assert sa[k] == sb[k], (k, sa[k], sb[k])
+
+
+def test_clock_rebase_keeps_windows_live():
+    """A long-lived op counter folds back before the int32 cycle domain
+    wraps, and the t_MWW window keeps expiring/throttling correctly across
+    the fold."""
+    from repro.core import wear
+    idx = MonarchKVIndex(KVIndexConfig(
+        n_sets=1, set_ways=4, admit_after_reads=0, m_writes=1,
+        window_ops=16))
+    idx.ops_total = wear.CLOCK_REBASE_AT + 3
+    idx.admit_fps(np.arange(1, 9, dtype=np.uint32))
+    assert idx.ops_total < wear.CLOCK_REBASE_AT    # clock folded
+    assert idx.stats.admissions == 4               # budget still enforced
+    assert idx.stats.throttled == 4
+    idx.ops_total += 32                            # window expires
+    idx.admit_fps(np.arange(100, 103, dtype=np.uint32))
+    assert idx.stats.admissions == 7
+
+
+# ---------------------------------------------------------------------------
+# Rotation: device start-gap remap preserves residency; rotation + zipf
+# skew levels per-set install wear.
+# ---------------------------------------------------------------------------
+
+def test_rotation_remap_preserves_residency(rng):
+    """Intentional change vs the seed (documented in kv_index.py): the
+    device plane roll moves resident entries WITH the offset bump, so they
+    stay searchable after rotation — and stay in agreement with the shadow
+    map."""
+    idx = MonarchKVIndex(_small_cfg(n_sets=8, set_ways=32))
+    toks = rng.integers(1, 4000, (4, 128)).astype(np.int32)
+    idx.admit(toks)
+    assert idx.lookup(toks).all()
+    for _ in range(3):
+        idx._rotate()
+        got = idx.lookup(toks).reshape(-1)
+        want = idx._shadow_hits(
+            fingerprint_blocks(toks, CHUNK_TOKENS).reshape(-1))
+        np.testing.assert_array_equal(got, want)
+        assert got.all()                   # still resident after remap
+    # shadow map agrees with the rolled fp planes slot-for-slot
+    fp_plane = np.asarray(idx.fp_of)
+    for fp, (s, w) in idx.slot_of.items():
+        assert fp_plane[s, w] == fp
+
+
+def _fps_for_set(idx: MonarchKVIndex, n: int, target_set: int) -> np.ndarray:
+    """n distinct fingerprints whose (offset-0) home is ``target_set``."""
+    out, fp = [], 1
+    while len(out) < n:
+        cand = np.uint32(fp)
+        if int(idx._set_of(np.asarray([cand]))[0]) == target_set:
+            out.append(cand)
+        fp += 1
+    return np.asarray(out, np.uint32)
+
+
+def test_rotation_levels_skewed_install_wear():
+    """Satellite invariant: under a maximally skewed (single-home-set)
+    install trace, rotary remapping bounds the max-per-set write count
+    relative to the mean; without rotation the wear concentrates."""
+    mk = lambda rot: MonarchKVIndex(KVIndexConfig(
+        n_sets=8, set_ways=16, admit_after_reads=0, m_writes=1 << 15,
+        window_ops=1 << 30, rotate_every=rot))
+    hot = mk(1 << 30)
+    fps = _fps_for_set(hot, 128, target_set=0)
+    for chunk in fps.reshape(8, 16):       # same trace, batch size 16
+        hot.admit_fps(chunk)
+    w_hot = hot.write_distribution().astype(float)
+    assert w_hot.max() / w_hot.mean() == 8.0   # all installs in one set
+
+    lev = mk(16)                           # rotate every 16 admissions
+    for chunk in fps.reshape(8, 16):
+        lev.admit_fps(chunk)
+    assert lev.stats.rotations >= 7
+    w_lev = lev.write_distribution().astype(float)
+    assert w_lev.sum() == w_hot.sum()      # writes conserved under rotation
+    assert w_lev.max() / w_lev.mean() <= 2.0   # leveled across sets
 
 
 # ---------------------------------------------------------------------------

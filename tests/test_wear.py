@@ -160,6 +160,199 @@ def test_wear_counters_invariants(seed, n_writes):
 
 
 # ---------------------------------------------------------------------------
+# Differential tests: the batched device ops (record_writes /
+# window_would_exceed) against the host per-write loop — the serving path
+# and the simulator must be ONE wear implementation, step for step.
+# ---------------------------------------------------------------------------
+
+def _random_trace(rng, n, n_supersets):
+    ss = rng.integers(0, n_supersets, n).astype(np.int32)
+    dirty = rng.integers(0, 2, n).astype(bool)
+    cycles = np.cumsum(rng.integers(0, 40, n)).astype(np.int32)
+    return ss, dirty, cycles
+
+
+def _host_loop(cfg, ss, dirty, cycles):
+    """One record_write dispatch per trace element — the per-write host
+    reference (jitted per step so the loop is affordable; the semantics
+    under test are unchanged)."""
+    step = jax.jit(lambda st, s, d, c: wear.record_write(st, cfg, s, d, c))
+    st = wear.init_state(cfg)
+    rots, fls = [], []
+    for s, d, c in zip(ss, dirty, cycles):
+        st, rot, fl = step(st, jnp.asarray(int(s)), jnp.asarray(bool(d)),
+                           jnp.asarray(int(c)))
+        rots.append(bool(rot))
+        fls.append(int(fl))
+    return st, np.asarray(rots), np.asarray(fls)
+
+
+def _assert_states_equal(a: wear.WearState, b: wear.WearState):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), n_writes=st.integers(1, 80))
+def test_record_writes_matches_host_loop(seed, n_writes):
+    """Device batched trace == host record_write loop, step for step:
+    per-step rotate/flush outputs and every final-state leaf (small
+    dc_limit + t_MWW window so rotations AND locks fire inside the
+    trace)."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(n_supersets=8, dc_limit=3, t_mww_cycles=64,
+               blocks_per_superset=2, m_writes=1)
+    ss, dirty, cycles = _random_trace(rng, n_writes, 8)
+    want_st, want_rot, want_fl = _host_loop(cfg, ss, dirty, cycles)
+    got_st, got_rot, got_fl = wear.record_writes_device(
+        wear.init_state(cfg), cfg, ss, dirty, cycles)
+    np.testing.assert_array_equal(np.asarray(got_rot), want_rot)
+    np.testing.assert_array_equal(np.asarray(got_fl), want_fl)
+    _assert_states_equal(got_st, want_st)
+    # internal accounting closes: outputs sum to the state totals
+    assert int(got_st.total_rotates) == int(want_rot.sum())
+    assert int(got_st.total_flushed) == int(want_fl.sum())
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 31))
+def test_record_writes_active_mask_skips_padding(seed):
+    """Inactive (padding) lanes are exact no-ops: a masked batch equals the
+    host loop over only the active subtrace — the pow2-bucketed admission
+    pipeline depends on this."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(n_supersets=4, dc_limit=4, t_mww_cycles=128,
+               blocks_per_superset=2, m_writes=1)
+    n = 32
+    ss, dirty, cycles = _random_trace(rng, n, 4)
+    active = rng.integers(0, 2, n).astype(bool)
+    got_st, got_rot, got_fl = wear.record_writes_device(
+        wear.init_state(cfg), cfg, ss, dirty, cycles, active)
+    want_st, want_rot, _ = _host_loop(
+        cfg, ss[active], dirty[active], cycles[active])
+    _assert_states_equal(got_st, want_st)
+    np.testing.assert_array_equal(np.asarray(got_rot)[active], want_rot)
+    assert not np.asarray(got_rot)[~active].any()
+    assert not np.asarray(got_fl)[~active].any()
+
+
+def test_window_would_exceed_matches_lock_semantics():
+    """would_exceed is the reject-before-write twin of the lock-after-
+    overflow accounting: it fires exactly when one more record_write would
+    set the lock."""
+    cfg = _cfg(n_supersets=2, m_writes=1, blocks_per_superset=2,
+               t_mww_cycles=100)   # budget = 2 writes / window
+    st_ = wear.init_state(cfg)
+    s = jnp.asarray(0)
+    for i in range(2):
+        assert not bool(wear.window_would_exceed(st_, cfg, s, jnp.asarray(i)))
+        st_, _, _ = wear.record_write(st_, cfg, s, jnp.asarray(False),
+                                      jnp.asarray(i))
+    # third write would blow the budget -> predicate fires BEFORE the write
+    assert bool(wear.window_would_exceed(st_, cfg, s, jnp.asarray(2)))
+    assert not bool(wear.is_locked(st_, s, jnp.asarray(2)))
+    # window rollover clears the predicate
+    assert not bool(wear.window_would_exceed(st_, cfg, s, jnp.asarray(250)))
+    # WearDyn parameterization gives the same answer as the WearConfig
+    assert bool(wear.window_would_exceed(st_, wear.dyn_of(cfg), s,
+                                         jnp.asarray(2)))
+
+
+def test_record_writes_total_write_conservation():
+    """Write accounting is conserved across rotations: every applied write
+    lands in exactly one inter-rotation segment (write_counter resets on
+    rotate, so segments + final counter must sum to the trace length)."""
+    rng = np.random.default_rng(7)
+    cfg = _cfg(n_supersets=8, dc_limit=2, t_mww_cycles=1 << 20)
+    n = 64
+    ss, dirty, cycles = _random_trace(rng, n, 8)
+    dirty[:] = True                       # every write dirties -> rotations
+    st_, rots, _ = wear.record_writes_device(
+        wear.init_state(cfg), cfg, ss, dirty, cycles)
+    rots = np.asarray(rots)
+    # each rotate closes a segment; counters reset to 0 at each rotation.
+    # Segment lengths sum to n: (writes since last rotate) + (full
+    # segments) account for every write exactly once.
+    seg_ends = np.nonzero(rots)[0]
+    writes_in_segments = 0
+    prev = -1
+    for e in seg_ends:
+        writes_in_segments += e - prev
+        prev = e
+    assert writes_in_segments + int(st_.write_counter) == n
+    assert int(st_.total_rotates) == len(seg_ends)
+
+
+def test_rebase_clock_preserves_decisions():
+    """Shifting clock + stored timestamps together is an exact no-op for
+    every window/lock decision (the int32 wrap guard for long-lived
+    serving op counters)."""
+    cfg = _cfg(n_supersets=2, m_writes=1, blocks_per_superset=2,
+               t_mww_cycles=100)   # budget = 2 writes / window
+    st_ = wear.init_state(cfg)
+    for c in (40, 41):
+        st_, _, _ = wear.record_write(st_, cfg, jnp.asarray(0),
+                                      jnp.asarray(False), jnp.asarray(c))
+    shifted = wear.rebase_clock(st_, 30)
+    for cyc in (42, 90, 139, 141, 400):    # in-window, edge, expired
+        want = bool(wear.window_would_exceed(st_, cfg, jnp.asarray(0),
+                                             jnp.asarray(cyc)))
+        got = bool(wear.window_would_exceed(shifted, cfg, jnp.asarray(0),
+                                            jnp.asarray(cyc - 30)))
+        assert got == want, cyc
+        assert (bool(wear.is_locked(shifted, jnp.asarray(0),
+                                    jnp.asarray(cyc - 30)))
+                == bool(wear.is_locked(st_, jnp.asarray(0),
+                                       jnp.asarray(cyc))))
+    # never-written supersets floor out instead of underflowing
+    many = wear.rebase_clock(wear.rebase_clock(st_, wear.CLOCK_REBASE_AT),
+                             wear.CLOCK_REBASE_AT)
+    assert int(many.window_start.min()) >= -wear.CLOCK_REBASE_AT
+
+
+# ---------------------------------------------------------------------------
+# One-implementation wiring: hashtable inserts and flat-CAM command traces
+# feed the same wear machinery.
+# ---------------------------------------------------------------------------
+
+def test_hashtable_inserts_feed_shared_wear_ops():
+    from repro.apps.hashtable import HopscotchTable
+    cfg = _cfg(n_supersets=8, dc_limit=1 << 20, wc_limit=1 << 20,
+               t_mww_cycles=1 << 20, blocks_per_superset=64)
+    t = HopscotchTable(8, window=16, wear_cfg=cfg)
+    rng = np.random.default_rng(3)
+    for k in rng.integers(1, 1 << 40, 150):
+        t.insert(int(k), 1)
+    rep = t.wear_report()
+    # every stats.write was charged to the wear state (device counter) and
+    # to the per-superset snapshot
+    assert rep["writes_total"] == t.stats.writes
+    assert int(t.wear_state.write_counter) == t.stats.writes
+    assert t.writes_per_superset.sum() == t.stats.writes
+    # the snapshot drives the same Fig. 11 lifetime estimator
+    lt = t.lifetime_estimate()
+    assert 0 < lt.years <= lt.ideal_years * 1.0001
+
+
+def test_cam_data_write_tracked_charges_trace_and_wear():
+    from repro.core import controller
+    cfg = _cfg(n_supersets=4, t_mww_cycles=1 << 20)
+    st_ = controller.init_flat_cam(n_sets=2, rows=16, cols=32)
+    ws = wear.init_state(cfg)
+    key = jnp.ones(16, jnp.int8)
+    st_, ws, rot, counts = controller.cam_data_write_tracked(
+        st_, ws, cfg, 0, 5, key, superset=2, cycle=0)
+    assert int(counts.writes) == 1         # command trace charged
+    assert int(ws.write_counter) == 1      # same event recorded as wear
+    assert int(ws.swt_w[2]) == 1
+    assert not bool(rot)
+    assert int(st_.sets_bits[0, 3, 5]) == 1
+
+
+# ---------------------------------------------------------------------------
 # D/R install filter (§8 "Mitigating Writes").
 # ---------------------------------------------------------------------------
 
