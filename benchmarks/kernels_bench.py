@@ -20,6 +20,7 @@ from repro.core import wear
 from repro.kernels.hopscotch import ops as hop_ops
 from repro.kernels.string_match import ops as sm_ops
 from repro.kernels.xam_search import ops as xam_ops
+from repro.serve.admit_queue import AdmitQueue
 from repro.serve.kv_index import (KVIndexConfig, MonarchKVIndex,
                                   _install_column)
 
@@ -111,6 +112,21 @@ def run(csv_rows: list[str], quick: bool = False):
           f"({t.median_us / (32 * 512 // 16):.1f} us/chunk)")
     csv_rows.append(f"kv_index_lookup_32x512,{t.median_us:.0f},")
 
+    # set-sharded lookup: same 32x512 batch fanned out over 4 set shards
+    # (two-level grouping, one fused launch per shard, dispatched before
+    # any sync).  On this 1-device rig the shards co-locate — the number
+    # tracks the fan-out overhead; on a ("sets",) mesh the launches run
+    # on separate devices.
+    idx_s = MonarchKVIndex(KVIndexConfig(n_sets=8, n_shards=4))
+    idx_s.admit(toks_big)
+    idx_s.admit(toks_big)
+    t = time_callable(lambda: idx_s.lookup(toks_big), warmup=1, reps=reps)
+    timings["kv_index_lookup_sharded"] = t
+    print(f"kv_index lookup 32x512 tokens, 4 set shards: "
+          f"{t.median_us:.0f} us ({idx_s.stats.searches} launches/"
+          f"{idx_s.stats.lookups} lookups)")
+    csv_rows.append(f"kv_index_lookup_sharded,{t.median_us:.0f},4shards")
+
     # batched admission: ONE jitted device call per 64-fingerprint batch,
     # vs the pre-PR host loop (one install dispatch per fingerprint).
     # Fresh unique fingerprints every rep so the install path (not the
@@ -136,6 +152,63 @@ def run(csv_rows: list[str], quick: bool = False):
           f"-> batched speedup {t2.median_us / t.median_us:.1f}x")
     csv_rows.append(f"kv_index_admit_hostloop,{t2.median_us:.0f},"
                     f"{t2.median_us / t.median_us:.1f}x")
+
+    # async admission: a serving-loop step is admit(64 fps) + model
+    # compute.  Inline pays admit + compute in series; behind the
+    # AdmitQueue the worker drains the install WHILE the jitted compute
+    # runs (XLA releases the GIL), so a window of steps should approach
+    # max(sum compute, sum admit) — the admit latency is hidden.  Each
+    # timed callable is a WHOLE window of steps plus (async) the drain
+    # barrier: throughput, not per-step latency, because a single step's
+    # cost depends on where the worker happens to be, which made the
+    # per-step median a coin flip on a contended CPU.  Fresh unique
+    # fingerprints every step, as in the batched-admit bench above.
+    win_steps = 6
+    w_proxy = jnp.asarray(rng.standard_normal((256, 256)).astype(np.float32))
+
+    @jax.jit
+    def _compute_proxy(x):
+        for _ in range(4):
+            x = jnp.tanh(x @ x)
+        return x
+
+    n_windows = reps + 1               # warmup=1
+    n_async = n_fp * win_steps * n_windows * 2
+    async_fps = 1 + np.arange(n_async, dtype=np.uint32) + 2_000_000
+    half = n_async // 2
+    inline_iter = iter(np.split(async_fps[:half], half // n_fp))
+    queue_iter = iter(np.split(async_fps[half:], half // n_fp))
+
+    idx_in = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=0))
+
+    def window_inline():
+        for _ in range(win_steps):
+            idx_in.admit_fps(next(inline_iter))
+            jax.block_until_ready(_compute_proxy(w_proxy))
+
+    t_in = time_callable(window_inline, warmup=1, reps=reps)
+    timings["kv_index_admit_inline"] = t_in
+
+    idx_as = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=0))
+    q = AdmitQueue(idx_as, background=True, read_your_writes=False)
+
+    def window_async():
+        for _ in range(win_steps):
+            q.submit(next(queue_iter))
+            jax.block_until_ready(_compute_proxy(w_proxy))
+        q.flush()                      # window completes all its installs
+
+    t_as = time_callable(window_async, warmup=1, reps=reps)
+    q.close()
+    timings["kv_index_admit_async"] = t_as
+    hidden = (t_in.median_us - t_as.median_us) / win_steps
+    print(f"kv_index admit 64 fps + compute x{win_steps}: "
+          f"inline {t_in.median_us:.0f} us vs async {t_as.median_us:.0f} us"
+          f" incl. drain ({hidden:.0f} us/step of admit latency hidden)")
+    csv_rows.append(f"kv_index_admit_inline,{t_in.median_us:.0f},"
+                    f"{win_steps}x64fp")
+    csv_rows.append(f"kv_index_admit_async,{t_as.median_us:.0f},"
+                    f"{win_steps}x64fp")
 
     # wear-op microbench: a 256-write trace through the donated device op
     # (the §8 accounting the admit pipeline fuses per install).

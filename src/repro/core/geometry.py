@@ -97,6 +97,73 @@ def port_select(k: int, mode_column_in: bool, grid: int = 8):
 
 
 # ---------------------------------------------------------------------------
+# Set-axis sharding (serving): contiguous-block ownership of the set planes.
+# The serving index (serve/kv_index.py) splits its n_sets CAM sets across
+# n_shards mesh devices; these helpers are THE shard-address arithmetic, so
+# host grouping, admission fan-out and the rotation remap all agree on which
+# shard owns which physical set.
+# ---------------------------------------------------------------------------
+
+
+def sets_per_shard(n_sets: int, n_shards: int) -> int:
+    """Sets owned by each shard under contiguous-block ownership.
+
+    Parameters
+    ----------
+    n_sets : int
+        Total (global) CAM set count.
+    n_shards : int
+        Shard count; must divide ``n_sets`` evenly so every shard's plane
+        arrays share one compiled shape.
+
+    Returns
+    -------
+    int
+        ``n_sets // n_shards``.
+
+    Examples
+    --------
+    >>> sets_per_shard(8, 4)
+    2
+    """
+    if n_shards < 1 or n_sets % n_shards != 0:
+        raise ValueError(
+            f"n_shards={n_shards} must be >=1 and divide n_sets={n_sets}")
+    return n_sets // n_shards
+
+
+def shard_of_set(set_ids, n_sets: int, n_shards: int):
+    """Decompose global physical set ids into ``(shard, local_set)``.
+
+    Shard ``k`` owns the contiguous block of global sets
+    ``[k * sets_per_shard, (k + 1) * sets_per_shard)`` — a pure relabeling,
+    so the fingerprint -> physical-set mapping (and therefore every hit,
+    install and wear decision) is independent of the shard count.
+
+    Parameters
+    ----------
+    set_ids : array_like of int
+        Global physical set ids in ``[0, n_sets)``.
+    n_sets, n_shards : int
+        Global set count and shard count (``n_shards`` divides ``n_sets``).
+
+    Returns
+    -------
+    (shard, local) : tuple of arrays
+        ``shard[i]`` owns query i's set; ``local[i]`` is the row inside
+        that shard's ``(sets_per_shard, ...)`` plane arrays.
+    """
+    s_local = sets_per_shard(n_sets, n_shards)
+    return set_ids // s_local, set_ids % s_local
+
+
+def shard_set_slice(shard: int, n_sets: int, n_shards: int) -> slice:
+    """Global-set slice owned by ``shard`` (contiguous-block ownership)."""
+    s_local = sets_per_shard(n_sets, n_shards)
+    return slice(shard * s_local, (shard + 1) * s_local)
+
+
+# ---------------------------------------------------------------------------
 # Rotary offsets (§8): primes per level, vault bumped every 8th rotate.
 # ---------------------------------------------------------------------------
 

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -230,25 +232,114 @@ def _window_now(state: WearState, cfg, superset, cycle):
 
 def window_would_exceed(state: WearState, cfg, superset: jnp.ndarray,
                         cycle: jnp.ndarray) -> jnp.ndarray:
-    """True when one more write to ``superset`` at ``cycle`` would blow the
-    t_MWW window budget.  Admission controllers (cache mode serving) consult
-    this BEFORE spending the XAM write — the §6.2 lifetime throttle as a
-    reject-before-write predicate rather than the simulator's lock-after-
-    overflow accounting.  ``cfg`` may be a WearConfig or a WearDyn."""
+    """Reject-before-write t_MWW predicate (§6.2 lifetime throttle).
+
+    Parameters
+    ----------
+    state : WearState
+        Current wear state (host or device resident).
+    cfg : WearConfig | WearDyn
+        Source of ``window_write_budget`` / ``t_mww_cycles`` — static
+        config and traced dynamic knobs are interchangeable here.
+    superset : jnp.ndarray, int32 (scalar or (N,))
+        Superset id(s) the prospective write targets.
+    cycle : jnp.ndarray, int32
+        Current cycle (serving uses its op counter as the cycle proxy).
+
+    Returns
+    -------
+    jnp.ndarray, bool (same shape as ``superset``)
+        True when ONE more write at ``cycle`` would blow the t_MWW window
+        budget.  Admission controllers (cache-mode serving) consult this
+        BEFORE spending the XAM write, unlike the simulator's
+        lock-after-overflow accounting in :func:`record_write` — both use
+        the same ``_window_now`` rollover arithmetic.
+    """
     cycle = jnp.asarray(cycle, jnp.int32)
     _, _, writes_now = _window_now(state, cfg, superset, cycle)
     return (writes_now + 1) > cfg.window_write_budget
+
+
+def shard_states(cfg: WearConfig, n_shards: int) -> list[WearState]:
+    """Per-shard §8 wear states for a set-sharded serving index.
+
+    Each shard tracks its own contiguous block of
+    ``cfg.n_supersets // n_shards`` supersets; because every t_MWW
+    decision reads only per-superset rows (``window_writes`` /
+    ``window_start`` / ``locked_until``), splitting the state this way is
+    decision-equivalent to one global state — only the global SWT scalars
+    (write/superset/dirty counters) become shard-local, and the serving
+    index disables the rotate signals those feed.
+
+    Returns a list of ``n_shards`` fresh :func:`init_state` states, each
+    sized ``n_supersets // n_shards`` (which must divide evenly).
+    """
+    if n_shards < 1 or cfg.n_supersets % n_shards != 0:
+        raise ValueError(
+            f"n_shards={n_shards} must divide n_supersets={cfg.n_supersets}")
+    sub = dataclasses.replace(cfg, n_supersets=cfg.n_supersets // n_shards)
+    return [init_state(sub) for _ in range(n_shards)]
+
+
+def concat_states(states: list[WearState]) -> WearState:
+    """Global read-only view over per-shard wear states.
+
+    Per-superset fields are concatenated in shard order (shard k's rows
+    land at global supersets ``[k * s_local, (k + 1) * s_local)`` —
+    matching ``geometry.shard_of_set`` ownership); scalar counters are
+    summed; the rotary offsets are taken from shard 0 (the serving index
+    never consumes them).  Used for reporting only — never write through
+    the result.
+    """
+    if len(states) == 1:
+        return states[0]
+    # Shard states may live on different mesh devices: gather through the
+    # host (this is a reporting path, never a compute path).
+    cat = lambda f: jnp.asarray(
+        np.concatenate([np.asarray(getattr(s, f)) for s in states]))
+    tot = lambda f: jnp.asarray(
+        sum(np.asarray(getattr(s, f)) for s in states))
+    return WearState(
+        swt_w=cat("swt_w"), swt_d=cat("swt_d"),
+        write_counter=tot("write_counter"),
+        superset_counter=tot("superset_counter"),
+        dirty_counter=tot("dirty_counter"),
+        offsets=states[0].offsets,
+        window_writes=cat("window_writes"),
+        window_start=cat("window_start"),
+        locked_until=cat("locked_until"),
+        total_rotates=tot("total_rotates"),
+        total_flushed=tot("total_flushed"),
+    )
 
 
 def record_writes(state: WearState, cfg, supersets, makes_dirty, cycles,
                   active=None):
     """Batched :func:`record_write`: apply a trace of writes in order.
 
-    supersets/makes_dirty/cycles : (B,) arrays; ``active`` (B,) bool masks
-    padding lanes (pow2-bucketed callers) — an inactive lane is a no-op.
-    Returns ``(state, rotated (B,) bool, flushed (B,) int32)``; the per-step
-    outputs match a Python loop over ``record_write`` exactly (pinned by
-    tests/test_wear.py's differential trace tests).
+    Parameters
+    ----------
+    state : WearState
+        State the trace starts from.
+    cfg : WearConfig | WearDyn
+        Durability knobs (static or traced).
+    supersets : (B,) int32
+        Target superset per write, in trace order.
+    makes_dirty : (B,) bool
+        Whether each write dirties its superset (drives the DC counter).
+    cycles : (B,) int32
+        Cycle stamp per write (monotone within the trace).
+    active : (B,) bool, optional
+        Masks padding lanes (pow2-bucketed callers) — an inactive lane is
+        a no-op on state AND outputs.
+
+    Returns
+    -------
+    (state, rotated, flushed)
+        New state, per-step rotate flags ``(B,) bool`` and flushed-superset
+        counts ``(B,) int32``.  The per-step outputs match a Python loop
+        over :func:`record_write` exactly (pinned by tests/test_wear.py's
+        differential trace tests).
     """
     supersets = jnp.asarray(supersets, jnp.int32)
     makes_dirty = jnp.asarray(makes_dirty, bool)
@@ -267,7 +358,10 @@ def record_writes(state: WearState, cfg, supersets, makes_dirty, cycles,
     return state, rots, fls
 
 
-#: Device entry point: donated state, one dispatch per write batch.
+#: Device entry point for :func:`record_writes`: the state argument is
+#: DONATED (the caller's reference is invalid after the call — rebind to
+#: the returned state), so a long-lived serving/app loop costs one device
+#: dispatch and zero state copies per write batch.
 record_writes_device = functools.partial(
     jax.jit, donate_argnums=(0,))(record_writes)
 
@@ -314,7 +408,18 @@ def rebase_clock(state: WearState, delta) -> WearState:
 # ---------------------------------------------------------------------------
 
 def install_decision(dirty: jnp.ndarray, read: jnp.ndarray):
-    """Returns (install_in_monarch, forward_to_dram)."""
+    """Fate of an L3-evicted block from its D (dirty) / R (read) flags.
+
+    Returns ``(install_in_monarch, forward_to_dram)`` — read blocks
+    install, dirty-never-read blocks are forwarded, clean-never-read
+    blocks are dropped:
+
+    >>> import numpy as np
+    >>> inst, fwd = install_decision(np.array([1, 1, 0, 0]),
+    ...                              np.array([1, 0, 1, 0]))
+    >>> np.asarray(inst).tolist(), np.asarray(fwd).tolist()
+    ([True, False, True, False], [False, True, False, False])
+    """
     dirty = dirty.astype(bool)
     read = read.astype(bool)
     install = read  # D&R and !D&R install

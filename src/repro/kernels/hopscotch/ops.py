@@ -17,12 +17,36 @@ def hopscotch_lookup(table_lo, table_hi, homes, q_lo, q_hi, *, window: int,
                      block_q: int | None = None,
                      use_kernel: bool = True,
                      interpret: bool | None = None) -> jnp.ndarray:
-    """First-match offset within each query's H-bucket window (-1 = miss).
-    The kernel path processes ``block_q`` (default 8) queries per grid
-    step, gather-DMAing all their window tiles together.  The query count
-    is bucketed to a power of two HERE, on the host, so ragged batches
-    reuse a handful of compiled shapes (the jitted kernel specializes on
-    its input shapes)."""
+    """Batched hopscotch window probe over a packed 64-bit key table.
+
+    Parameters
+    ----------
+    table_lo, table_hi : (N,) uint32
+        Low/high halves of the table's 64-bit keys (0 = EMPTY sentinel).
+    homes : (Q,) int32
+        Home slot of each query (bucket base the H-window starts at).
+    q_lo, q_hi : (Q,) uint32
+        Low/high halves of the 64-bit query keys.
+    window : int
+        Hopscotch neighborhood size H (entries scanned per query).
+    block_q : int, optional
+        Queries per kernel grid step (default 8); each step gather-DMAs
+        all its queries' window tiles together.
+    use_kernel, interpret
+        Reference-path switch and Pallas interpret-mode flag (defaults
+        to True off-TPU).
+
+    Returns
+    -------
+    jnp.ndarray, shape (Q,), int32
+        First-match offset within each query's window; ``-1`` = miss.
+
+    Notes
+    -----
+    The query count is bucketed to a power of two HERE, on the host, so
+    ragged batches reuse a handful of compiled shapes (the jitted kernel
+    specializes on its input shapes).
+    """
     table_lo = jnp.asarray(table_lo, jnp.uint32)
     table_hi = jnp.asarray(table_hi, jnp.uint32)
     homes = jnp.asarray(homes, jnp.int32)

@@ -12,7 +12,26 @@ _ON_TPU = jax.default_backend() == "tpu"
 
 def string_match(text, pattern, *, use_kernel: bool = True,
                  tile: int = 4096, interpret: bool | None = None):
-    """Exact-match start positions of ``pattern`` in ``text``."""
+    """Exact-match start positions of ``pattern`` in ``text``.
+
+    Parameters
+    ----------
+    text : (N,) uint8
+        Haystack bytes.
+    pattern : (P,) uint8
+        Needle bytes (``P`` becomes a static kernel parameter).
+    use_kernel : bool
+        False = numpy-style reference path.
+    tile : int
+        Text bytes per kernel grid step (int8 compares, no upcast).
+    interpret : bool, optional
+        Pallas interpret-mode flag (defaults to True off-TPU).
+
+    Returns
+    -------
+    jnp.ndarray, shape (N,), int8
+        1 at every position where ``text[i : i + P] == pattern``.
+    """
     text = jnp.asarray(text, jnp.uint8)
     pattern = jnp.asarray(pattern, jnp.uint8)
     if not use_kernel:

@@ -92,6 +92,34 @@ def group_queries_by_set(set_ids: np.ndarray, n_sets: int,
     return slot, block_sets, n_qb * block_q
 
 
+def _multiset_dispatch(key_bits: np.ndarray, set_ids: np.ndarray,
+                       planes: jnp.ndarray, valid: jnp.ndarray, *,
+                       block_q: int, scoring: str, interpret: bool):
+    """Group + pad + LAUNCH one fused multi-set search; defer the sync.
+
+    Returns ``(out, slot)``: ``out`` is the in-flight (padded_q,) device
+    result, ``slot`` the padded row of each input query.  Callers that fan
+    out over shards dispatch every shard's kernel before materializing any
+    result, so the launches overlap under jax async dispatch."""
+    key_bits = np.asarray(key_bits, np.int8)
+    _, r = key_bits.shape
+    n_sets = planes.shape[0]
+    slot, block_sets, padded_q = group_queries_by_set(
+        set_ids, n_sets, block_q)
+    keys_p = np.zeros((padded_q, r), np.int8)
+    masks_p = np.zeros((padded_q, r), np.int8)
+    keys_p[slot] = key_bits
+    masks_p[slot] = 1
+    # Query-side operands follow the planes' placement, so shard-local
+    # calls run on the shard's own mesh device.
+    put = lambda x: jax.device_put(jnp.asarray(x), planes.sharding)
+    out = xam_search_multiset_pallas(
+        put(keys_p), put(masks_p), planes, valid,
+        put(block_sets), block_q=block_q,
+        scoring=scoring, interpret=interpret)
+    return out, slot
+
+
 def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
                         planes: jnp.ndarray, valid: jnp.ndarray, *,
                         block_q: int = MULTISET_BLOCK_Q,
@@ -99,27 +127,100 @@ def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
                         interpret: bool | None = None) -> np.ndarray:
     """Batched CAM search across sets in ONE kernel launch.
 
-    key_bits: (Q, R) {0,1} bit rows (host), set_ids: (Q,) int — which of the
-    device-resident (n_sets, R, C) ``planes`` each query searches.  ``valid``
-    (n_sets, C) int8 masks dead columns inside the kernel.  Returns (Q,)
-    int32 first matching valid way per query, -1 = miss.
+    Parameters
+    ----------
+    key_bits : np.ndarray, shape (Q, R), {0, 1}
+        Host-side query bit rows (one row per fingerprint/key).
+    set_ids : np.ndarray, shape (Q,), int
+        Which of the device-resident stored-bit planes each query
+        searches; values in ``[0, n_sets)``.
+    planes : jnp.ndarray, shape (n_sets, R, C), int8
+        Device-resident stored bits, one (R, C) plane per CAM set.
+    valid : jnp.ndarray, shape (n_sets, C), int8
+        Per-way validity; dead ways are masked inside the kernel so they
+        never produce hits.
+    block_q, scoring, interpret
+        Kernel tile width, MXU arithmetic ("int8" default / "f32"), and
+        Pallas interpret-mode flag (defaults to True off-TPU).
+
+    Returns
+    -------
+    np.ndarray, shape (Q,), int32
+        First matching *valid* way per query; ``-1`` = miss.
     """
-    key_bits = np.asarray(key_bits, np.int8)
-    q, r = key_bits.shape
-    n_sets = planes.shape[0]
     if interpret is None:
         interpret = not _ON_TPU
-    slot, block_sets, padded_q = group_queries_by_set(
-        set_ids, n_sets, block_q)
-    keys_p = np.zeros((padded_q, r), np.int8)
-    masks_p = np.zeros((padded_q, r), np.int8)
-    keys_p[slot] = key_bits
-    masks_p[slot] = 1
-    out = xam_search_multiset_pallas(
-        jnp.asarray(keys_p), jnp.asarray(masks_p), planes, valid,
-        jnp.asarray(block_sets), block_q=block_q,
+    out, slot = _multiset_dispatch(
+        key_bits, set_ids, planes, valid, block_q=block_q,
         scoring=_resolve_scoring(scoring), interpret=interpret)
     return np.asarray(out)[slot]
+
+
+def xam_search_multiset_sharded(key_bits: np.ndarray, set_ids: np.ndarray,
+                                planes_by_shard, valid_by_shard, *,
+                                block_q: int = MULTISET_BLOCK_Q,
+                                scoring: str | None = None,
+                                interpret: bool | None = None) -> np.ndarray:
+    """Fan a query batch out over set-sharded CAM planes.
+
+    Two-level extension of :func:`group_queries_by_set`'s pow2 bucketing:
+    queries are first split by owning shard (``set_id // sets_per_shard``,
+    contiguous-block ownership — ``geometry.shard_of_set``), then each
+    shard's sub-batch is grouped into per-set blocks and searched by ONE
+    shard-local :func:`xam_search_multiset` launch against that shard's
+    ``(sets_per_shard, R, C)`` planes.  All shard kernels are dispatched
+    before any result is materialized, so on a multi-device ``("sets",)``
+    mesh the searches run concurrently.
+
+    Parameters
+    ----------
+    key_bits : np.ndarray, shape (Q, R), {0, 1}
+        Host-side query bit rows.
+    set_ids : np.ndarray, shape (Q,), int
+        GLOBAL physical set ids in ``[0, n_shards * sets_per_shard)``.
+    planes_by_shard : sequence of jnp.ndarray, (sets_per_shard, R, C) int8
+        Shard-local stored-bit planes (shard k owns global sets
+        ``[k * sets_per_shard, (k + 1) * sets_per_shard)``).
+    valid_by_shard : sequence of jnp.ndarray, (sets_per_shard, C) int8
+        Shard-local validity planes.
+
+    Returns
+    -------
+    np.ndarray, shape (Q,), int32
+        First matching valid way per query (way index is set-local, as in
+        the unsharded path); ``-1`` = miss.
+
+    Notes
+    -----
+    With one shard this is EXACTLY :func:`xam_search_multiset` — same
+    grouping, same kernel, same inputs — which pins the single-shard
+    serving path bit-identical to the unsharded implementation.
+    """
+    n_shards = len(planes_by_shard)
+    if n_shards == 1:
+        return xam_search_multiset(
+            key_bits, set_ids, planes_by_shard[0], valid_by_shard[0],
+            block_q=block_q, scoring=scoring, interpret=interpret)
+    if interpret is None:
+        interpret = not _ON_TPU
+    scoring = _resolve_scoring(scoring)
+    key_bits = np.asarray(key_bits, np.int8)
+    set_ids = np.asarray(set_ids, np.int64)
+    s_local = planes_by_shard[0].shape[0]
+    shard_ids = set_ids // s_local
+    # Dispatch every shard's fused search before syncing any of them.
+    pending = []
+    for k in np.unique(shard_ids):
+        sel = np.nonzero(shard_ids == k)[0]
+        out, slot = _multiset_dispatch(
+            key_bits[sel], set_ids[sel] - int(k) * s_local,
+            planes_by_shard[int(k)], valid_by_shard[int(k)],
+            block_q=block_q, scoring=scoring, interpret=interpret)
+        pending.append((sel, slot, out))
+    ways = np.empty(set_ids.shape[0], np.int32)
+    for sel, slot, out in pending:
+        ways[sel] = np.asarray(out)[slot]
+    return ways
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +237,11 @@ def words_to_bits(words: jnp.ndarray, n_bits: int = 32) -> jnp.ndarray:
 
 
 def words_to_bits_np(words: np.ndarray, n_bits: int = 32) -> np.ndarray:
-    """Host-side twin of :func:`words_to_bits` (no device round-trip)."""
+    """Host-side twin of :func:`words_to_bits` (no device round-trip).
+
+    >>> words_to_bits_np(np.asarray([5], np.uint32), 4).tolist()
+    [[1, 0, 1, 0]]
+    """
     words = np.asarray(words)
     assert n_bits <= np.iinfo(words.dtype).bits, "n_bits exceeds word width"
     shifts = np.arange(n_bits, dtype=words.dtype)

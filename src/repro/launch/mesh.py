@@ -36,6 +36,49 @@ def make_host_mesh() -> Mesh:
     return Mesh(np.asarray(devices).reshape(len(devices), 1), ("data", "model"))
 
 
+def make_set_mesh(n_shards: int) -> Mesh | None:
+    """1-D ``("sets",)`` mesh for the sharded ``MonarchKVIndex`` set planes.
+
+    The serving index splits its CAM sets into ``n_shards`` contiguous
+    blocks (see ``geometry.shard_of_set``); each block's plane arrays,
+    wear state and replacement counters live on one mesh device, and
+    lookup/admission batches fan out as shard-local device calls.
+
+    Parameters
+    ----------
+    n_shards : int
+        Logical shard count requested by the index.
+
+    Returns
+    -------
+    Mesh | None
+        A mesh over ``min(n_shards, n_devices)`` devices with the single
+        axis ``"sets"`` — shards are assigned round-robin over its
+        devices — or ``None`` when this host has one device (all shards
+        co-locate; the fan-out structure still runs, placement is just a
+        no-op).  Like every constructor here this touches jax device
+        state only when CALLED, never at import.
+    """
+    devices = jax.devices()
+    if n_shards <= 1 or len(devices) <= 1:
+        return None
+    n = min(n_shards, len(devices))
+    return Mesh(np.asarray(devices[:n]), ("sets",))
+
+
+def set_shard_devices(mesh: Mesh | None, n_shards: int) -> list | None:
+    """Per-shard device assignment over a ``make_set_mesh`` mesh.
+
+    Returns a length-``n_shards`` list (shard k -> device, round-robin
+    over the mesh's ``"sets"`` axis), or ``None`` when ``mesh`` is None
+    (single-device host: callers skip explicit placement entirely, which
+    keeps the 1-shard path byte-identical to the unsharded code)."""
+    if mesh is None:
+        return None
+    devs = list(mesh.devices.flat)
+    return [devs[k % len(devs)] for k in range(n_shards)]
+
+
 def make_grid_mesh(grid_size: int) -> Mesh | None:
     """1-D mesh over this host's devices for the batched simulator's
     config x trace grid axis.  Returns None when sharding cannot help

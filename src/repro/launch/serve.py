@@ -8,6 +8,13 @@ The request loop is the same flow examples/serve_prefix_cache.py
 demonstrates; this launcher adds mesh placement (params TP/FSDP-sharded,
 cache sharded per ``cache_specs`` — ``--seq-shard-kv`` enables the §Perf
 split-KV layout) and batch scheduling over a request queue.
+
+Index scaling knobs (see docs/SERVING.md for the full operator guide):
+``--n-shards`` splits the Monarch index's CAM sets across the
+``("sets",)`` device mesh (lookup/admit batches fan out per shard);
+admissions run behind an async ``AdmitQueue`` by default — installs
+overlap the decode loop — with ``--sync-admit`` restoring the inline
+path.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from repro.dist import sharding
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer
 from repro.serve import step as serve_step
+from repro.serve.admit_queue import AdmitQueue
 from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
 
 
@@ -51,6 +59,14 @@ def main(argv=None):
     ap.add_argument("--ops-per-sec", type=float, default=1e6,
                     help="expected index op rate (cycle proxy) for "
                          "--lifetime-years")
+    # Index scaling knobs.
+    ap.add_argument("--n-shards", type=int, default=1,
+                    help="set-axis shards for the Monarch index (must "
+                         "divide its n_sets; shards map onto the "
+                         '("sets",) device mesh round-robin)')
+    ap.add_argument("--sync-admit", action="store_true",
+                    help="admit inline on the serving loop instead of "
+                         "behind the async AdmitQueue")
     args = ap.parse_args(argv)
 
     cfg = configs.get_arch(args.arch)
@@ -67,13 +83,19 @@ def main(argv=None):
         kv_cfg = KVIndexConfig.with_lifetime(
             t_life_years=args.lifetime_years, endurance=args.endurance,
             ops_per_second=args.ops_per_sec, m_writes=args.m_writes,
-            n_sets=8)
+            n_sets=8, n_shards=args.n_shards)
         print(f"[serve] lifetime target {args.lifetime_years}y @ "
               f"{args.endurance:.0e} endurance -> t_MWW window = "
               f"{kv_cfg.window_ops} ops, M={kv_cfg.m_writes}")
     else:
-        kv_cfg = KVIndexConfig(n_sets=8, m_writes=args.m_writes)
+        kv_cfg = KVIndexConfig(n_sets=8, m_writes=args.m_writes,
+                               n_shards=args.n_shards)
     idx = MonarchKVIndex(kv_cfg)
+    if args.n_shards > 1:
+        print(f"[serve] index sharded over {args.n_shards} set shards "
+              f"({idx.sets_per_shard} sets each; mesh: "
+              f"{'co-located, 1 device' if idx.set_mesh is None else idx.set_mesh})")
+    admit_q = AdmitQueue(idx, background=not args.sync_admit)
 
     with mesh:
         params = transformer.init_params(jax.random.PRNGKey(0), cfg)
@@ -95,25 +117,34 @@ def main(argv=None):
                 (b, args.prompt_len - len(prefix))).astype(np.int32)
             toks = np.concatenate(
                 [np.tile(prefix, (b, 1)), tails], axis=1)
-            hits = idx.lookup(toks)
+            hits = admit_q.lookup(toks)   # read-your-writes via the queue
             logits, cache = prefill_fn(params, {"tokens": jnp.asarray(toks)})
+            # Submit as soon as the prefill produced this batch's KV: the
+            # worker drains the install while the decode loop runs, and
+            # the queue is (usually) empty again before the next batch's
+            # read-your-writes lookup.
+            admit_q.submit_tokens(toks)
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
             outs = [np.asarray(nxt)]
             for t in range(args.decode_tokens - 1):
                 pos = jnp.asarray(toks.shape[1] + t, jnp.int32)
                 nxt, logits, cache = decode_fn(params, cache, nxt, pos)
                 outs.append(np.asarray(nxt))
-            idx.admit(toks)
             served += b
             print(f"[serve] batch of {b}: prefix chunks cached "
                   f"{hits[:, :len(prefix) // CHUNK_TOKENS].mean():.0%}, "
                   f"decoded {args.decode_tokens} tokens each")
+        admit_q.close()                   # drain barrier before reporting
         dt = time.time() - t0
     s = idx.stats
     print(f"[serve] {served} requests in {dt:.1f}s; index hit rate "
           f"{idx.hit_rate:.1%}, {s.searches} CAM searches, "
           f"{s.admissions} admissions ({s.admit_calls} device calls), "
           f"{s.throttled} throttles")
+    aq = admit_q.stats
+    print(f"[serve] admit queue: {aq.submitted} fps in {aq.batches} batches "
+          f"({'inline' if args.sync_admit else 'async'}), "
+          f"{aq.rww_flushes} read-your-writes flushes")
     w = idx.wear_report()
     lt = idx.lifetime_estimate(endurance=args.endurance,
                                ops_per_second=args.ops_per_sec)

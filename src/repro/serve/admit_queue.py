@@ -1,0 +1,231 @@
+"""Asynchronous admission queue for the MonarchKVIndex.
+
+Inline admission puts ``admit_fps`` — a device scan plus host shadow-map
+bookkeeping — on the serving loop's critical path between batches.  This
+module moves it behind a queue drained by a worker thread, so installs
+overlap the loop's model compute (prefill/decode): the main thread's
+jitted steps release the GIL inside XLA while the worker runs the
+admission pipeline, and on a multi-shard index the worker's per-shard
+scans additionally overlap each other via jax async dispatch.
+
+Semantics (all pinned by tests/test_kv_index_sharded.py):
+
+* One ``submit`` == one ``admit_fps`` call, in submission order.  Batches
+  are never merged, because ``admit_fps`` latches no-allocate touch
+  counts per call — merging two offers of the same fingerprint into one
+  uniqued batch would count one touch where inline admission counts two.
+  After ``flush()`` the index state is therefore EXACTLY what the same
+  ``admit_fps`` calls issued inline would produce (the op-counter clock
+  may differ when lookups interleave, which only shifts t_MWW cycle
+  stamps — the documented async relaxation).
+* The queue owns an index lock: the worker holds it across each
+  ``admit_fps`` (whose donated device calls rebind the shard planes), and
+  :meth:`lookup` / :meth:`rotate` take it too, so the serving loop never
+  searches planes that an in-flight admission has donated away.
+* ``rotate()`` is a DRAIN BARRIER: the queue flushes before the remap, so
+  rotation stays the lockstep plane roll the sharded index relies on —
+  no admission can land mid-remap.  (Auto-rotation inside ``admit_fps``
+  happens under the index lock and is ordered for free.)
+* Read-your-writes: with ``read_your_writes=True`` (default),
+  :meth:`lookup` flushes the queue first whenever one of the looked-up
+  fingerprints is still pending/in-flight, so a request never misses on
+  a chunk whose admission it (or a predecessor) already submitted.
+
+``background=False`` degrades to a synchronous shim (submit == inline
+admit under the same lock) for deterministic tests and single-threaded
+callers.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.data.pipeline import fingerprint_blocks
+from repro.serve.kv_index import CHUNK_TOKENS, MonarchKVIndex
+
+
+@dataclasses.dataclass
+class AdmitQueueStats:
+    submitted: int = 0        # fingerprints handed to submit()
+    batches: int = 0          # admit_fps calls drained
+    flushes: int = 0          # explicit/barrier flushes
+    rww_flushes: int = 0      # flushes forced by read-your-writes lookups
+
+
+class AdmitQueue:
+    """Admission queue over a :class:`MonarchKVIndex`.
+
+    Parameters
+    ----------
+    index : MonarchKVIndex
+        The index to admit into.  All index access (lookups included)
+        should go through this queue once it exists.
+    background : bool
+        Drain on a daemon worker thread (default).  ``False`` = drain
+        synchronously inside :meth:`submit` — same semantics, no overlap.
+    read_your_writes : bool
+        Flush before a lookup that touches a pending fingerprint.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.serve.kv_index import KVIndexConfig
+    >>> idx = MonarchKVIndex(KVIndexConfig(
+    ...     n_sets=4, set_ways=16, admit_after_reads=0))
+    >>> q = AdmitQueue(idx)
+    >>> toks = np.arange(1, 33, dtype=np.int32).reshape(1, 32)
+    >>> q.submit_tokens(toks)                 # returns immediately
+    >>> bool(q.lookup(toks).all())            # read-your-writes flush
+    True
+    >>> q.close()
+    """
+
+    def __init__(self, index: MonarchKVIndex, *, background: bool = True,
+                 read_your_writes: bool = True):
+        self.index = index
+        self.read_your_writes = read_your_writes
+        self.stats = AdmitQueueStats()
+        self._background = background
+        self._idx_lock = threading.Lock()    # serializes index access
+        self._cv = threading.Condition()     # guards queue + pending set
+        self._queue: collections.deque[np.ndarray] = collections.deque()
+        self._pending: collections.Counter = collections.Counter()
+        self._inflight = 0                   # batches popped, not yet admitted
+        self._stop = False
+        self._error: BaseException | None = None   # first worker failure
+        self._worker = None
+        if background:
+            self._worker = threading.Thread(
+                target=self._drain_loop, name="monarch-admit", daemon=True)
+            self._worker.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, fps: np.ndarray) -> None:
+        """Enqueue one admission batch (one future ``admit_fps`` call).
+
+        ``fps`` must be unique within the batch, exactly as ``admit_fps``
+        requires; returns immediately in background mode."""
+        fps = np.asarray(fps, np.uint32)
+        if fps.size == 0:
+            return
+        self.stats.submitted += int(fps.size)
+        with self._cv:
+            self._queue.append(fps)
+            self._pending.update(int(f) for f in fps)
+            self._cv.notify_all()
+        if not self._background:
+            self._drain_available()
+
+    def submit_tokens(self, tokens: np.ndarray) -> None:
+        """Fingerprint a token batch and :meth:`submit` its unique chunks
+        (the queue twin of ``MonarchKVIndex.admit``)."""
+        fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
+        self.submit(fps)
+
+    def lookup(self, tokens: np.ndarray) -> np.ndarray:
+        """Index lookup with optional read-your-writes consistency.
+
+        When any looked-up fingerprint is still queued or in flight (and
+        ``read_your_writes`` is on), the queue drains first so the search
+        sees the submitted installs."""
+        if self.read_your_writes:
+            fps = fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1)
+            with self._cv:
+                waiting = bool(self._pending) and any(
+                    int(fp) in self._pending for fp in fps)
+            if waiting:
+                self.stats.rww_flushes += 1
+                self.flush()
+        with self._idx_lock:
+            return self.index.lookup(tokens)
+
+    def flush(self) -> None:
+        """Drain barrier: block until every submitted batch has been
+        admitted (used before rotation and at shutdown).  Re-raises the
+        first admission failure, if any (a failed batch is dropped, the
+        worker keeps draining — the barrier never hangs on a dead
+        worker)."""
+        self.stats.flushes += 1
+        if not self._background:
+            self._drain_available()
+        else:
+            with self._cv:
+                self._cv.wait_for(
+                    lambda: not self._queue and self._inflight == 0)
+        self._raise_pending_error()
+
+    def _raise_pending_error(self) -> None:
+        with self._cv:
+            err, self._error = self._error, None
+        if err is not None:
+            raise RuntimeError(
+                "admission batch failed in the AdmitQueue worker") from err
+
+    def rotate(self) -> None:
+        """Flush, then rotate the index — admissions never straddle the
+        remap (the drain barrier the sharded lockstep roll requires)."""
+        self.flush()
+        with self._idx_lock:
+            self.index._rotate()
+
+    def pending(self) -> int:
+        """Fingerprints submitted but not yet admitted."""
+        with self._cv:
+            return int(sum(self._pending.values()))
+
+    def close(self) -> None:
+        """Flush and stop the worker.  Idempotent."""
+        self.flush()
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=30)
+            self._worker = None
+
+    def __enter__(self) -> "AdmitQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    def _admit_one_batch(self, fps: np.ndarray) -> None:
+        err = None
+        try:
+            with self._idx_lock:
+                self.index.admit_fps(fps)
+            self.stats.batches += 1
+        except BaseException as e:           # noqa: BLE001 — must not kill
+            err = e                          # the drain loop; surfaced at
+        finally:                             # the next flush()
+            with self._cv:
+                self._pending.subtract(int(f) for f in fps)
+                self._pending += collections.Counter()  # drop zeros
+                self._inflight -= 1
+                if err is not None and self._error is None:
+                    self._error = err
+                self._cv.notify_all()
+
+    def _drain_available(self) -> None:
+        """Synchronous drain (background=False path)."""
+        while True:
+            with self._cv:
+                if not self._queue:
+                    return
+                fps = self._queue.popleft()
+                self._inflight += 1
+            self._admit_one_batch(fps)
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._cv:
+                self._cv.wait_for(lambda: self._queue or self._stop)
+                if self._stop and not self._queue:
+                    return
+                fps = self._queue.popleft()
+                self._inflight += 1
+            self._admit_one_batch(fps)

@@ -1,52 +1,69 @@
 """MonarchKVIndex — the paper's technique as a first-class serving feature.
 
-A vLLM-style paged KV prefix cache whose INDEX is a Monarch flat-CAM:
+A vLLM-style paged KV prefix cache whose INDEX is a Monarch flat-CAM,
+SHARDED along the set axis across a ``("sets",)`` device mesh
+(``launch/mesh.make_set_mesh``).  The paper's headline win is in-package
+parallelism — many XAM subarrays searched concurrently behind one wide
+interface (§III) — and the set axis is exactly that parallelism at serving
+scale: shard k owns the contiguous block of physical sets
+``[k * sets_per_shard, (k + 1) * sets_per_shard)`` (``geometry.
+shard_of_set``) and carries its own stored-bit/validity/fingerprint
+planes, D̄&R̄ metadata, per-set replacement counters and §8 ``WearState``
+on its own mesh device.
 
-* every 16-token chunk of a request's prefix is fingerprinted (murmur3) and
-  the whole fingerprint batch is matched against the resident-block index
-  with ONE fused multi-set XAM search (kernels/xam_search) — a single
-  ``pallas_call`` per lookup batch, not a hash-map walk and not a Python
-  loop over sets.  Per-query set ids ride in scalar prefetch and select
-  each query block's stored-bit plane; validity masking is fused into the
-  kernel, so dead ways never produce false hits;
-* the CAM state is device-resident: ``bits`` (n_sets, key_bits, set_ways),
-  ``valid``, ``fp_of``, the D̄&R̄ ``read_after`` metadata, the per-set
-  install counters and the §8 ``WearState`` all live on device;
-* ADMISSION IS BATCHED: one request batch's worth of candidate
-  fingerprints goes through ONE jitted, donated-state device call
-  (``_admit_batch``) — a ``lax.scan`` that fuses residency probing,
-  t_MWW throttling, way selection, column install and wear recording.
-  Same-set collisions are resolved by the scan order (ascending unique
-  fingerprints — the seed's sequential admission order), so the batched
-  pipeline is step-for-step equivalent to admitting one fingerprint at a
-  time while issuing O(1) device calls per batch;
-* admission mirrors the paper's cache-mode durability policy (§8):
-  - no-allocate on first touch (a block must be seen R times before it is
-    admitted — the D̄&R̄ "never accessed" filter),
-  - random-counter replacement via a free-running counter shared by all
-    sets, preferring never-re-read (cold) victims,
-  - the t_MWW lifetime throttle comes from ``core/wear.py`` — the SAME
-    ``record_write``/``window_would_exceed``/``is_locked`` machinery the
-    Fig. 11 simulator runs, parameterized by a ``WearDyn``.  A set whose
-    admission rate exceeds the window budget stops admitting (serves
-    misses from recompute) exactly as §6.2 specifies.  The op counter
-    (lookup queries + admission attempts) stands in for cycles;
-* rotation is a device start-gap-style remap: the set planes (bits /
-  valid / fp_of / read_after) are cyclically shifted by the prime stride 7
-  in one donated device call — no host rebuild — while ``_set_of`` shifts
-  its offset in lockstep, so resident entries REMAIN searchable after the
-  remap (the seed's lazy-flush rotation orphaned them; this intentional
-  change is pinned by tests/test_kv_index.py).
+Data flow per batch:
+
+* LOOKUP: every 16-token chunk is fingerprinted (murmur3) and the batch
+  fans out through ``xam_ops.xam_search_multiset_sharded`` — two-level
+  host grouping (shard -> per-set block, pow2-bucketed) and ONE fused
+  ``pallas_call`` per shard holding queries, all dispatched before any is
+  synced, so shard searches overlap under jax async dispatch.  With
+  ``n_shards == 1`` the path IS the unsharded fused kernel, bit for bit.
+* ADMISSION: candidate fingerprints are grouped per shard (original batch
+  order preserved inside each group, cycle stamps keep their GLOBAL batch
+  position) and each shard runs ONE jitted, donated-state ``_admit_batch``
+  scan fusing residency probe, no-allocate gate, t_MWW throttle
+  (``core/wear.py`` — the same machinery the Fig. 11 simulator scans,
+  enforced against the shard's own per-set window counters), cold-victim
+  way selection, column install and wear recording.  Decisions couple
+  only through per-set state (residency, window budget, the per-set
+  replacement counter), so the per-shard scans are bit-equivalent to one
+  global sequential scan — the shard-invariance tests replay randomized
+  schedules at ``n_shards in {1, 2, 4}`` and require identical hits,
+  installs and wear reports.
+* ROTATION: the rotary remap is the GLOBAL permutation ``set -> set + 7``
+  applied to every shard's planes in lockstep with the ``_set_of`` offset
+  bump, so resident entries stay searchable after the remap (pinned since
+  the batched-admission PR) and the fingerprint -> physical-set mapping —
+  hence wear accounting — is independent of the shard count.  Across
+  shards the roll is a (rare) cross-shard gather.
+
+Intentional change pinned by the shard-invariance tests: the replacement
+counter is PER SET (it was one free-running global scalar).  A global
+counter couples victim choice in one set to eviction traffic in every
+other set — the single cross-set dependency that would make admission
+results depend on how sets are sharded.  Per-set counters keep the
+§8 "random counter" replacement flavor while making the per-shard scans
+exactly equal to the global sequential order.
+
+Asynchronous admission lives in ``serve/admit_queue.py``: ``AdmitQueue``
+moves ``admit_fps`` off the serving loop onto a worker thread (installs
+overlap model compute), with a drain barrier before rotation and an
+optional read-your-writes flush when a looked-up fingerprint is still
+pending.
 
 Lifetime targeting: ``KVIndexConfig.with_lifetime`` derives the t_MWW
 window length (in ops) from a target lifetime in years, the cell
 endurance and an expected op rate — the serving twin of
 ``wear.make_config``.  ``launch/serve.py`` surfaces it as
-``--lifetime-years``.
+``--lifetime-years`` (and the shard count as ``--n-shards``).
 
 The index is exercised by examples/serve_prefix_cache.py and
-benchmarks/kernels_bench.py (``kv_index_admit`` pins the batched path's
-advantage over the pre-batching host loop).
+benchmarks/kernels_bench.py (``kv_index_admit`` pins the batched path
+against the pre-batching host loop; ``kv_index_lookup_sharded`` and
+``kv_index_admit_async`` pin the sharded fan-out and the queue overlap).
+See docs/ARCHITECTURE.md for the paper-concept -> code map and
+docs/SERVING.md for the operator guide.
 """
 from __future__ import annotations
 
@@ -58,12 +75,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import geometry
 from repro.core import lifetime as lifetime_mod
 from repro.core import wear
 from repro.core.timing import SECONDS_PER_YEAR, t_mww_seconds
 from repro.data.pipeline import fingerprint_blocks, murmur3_np
 from repro.kernels.common import bucket_pow2
 from repro.kernels.xam_search import ops as xam_ops
+from repro.launch import mesh as mesh_mod
 
 CHUNK_TOKENS = 16
 ROTATE_STRIDE = 7          # prime set stride per rotation (§8)
@@ -72,6 +91,32 @@ ADMIT_BUCKET_LO = 8        # pow2 bucket floor for admit batch shapes
 
 @dataclasses.dataclass
 class KVIndexConfig:
+    """Serving-index geometry and §8 durability knobs.
+
+    Parameters
+    ----------
+    n_sets : int
+        CAM sets (global).  Each holds ``set_ways`` searchable columns.
+    set_ways : int
+        CAM columns (ways) per set — the cache associativity.
+    key_bits : int
+        Fingerprint bits stored/searched per column.
+    admit_after_reads : int
+        No-allocate filter: a chunk must be OFFERED this many times
+        before it is installed (0 = admit on first touch).
+    m_writes : int
+        Per-way write budget per t_MWW window; the per-set window budget
+        is ``set_ways * m_writes``.
+    window_ops : int
+        t_MWW window length in index ops (the op counter is the serving
+        cycle proxy).
+    rotate_every : int
+        Admissions between rotary remaps (prime stride 7).
+    n_shards : int
+        Set-axis shards; must divide ``n_sets``.  ``1`` (default) is the
+        unsharded single-device path, bit-identical to the pre-sharding
+        implementation.
+    """
     n_sets: int = 32
     set_ways: int = 512           # CAM columns per set
     key_bits: int = 32
@@ -79,14 +124,42 @@ class KVIndexConfig:
     m_writes: int = 3             # per-way write budget per t_MWW window
     window_ops: int = 4096        # ops per t_MWW window (op-count proxy)
     rotate_every: int = 50_000    # admissions between rotary remaps
+    n_shards: int = 1             # set-axis mesh shards (divides n_sets)
 
     @classmethod
     def with_lifetime(cls, *, t_life_years: float, endurance: float = 1e8,
                       ops_per_second: float = 1e6, m_writes: int = 3,
                       **kw) -> "KVIndexConfig":
-        """Derive ``window_ops`` from a lifetime target (§6.2): the t_MWW
-        window in seconds comes from ``wear``'s own formula; the serving op
-        counter stands in for cycles at ``ops_per_second``."""
+        """Derive ``window_ops`` from a lifetime target (§6.2).
+
+        The t_MWW window in seconds comes from ``core/timing``'s own
+        formula ``t_MWW = M * T_life / endurance``; the serving op counter
+        stands in for cycles at ``ops_per_second``.
+
+        Parameters
+        ----------
+        t_life_years : float
+            Target index lifetime in years.
+        endurance : float
+            Cell write endurance (§8 evaluations use 1e8).
+        ops_per_second : float
+            Expected index op rate (lookup chunks + admission offers per
+            second) — converts the window from seconds to ops.
+        m_writes : int
+            Per-way write budget per window.
+        **kw
+            Forwarded to the constructor (``n_sets``, ``n_shards``, ...).
+
+        Returns
+        -------
+        KVIndexConfig
+
+        Examples
+        --------
+        >>> cfg = KVIndexConfig.with_lifetime(t_life_years=10.0)
+        >>> cfg.window_ops        # 3 * 10y / 1e8 writes * 1e6 ops/s
+        9467280
+        """
         t_mww_s = t_mww_seconds(m_writes, t_life_years * SECONDS_PER_YEAR,
                                 endurance)
         window_ops = max(int(t_mww_s * ops_per_second), 1)
@@ -103,8 +176,8 @@ class KVIndexStats:
     throttled: int = 0            # t_MWW window exhausted
     evictions: int = 0
     rotations: int = 0
-    searches: int = 0             # fused kernel launches (1 per batch)
-    admit_calls: int = 0          # jitted admit launches (1 per batch)
+    searches: int = 0             # fused kernel launches (1 per shard w/ queries)
+    admit_calls: int = 0          # jitted admit launches (1 per shard w/ cands)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -122,7 +195,7 @@ def _install_column(bits, valid, fp_of, s, w, bitcol, fp):
 def _admit_batch(bits, valid, fp_of, read_after, set_writes, counter,
                  wstate, wdyn, admit_after, sets, fps, bitcols, cycles,
                  touches, active):
-    """ONE device call admits a whole candidate batch.
+    """ONE device call admits a whole (shard-local) candidate batch.
 
     A ``lax.scan`` over the (order-preserving) candidate list; each step is
     the full per-fingerprint admission pipeline: residency probe ->
@@ -132,8 +205,11 @@ def _admit_batch(bits, valid, fp_of, read_after, set_writes, counter,
     candidates see earlier installs AND earlier evictions: the residency
     and no-allocate decisions are made against the in-batch state, exactly
     as a sequential per-fingerprint loop would), which keeps the batched
-    path bit-equivalent to sequential admission.  ``touches`` carries the
-    host first_touch counts (unique fps, so they cannot change mid-batch).
+    path bit-equivalent to sequential admission.  ``counter`` is the
+    PER-SET replacement counter plane (S,) — every decision in the scan
+    couples only through per-set state, which is what makes per-shard
+    scans equal to one global scan.  ``touches`` carries the host
+    first_touch counts (unique fps, so they cannot change mid-batch).
     All mutable planes are donated; outputs feed the host shadow map in
     one transfer.
     """
@@ -169,17 +245,18 @@ def _admit_batch(bits, valid, fp_of, read_after, set_writes, counter,
         do_install = act & ~is_res & ~skipped & ~throttled
 
         # Way selection: first free way, else counter-ordered cold victim
-        # (never-re-read ways first — D̄&R̄-style replacement).
+        # (never-re-read ways first — D̄&R̄-style replacement).  The
+        # replacement counter free-runs PER SET.
         free = vrow == 0
         has_free = jnp.any(free)
         free_w = jnp.argmax(free).astype(jnp.int32)
-        order = ((iota + counter) % n_ways).astype(jnp.int32)
+        order = ((iota + counter[s]) % n_ways).astype(jnp.int32)
         cold = read_after[s][order] == 0
         victim = jnp.where(jnp.any(cold), order[jnp.argmax(cold)], order[0])
         way = jnp.where(has_free, free_w, victim).astype(jnp.int32)
         evict = do_install & ~has_free
         old_fp = frow[way]
-        counter = counter + jnp.where(evict, 1, 0).astype(jnp.int32)
+        counter = counter.at[s].add(jnp.where(evict, 1, 0).astype(jnp.int32))
 
         # Column install (one CAM column + metadata).
         bits = bits.at[s, :, way].set(
@@ -217,31 +294,118 @@ def _rotate_planes(bits, valid, fp_of, read_after, shift: int):
     return roll(bits), roll(valid), roll(fp_of), roll(read_after)
 
 
+def _shard_property(name: str, doc: str, settable: bool = True):
+    """Global view over a per-shard plane list: shard 0's array unwrapped
+    when unsharded (zero-copy — donation-safe for external callers like the
+    bench host loop), a host-side concatenation in shard order otherwise."""
+    def get(self):
+        parts = getattr(self, name)
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate([np.asarray(p) for p in parts], axis=0)
+
+    def set_(self, value):
+        if self.n_shards == 1:
+            getattr(self, name)[0] = value
+        else:
+            setattr(self, name, [
+                self._put(np.asarray(value)[self._slice(k)], k)
+                for k in range(self.n_shards)])
+
+    return property(get, set_ if settable else None, None, doc)
+
+
 class MonarchKVIndex:
+    """Set-sharded Monarch flat-CAM prefix index (see module docstring).
+
+    Parameters
+    ----------
+    cfg : KVIndexConfig, optional
+        Geometry/durability knobs; default-constructed per instance.
+    seed : int
+        Reserved for future stochastic policies (placement is currently
+        deterministic).
+
+    Attributes
+    ----------
+    bits, valid, fp_of, read_after : global views (property)
+        The CAM planes — ``(n_sets, key_bits, set_ways)`` int8 stored
+        bits, ``(n_sets, set_ways)`` validity/fingerprint/D̄&R̄ planes.
+        With one shard these are THE device arrays; with several they are
+        host-side concatenations of the shard-resident planes (read-only
+        use intended; assignment re-splits across shards).
+    stats : KVIndexStats
+        Host-side operation counters.
+    ops_total : int
+        The op counter — the t_MWW cycle proxy (lookup chunks + admission
+        offers), global across shards.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> idx = MonarchKVIndex(KVIndexConfig(
+    ...     n_sets=4, set_ways=16, admit_after_reads=0, n_shards=2))
+    >>> toks = np.arange(1, 65, dtype=np.int32).reshape(1, 64)
+    >>> idx.admit(toks)                       # install 4 chunks
+    >>> bool(idx.lookup(toks).all())          # now resident
+    True
+    """
+
     def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0):
         # cfg default constructed per instance: a shared KVIndexConfig()
         # default would alias mutable config across indexes.
         self.cfg = KVIndexConfig() if cfg is None else cfg
         c = self.cfg
-        # Device-resident CAM state: fingerprint bits column-wise per set,
-        # plus the validity / fingerprint / D-R metadata planes, the
-        # replacement counter and the per-set install (wear) counters.
-        self.bits = jnp.zeros((c.n_sets, c.key_bits, c.set_ways), jnp.int8)
-        self.valid = jnp.zeros((c.n_sets, c.set_ways), jnp.int8)
-        self.fp_of = jnp.zeros((c.n_sets, c.set_ways), jnp.uint32)
-        self.read_after = jnp.zeros((c.n_sets, c.set_ways), jnp.int32)
-        self.set_writes = jnp.zeros((c.n_sets,), jnp.int32)
-        self.counter = jnp.zeros((), jnp.int32)  # free-running replacement
+        self.n_shards = c.n_shards
+        self.sets_per_shard = geometry.sets_per_shard(c.n_sets, c.n_shards)
+        # ("sets",) mesh placement: shard k's planes/wear live on mesh
+        # device k (round-robin); None on a single-device host — every
+        # shard co-locates and placement is skipped entirely, keeping the
+        # one-shard path identical to the unsharded implementation.
+        self.set_mesh = mesh_mod.make_set_mesh(c.n_shards)
+        self._devices = mesh_mod.set_shard_devices(self.set_mesh, c.n_shards)
+        s_loc = self.sets_per_shard
+        # Device-resident CAM state, per shard: fingerprint bits
+        # column-wise per set, plus the validity / fingerprint / D-R
+        # metadata planes, the PER-SET replacement counters and the
+        # per-set install (wear) counters.
+        self._bits = [
+            self._put(np.zeros((s_loc, c.key_bits, c.set_ways), np.int8), k)
+            for k in range(c.n_shards)]
+        self._valid = [
+            self._put(np.zeros((s_loc, c.set_ways), np.int8), k)
+            for k in range(c.n_shards)]
+        self._fp_of = [
+            self._put(np.zeros((s_loc, c.set_ways), np.uint32), k)
+            for k in range(c.n_shards)]
+        self._read_after = [
+            self._put(np.zeros((s_loc, c.set_ways), np.int32), k)
+            for k in range(c.n_shards)]
+        self._set_writes = [
+            self._put(np.zeros((s_loc,), np.int32), k)
+            for k in range(c.n_shards)]
+        self._counters = [
+            self._put(np.zeros((s_loc,), np.int32), k)
+            for k in range(c.n_shards)]
         # §8 wear state over the physical sets — the simulator's own
         # machinery with serving knobs: window length = window_ops (op-count
         # cycle proxy), budget = set_ways * m_writes, WR/WC/DC rotation
         # signals disabled (serving rotates on the rotate_every cadence).
+        # One state per shard, over that shard's sets.
         self.wear_cfg = wear.WearConfig(
             n_supersets=c.n_sets, m_writes=c.m_writes,
             dc_limit=1 << 30, wc_limit=1 << 30,
             t_mww_cycles=c.window_ops, blocks_per_superset=c.set_ways)
         self.wear_dyn = wear.dyn_of(self.wear_cfg)
-        self.wear_state = wear.init_state(self.wear_cfg)
+        self._wear_states = [
+            self._put_tree(st, k)
+            for k, st in enumerate(wear.shard_states(self.wear_cfg,
+                                                     c.n_shards))]
+        self._wear_dyns = [self._put_tree(self.wear_dyn, k)
+                           for k in range(c.n_shards)]
+        self._admit_after = [
+            self._put(np.asarray(c.admit_after_reads, np.int32), k)
+            for k in range(c.n_shards)]
         # Host-side policy shadow (map + mirrors): keeps assertions and
         # eviction bookkeeping off the device sync path.
         self.valid_np = np.zeros((c.n_sets, c.set_ways), bool)
@@ -252,8 +416,47 @@ class MonarchKVIndex:
         self.ops_total = 0          # op counter == t_MWW cycle proxy
         self.stats = KVIndexStats()
 
+    # -- sharding plumbing ---------------------------------------------
+    def _put(self, x, k: int):
+        """Place ``x`` on shard k's mesh device (no-op placement when the
+        host has one device, preserving the unsharded dispatch path)."""
+        if self._devices is None:
+            return jnp.asarray(x)
+        return jax.device_put(x, self._devices[k])
+
+    def _put_tree(self, tree, k: int):
+        if self._devices is None:
+            return tree
+        return jax.device_put(tree, self._devices[k])
+
+    def _slice(self, k: int) -> slice:
+        """Global-set slice owned by shard k."""
+        return geometry.shard_set_slice(k, self.cfg.n_sets, self.n_shards)
+
+    bits = _shard_property("_bits", "stored-bit planes, global view")
+    valid = _shard_property("_valid", "validity planes, global view")
+    fp_of = _shard_property("_fp_of", "fingerprint planes, global view")
+    read_after = _shard_property(
+        "_read_after", "D̄&R̄ re-read counters, global view")
+    set_writes = _shard_property(
+        "_set_writes", "per-set install counters, global view",
+        settable=False)
+    counter = _shard_property(
+        "_counters", "per-set replacement counters, global view",
+        settable=False)
+
+    @property
+    def wear_state(self) -> wear.WearState:
+        """Global §8 wear view: THE shard state when unsharded, else the
+        per-set fields concatenated in shard order (see
+        ``wear.concat_states``) — reporting only, never write through."""
+        return wear.concat_states(self._wear_states)
+
     # ------------------------------------------------------------------
     def _set_of(self, fps: np.ndarray) -> np.ndarray:
+        """Global PHYSICAL set of each fingerprint under the current
+        rotary offset — independent of the shard count by construction
+        (sharding only relabels who stores a set)."""
         base = murmur3_np(fps) % np.uint32(self.cfg.n_sets)
         return ((base.astype(np.int64) + self.offset) % self.cfg.n_sets
                 ).astype(np.int32)
@@ -263,12 +466,31 @@ class MonarchKVIndex:
         (timestamps shift in lockstep, so window/lock decisions are
         unchanged — a ~2.1e9-op serving instance would otherwise see its
         windows stop expiring and throttle forever)."""
-        self.wear_state, self.ops_total = wear.maybe_rebase(
-            self.wear_state, self.ops_total)
+        if self.ops_total < wear.CLOCK_REBASE_AT:
+            return
+        ops = self.ops_total
+        for k in range(self.n_shards):
+            self._wear_states[k], folded = wear.maybe_rebase(
+                self._wear_states[k], ops)
+        self.ops_total = folded
 
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
-        """tokens: (B, S).  Returns (B, S//16) bool — chunk already cached.
-        ONE fused multi-set CAM search for the whole batch."""
+        """Probe the index for every whole 16-token chunk of a batch.
+
+        Parameters
+        ----------
+        tokens : np.ndarray, shape (B, S), int
+            Token ids; only complete ``CHUNK_TOKENS``-sized chunks are
+            fingerprinted.
+
+        Returns
+        -------
+        np.ndarray, shape (B, S // 16), bool
+            True where the chunk's KV is already cached.  One fused CAM
+            search per shard holding queries (a single launch when
+            ``n_shards == 1``), all dispatched before any result is
+            synced.
+        """
         self._maybe_rebase_clock()
         fps = fingerprint_blocks(tokens, CHUNK_TOKENS)
         flat = fps.reshape(-1)
@@ -278,9 +500,9 @@ class MonarchKVIndex:
         sets = self._set_of(flat)
         key_bits = xam_ops.words_to_bits_np(
             flat.astype(np.uint32), self.cfg.key_bits)
-        ways = xam_ops.xam_search_multiset(
-            key_bits, sets, self.bits, self.valid)
-        self.stats.searches += 1
+        ways = xam_ops.xam_search_multiset_sharded(
+            key_bits, sets, self._bits, self._valid)
+        self.stats.searches += len(np.unique(sets // self.sets_per_shard))
         hit = ways >= 0
         self.stats.chunk_hits += int(hit.sum())
         self.stats.chunk_misses += int((~hit).sum())
@@ -293,8 +515,11 @@ class MonarchKVIndex:
 
     # ------------------------------------------------------------------
     def admit(self, tokens: np.ndarray):
-        """Offer chunks for admission (after their KV was computed).
-        Issues O(1) jitted device calls regardless of batch size."""
+        """Offer a batch's chunks for admission (after KV was computed).
+
+        Fingerprints are uniqued (order-preserved) and forwarded to
+        :meth:`admit_fps` — O(1) jitted device calls per shard regardless
+        of batch size."""
         fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
         self.admit_fps(fps)
 
@@ -303,84 +528,136 @@ class MonarchKVIndex:
         self.admit_fps(np.asarray([fp], np.uint32))
 
     def admit_fps(self, fps: np.ndarray):
-        """Batched admission of (unique, order-preserved) fingerprints:
-        ONE ``_admit_batch`` device call, then one host shadow-map pass
-        over the outputs.  Every offered fingerprint is a device lane —
-        the no-allocate gate runs on device against the evolving in-batch
-        residency, so the pipeline is bit-equivalent to admitting the same
-        fingerprints one call at a time."""
+        """Batched admission of (unique, order-preserved) fingerprints.
+
+        Parameters
+        ----------
+        fps : np.ndarray, shape (B,), uint32
+            Candidate fingerprints.  MUST be unique within the call (the
+            no-allocate touch counts are latched per batch); ``admit``
+            uniques for you.
+
+        Notes
+        -----
+        Candidates are grouped by owning shard (original order preserved
+        within each group; cycle stamps keep their global batch position)
+        and every shard with candidates runs ONE donated ``_admit_batch``
+        scan — dispatched back-to-back, synced together, then folded into
+        the host shadow map in one pass.  Because every decision couples
+        only through per-set state, the per-shard scans are
+        bit-equivalent to admitting the same fingerprints one at a time
+        in batch order, at any shard count.
+        """
         fps = np.asarray(fps, np.uint32)
         b = int(fps.size)
         if b == 0:
             return
         self._maybe_rebase_clock()
-        bb = bucket_pow2(b, lo=ADMIT_BUCKET_LO)
-        fps_p = np.zeros(bb, np.uint32)
-        fps_p[:b] = fps
-        sets_p = np.zeros(bb, np.int32)
-        sets_p[:b] = self._set_of(fps)
-        bitcols = np.zeros((bb, self.cfg.key_bits), np.int8)
-        bitcols[:b] = xam_ops.words_to_bits_np(fps, self.cfg.key_bits)
-        cycles = (self.ops_total + np.arange(bb)).astype(np.int32)
-        touches = np.zeros(bb, np.int32)
-        touches[:b] = [self.first_touch.get(int(fp), 0) for fp in fps]
-        active = np.zeros(bb, bool)
-        active[:b] = True
+        sets = self._set_of(fps)
+        shard_ids = sets // self.sets_per_shard
+        touches = np.asarray(
+            [self.first_touch.get(int(fp), 0) for fp in fps], np.int32)
+        bitcols = xam_ops.words_to_bits_np(fps, self.cfg.key_bits)
 
-        carry, outs = _admit_batch(
-            self.bits, self.valid, self.fp_of, self.read_after,
-            self.set_writes, self.counter, self.wear_state, self.wear_dyn,
-            jnp.asarray(self.cfg.admit_after_reads, jnp.int32),
-            jnp.asarray(sets_p), jnp.asarray(fps_p), jnp.asarray(bitcols),
-            jnp.asarray(cycles), jnp.asarray(touches), jnp.asarray(active))
-        (self.bits, self.valid, self.fp_of, self.read_after,
-         self.set_writes, self.counter, self.wear_state) = carry
-        self.stats.admit_calls += 1
+        # Dispatch one donated scan per shard holding candidates; sync
+        # nothing until every shard's call is in flight.
+        launches = []
+        for k in np.unique(shard_ids):
+            k = int(k)
+            sel = np.nonzero(shard_ids == k)[0]
+            bk = sel.size
+            bb = bucket_pow2(bk, lo=ADMIT_BUCKET_LO)
+            fps_p = np.zeros(bb, np.uint32)
+            fps_p[:bk] = fps[sel]
+            sets_p = np.zeros(bb, np.int32)
+            sets_p[:bk] = sets[sel] - k * self.sets_per_shard  # shard-local
+            bit_p = np.zeros((bb, self.cfg.key_bits), np.int8)
+            bit_p[:bk] = bitcols[sel]
+            cycles = np.full(bb, self.ops_total, np.int32)
+            cycles[:bk] = self.ops_total + sel       # GLOBAL batch position
+            touch_p = np.zeros(bb, np.int32)
+            touch_p[:bk] = touches[sel]
+            active = np.zeros(bb, bool)
+            active[:bk] = True
+
+            carry, outs = _admit_batch(
+                self._bits[k], self._valid[k], self._fp_of[k],
+                self._read_after[k], self._set_writes[k], self._counters[k],
+                self._wear_states[k], self._wear_dyns[k],
+                self._admit_after[k],
+                self._put(sets_p, k), self._put(fps_p, k),
+                self._put(bit_p, k), self._put(cycles, k),
+                self._put(touch_p, k), self._put(active, k))
+            (self._bits[k], self._valid[k], self._fp_of[k],
+             self._read_after[k], self._set_writes[k], self._counters[k],
+             self._wear_states[k]) = carry
+            self.stats.admit_calls += 1
+            launches.append((k, sel, fps_p, sets[sel], outs))
         self.ops_total += b
 
-        # Host shadow-map pass (one device->host transfer for the batch).
-        _res, skip, thr, inst, way, evict, old_fp = (np.asarray(o)[:b]
-                                                     for o in outs)
-        for i in range(b):
-            if evict[i]:
-                self.slot_of.pop(int(old_fp[i]), None)
-            fp = int(fps_p[i])
-            if skip[i]:
-                self.first_touch[fp] = self.first_touch.get(fp, 0) + 1
-            if inst[i]:
-                s, w = int(sets_p[i]), int(way[i])
-                self.slot_of[fp] = (s, w)
-                self.first_touch.pop(fp, None)
-                self.valid_np[s, w] = True
-                self.fp_of_np[s, w] = fps_p[i]
-        self.stats.admissions += int(inst.sum())
-        self.stats.admission_skips += int(skip.sum())
-        self.stats.evictions += int(evict.sum())
-        self.stats.throttled += int(thr.sum())
+        # Host shadow-map pass (one device->host transfer per shard).
+        batch_installs = 0
+        for k, sel, fps_p, sets_glob, outs in launches:
+            bk = sel.size
+            _res, skip, thr, inst, way, evict, old_fp = (
+                np.asarray(o)[:bk] for o in outs)
+            for i in range(bk):
+                if evict[i]:
+                    self.slot_of.pop(int(old_fp[i]), None)
+                fp = int(fps_p[i])
+                if skip[i]:
+                    self.first_touch[fp] = self.first_touch.get(fp, 0) + 1
+                if inst[i]:
+                    s, w = int(sets_glob[i]), int(way[i])
+                    self.slot_of[fp] = (s, w)
+                    self.first_touch.pop(fp, None)
+                    self.valid_np[s, w] = True
+                    self.fp_of_np[s, w] = fps_p[i]
+            batch_installs += int(inst.sum())
+            self.stats.admissions += int(inst.sum())
+            self.stats.admission_skips += int(skip.sum())
+            self.stats.evictions += int(evict.sum())
+            self.stats.throttled += int(thr.sum())
 
         # Rotate when the admission count crosses a rotate_every multiple
         # (a plain modulo check would skip the boundary whenever a batch
         # jumps over it).  At most one remap per admit call — batched
         # rotation lands at the batch boundary rather than mid-sequence;
         # the equivalence test pins auto-rotation off for that reason.
-        prev = self.stats.admissions - int(inst.sum())
+        prev = self.stats.admissions - batch_installs
         if (self.stats.admissions // self.cfg.rotate_every
                 > prev // self.cfg.rotate_every):
             self._rotate()
 
     def _rotate(self):
-        """Rotary remap (prime stride 7): ONE donated device call shifts
-        the set planes; the ``_set_of`` offset moves in lockstep, so
-        resident entries stay searchable under the rotated placement (the
-        pre-batching implementation orphaned them until eviction)."""
+        """Rotary remap (prime stride 7): shift the set planes by the
+        GLOBAL permutation ``set -> set + 7 (mod n_sets)`` while the
+        ``_set_of`` offset moves in lockstep, so resident entries stay
+        searchable under the rotated placement and the physical mapping is
+        identical at every shard count.  Unsharded this is ONE donated
+        device roll; across shards it is a (rare) cross-shard gather —
+        entries whose rotated set lands in another shard migrate to that
+        shard's planes.  Wear/replacement counters track PHYSICAL sets and
+        are untouched.  When admissions flow through an ``AdmitQueue``,
+        the queue drains before calling this (drain barrier)."""
         n = self.cfg.n_sets
         shift = ROTATE_STRIDE % n
         self.offset = (self.offset + ROTATE_STRIDE) % n
         self.stats.rotations += 1
         if shift:
-            self.bits, self.valid, self.fp_of, self.read_after = \
-                _rotate_planes(self.bits, self.valid, self.fp_of,
-                               self.read_after, shift=shift)
+            if self.n_shards == 1:
+                (self._bits[0], self._valid[0], self._fp_of[0],
+                 self._read_after[0]) = _rotate_planes(
+                    self._bits[0], self._valid[0], self._fp_of[0],
+                    self._read_after[0], shift=shift)
+            else:
+                # Cross-shard gather/scatter via the global-view
+                # properties (getter concatenates, setter re-splits and
+                # re-places per shard).
+                self.bits = np.roll(self.bits, shift, axis=0)
+                self.valid = np.roll(self.valid, shift, axis=0)
+                self.fp_of = np.roll(self.fp_of, shift, axis=0)
+                self.read_after = np.roll(self.read_after, shift, axis=0)
             self.valid_np = np.roll(self.valid_np, shift, axis=0)
             self.fp_of_np = np.roll(self.fp_of_np, shift, axis=0)
             self.slot_of = {fp: ((s + shift) % n, w)
@@ -394,27 +671,40 @@ class MonarchKVIndex:
 
     def write_distribution(self) -> np.ndarray:
         """Installs per PHYSICAL set — the wear-evenness metric (device
-        counter; unlike residency it never decays on eviction)."""
+        counter; unlike residency it never decays on eviction).  Shape
+        (n_sets,), concatenated in shard order."""
         return np.asarray(self.set_writes)
 
     def wear_report(self) -> dict:
-        """Serving-side §8 wear stats from the shared WearState."""
-        ws = self.wear_state
+        """Serving-side §8 wear stats from the shared WearState(s).
+
+        Returns
+        -------
+        dict
+            ``installs_per_set_max/mean``, ``skew_max_over_mean`` (wear
+            evenness), ``window_writes`` (per-set, shard-concatenated),
+            ``throttled_sets_now`` (sets an admission would be rejected
+            from right now — the admit path rejects via
+            ``window_would_exceed`` BEFORE the write, so
+            ``record_write``'s post-overflow lock never engages here),
+            plus the throttle/rotation stats.  Identical at every shard
+            count for the same schedule.
+        """
         w = self.write_distribution().astype(np.float64)
         mean = float(w.mean()) if w.size else 0.0
+        cyc = jnp.asarray(min(self.ops_total, 2 ** 31 - 1), jnp.int32)
+        throttled_now = sum(
+            int(np.asarray(wear.window_would_exceed(
+                self._wear_states[k], self._wear_dyns[k],
+                jnp.arange(self.sets_per_shard), cyc)).sum())
+            for k in range(self.n_shards))
         return {
             "installs_per_set_max": float(w.max()) if w.size else 0.0,
             "installs_per_set_mean": mean,
             "skew_max_over_mean": float(w.max() / mean) if mean > 0 else 1.0,
-            "window_writes": np.asarray(ws.window_writes).tolist(),
-            # sets an admission would be rejected from right now (the
-            # admit path rejects via window_would_exceed BEFORE the write,
-            # so record_write's post-overflow lock never engages here).
-            "throttled_sets_now": int(np.asarray(wear.window_would_exceed(
-                ws, self.wear_dyn,
-                jnp.arange(self.cfg.n_sets),
-                jnp.asarray(min(self.ops_total, 2 ** 31 - 1), jnp.int32)
-            )).sum()),
+            "window_writes": np.asarray(
+                self.wear_state.window_writes).tolist(),
+            "throttled_sets_now": throttled_now,
             "throttled": self.stats.throttled,
             "rotations": self.stats.rotations,
         }

@@ -215,7 +215,7 @@ def _snapshot(idx: MonarchKVIndex):
         fp_of=np.asarray(idx.fp_of).copy(),
         read_after=np.asarray(idx.read_after).copy(),
         set_writes=np.asarray(idx.set_writes).copy(),
-        counter=int(idx.counter),
+        counter=np.asarray(idx.counter).copy(),   # per-set replacement ctrs
         ops=idx.ops_total,
         window_writes=np.asarray(idx.wear_state.window_writes).copy(),
         locked_until=np.asarray(idx.wear_state.locked_until).copy(),

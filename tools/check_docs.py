@@ -1,0 +1,93 @@
+"""Docs CI gate: intra-repo link check + docstring doctests.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two checks, both fatal on failure:
+
+* **Links** — every relative markdown link (``[text](path)`` /
+  ``[text](path#anchor)``) in ``README.md`` and ``docs/*.md`` must
+  resolve to a file or directory in the repo.  External schemes
+  (http/https/mailto) are skipped; anchors are checked for existence of
+  the TARGET FILE only (heading drift is a review concern, missing files
+  are a CI concern).
+* **Doctests** — ``doctest`` runs over the public-API modules that carry
+  examples (the list below, not a blanket sweep: importing every module
+  would drag model/benchmark code into the docs gate).
+
+Run from the repo root (CI does).
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: Markdown files whose links are checked.
+DOC_FILES = ["README.md", *sorted(
+    str(p.relative_to(ROOT)) for p in (ROOT / "docs").glob("*.md"))]
+
+#: Modules whose docstring examples must stay executable.
+DOCTEST_MODULES = [
+    "repro.core.geometry",
+    "repro.core.wear",
+    "repro.kernels.xam_search.ops",
+    "repro.serve.kv_index",
+    "repro.serve.admit_queue",
+]
+
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for rel in DOC_FILES:
+        path = ROOT / rel
+        if not path.exists():
+            errors.append(f"{rel}: listed doc file missing")
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for target in _LINK_RE.findall(line):
+                if target.startswith(_SKIP_SCHEMES):
+                    continue
+                fname = target.split("#", 1)[0]
+                if not fname:
+                    continue
+                resolved = (path.parent / fname).resolve()
+                if not resolved.exists():
+                    errors.append(
+                        f"{rel}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def run_doctests() -> tuple[int, list[str]]:
+    failures, tested = [], 0
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        result = doctest.testmod(mod, verbose=False)
+        tested += result.attempted
+        if result.failed:
+            failures.append(f"{name}: {result.failed} doctest failure(s)")
+    return tested, failures
+
+
+def main() -> int:
+    link_errors = check_links()
+    for e in link_errors:
+        print(f"[docs] {e}")
+    print(f"[docs] link check: {len(DOC_FILES)} files, "
+          f"{len(link_errors)} broken link(s)")
+    tested, doc_failures = run_doctests()
+    for e in doc_failures:
+        print(f"[docs] {e}")
+    print(f"[docs] doctests: {tested} example(s) across "
+          f"{len(DOCTEST_MODULES)} modules, {len(doc_failures)} failing")
+    return 1 if (link_errors or doc_failures) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
