@@ -112,20 +112,43 @@ def run(csv_rows: list[str], quick: bool = False):
           f"({t.median_us / (32 * 512 // 16):.1f} us/chunk)")
     csv_rows.append(f"kv_index_lookup_32x512,{t.median_us:.0f},")
 
-    # set-sharded lookup: same 32x512 batch fanned out over 4 set shards
-    # (two-level grouping, one fused launch per shard, dispatched before
-    # any sync).  On this 1-device rig the shards co-locate — the number
-    # tracks the fan-out overhead; on a ("sets",) mesh the launches run
-    # on separate devices.
+    # set-sharded lookup: same 32x512 batch at n_shards=4, now ONE device
+    # dispatch regardless of the shard count (the stacked shard_map path
+    # on a ("sets",) mesh; collapsed to the single fused launch on this
+    # 1-device rig — either way the per-shard host fan-out is gone, which
+    # is what the number tracks vs the PR-4 baseline).
     idx_s = MonarchKVIndex(KVIndexConfig(n_sets=8, n_shards=4))
     idx_s.admit(toks_big)
     idx_s.admit(toks_big)
     t = time_callable(lambda: idx_s.lookup(toks_big), warmup=1, reps=reps)
     timings["kv_index_lookup_sharded"] = t
-    print(f"kv_index lookup 32x512 tokens, 4 set shards: "
-          f"{t.median_us:.0f} us ({idx_s.stats.searches} launches/"
+    print(f"kv_index lookup 32x512 tokens, 4 set shards "
+          f"({idx_s.n_parts} partitions): {t.median_us:.0f} us "
+          f"({idx_s.stats.searches} dispatches/"
           f"{idx_s.stats.lookups} lookups)")
     csv_rows.append(f"kv_index_lookup_sharded,{t.median_us:.0f},4shards")
+
+    # the kept PR-4 host fan-out (differential reference): one pallas_call
+    # per occupied shard — the measured comparator for the single dispatch
+    idx_f = MonarchKVIndex(KVIndexConfig(n_sets=8, n_shards=4),
+                           dispatch="fanout")
+    idx_f.admit(toks_big)
+    idx_f.admit(toks_big)
+    t2 = time_callable(lambda: idx_f.lookup(toks_big), warmup=1, reps=reps)
+    timings["kv_index_lookup_fanout"] = t2
+    print(f"kv_index lookup 32x512 tokens, 4-shard host fan-out: "
+          f"{t2.median_us:.0f} us -> single-dispatch speedup "
+          f"{t2.median_us / t.median_us:.1f}x")
+    csv_rows.append(f"kv_index_lookup_fanout,{t2.median_us:.0f},"
+                    f"{t2.median_us / t.median_us:.1f}x")
+
+    # device-resident rotation: the set+7 remap (donated roll + ppermute
+    # boundary exchange across partitions; pure donated roll when
+    # collapsed) — plane data never moves through the host.
+    t = time_callable(lambda: idx_s._rotate(), warmup=1, reps=reps)
+    timings["kv_index_rotate"] = t
+    print(f"kv_index rotate (device remap, 4 shards): {t.median_us:.0f} us")
+    csv_rows.append(f"kv_index_rotate,{t.median_us:.0f},4shards")
 
     # batched admission: ONE jitted device call per 64-fingerprint batch,
     # vs the pre-PR host loop (one install dispatch per fingerprint).

@@ -163,6 +163,66 @@ def shard_set_slice(shard: int, n_sets: int, n_shards: int) -> slice:
     return slice(shard * s_local, (shard + 1) * s_local)
 
 
+def shard_roll_plan(shift: int, n_sets: int, n_parts: int):
+    """Decompose a GLOBAL cyclic set roll into per-shard collectives.
+
+    The serving index's rotary remap is ``new[g] = old[(g - shift) mod
+    n_sets]`` over the whole set axis.  With contiguous-block sharding
+    (``s_loc = n_sets // n_parts`` sets per shard) the same permutation
+    factors into shard-local arithmetic: write ``shift = q * s_loc + r``
+    with ``0 <= r < s_loc``.  Then destination shard ``k`` assembles its
+    new plane from exactly TWO sources —
+
+    * rows ``[r, s_loc)``  <- shard ``(k - q) mod n_parts``, rows
+      ``[0, s_loc - r)`` (the bulk that stays block-aligned), and
+    * rows ``[0, r)``      <- shard ``(k - q - 1) mod n_parts``, rows
+      ``[s_loc - r, s_loc)`` (the ``r`` boundary sets that cross a shard
+      edge under the global permutation)
+
+    — i.e. each source shard ``j`` ppermutes its low ``s_loc - r`` rows
+    to shard ``j + q`` and its high ``r`` rows to shard ``j + q + 1``.
+    A slab whose shard permutation is the identity never leaves its
+    device: the common small-stride case (``q == 0``) is a pure local
+    roll plus a boundary exchange of only the ``r`` edge sets.
+
+    Parameters
+    ----------
+    shift : int
+        Global roll amount in sets (the serving index uses the prime
+        stride 7 mod ``n_sets``).
+    n_sets, n_parts : int
+        Global set count and shard count (``n_parts`` divides
+        ``n_sets``).
+
+    Returns
+    -------
+    (q, r, low_perm, high_perm) : tuple
+        ``q``/``r`` as above; ``low_perm``/``high_perm`` are the
+        ``(source, destination)`` pair lists for ``jax.lax.ppermute`` of
+        the low/high slabs, or ``None`` when that slab stays device-local
+        (identity permutation, or — for ``high_perm`` — when ``r == 0``
+        and there is no boundary slab at all).
+
+    Examples
+    --------
+    >>> shard_roll_plan(7, 8, 4)    # stride 7, 2/shard: boundary is local
+    (3, 1, [(0, 3), (1, 0), (2, 1), (3, 2)], None)
+    >>> shard_roll_plan(1, 8, 4)    # pure boundary exchange
+    (0, 1, None, [(0, 1), (1, 2), (2, 3), (3, 0)])
+    >>> shard_roll_plan(2, 8, 4)    # whole-block permutation
+    (1, 0, [(0, 1), (1, 2), (2, 3), (3, 0)], None)
+    """
+    s_loc = sets_per_shard(n_sets, n_parts)
+    if not 0 < shift < n_sets:
+        raise ValueError(f"shift={shift} must be in (0, {n_sets})")
+    q, r = divmod(shift, s_loc)
+    low_perm = ([(j, (j + q) % n_parts) for j in range(n_parts)]
+                if q % n_parts != 0 else None)
+    high_perm = ([(j, (j + q + 1) % n_parts) for j in range(n_parts)]
+                 if r != 0 and (q + 1) % n_parts != 0 else None)
+    return q, r, low_perm, high_perm
+
+
 # ---------------------------------------------------------------------------
 # Rotary offsets (§8): primes per level, vault bumped every 8th rotate.
 # ---------------------------------------------------------------------------

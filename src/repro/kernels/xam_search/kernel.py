@@ -137,20 +137,42 @@ def xam_search_pallas(
 # ---------------------------------------------------------------------------
 
 def _xam_multiset_kernel(block_sets_ref,       # (n_qb,) int32 in SMEM
+                         live_blocks_ref,      # (n_qb,) int32 in SMEM
                          keys_ref, masks_ref,  # (bq, R) int8
                          plane_ref,            # (1, R, C) int8 — this block's set
                          valid_ref,            # (1, C) int8
                          out_ref,              # (bq, 1) int32
                          *, scoring: str):
     del block_sets_ref  # consumed by the index maps
-    match = _match_bitmap(
-        keys_ref[...], masks_ref[...], plane_ref[0], scoring)   # (bq, C)
-    live = match * valid_ref[...]                               # fused validity
-    bq, c = live.shape
-    pos = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
-    big = jnp.int32(c)
-    first = jnp.min(jnp.where(live == 1, pos, big), axis=1, keepdims=True)
-    out_ref[...] = jnp.where(first < big, first, -1).astype(jnp.int32)
+
+    # Padding blocks — the pow2 bucket tail, and in the stacked sharded
+    # layout every block a shard pads up to the common Qmax (a per-shard
+    # PREFIX of real blocks, so flattened layouts interleave pad runs) —
+    # SKIP the matmul entirely and emit the NULL match register.  The
+    # scalar-prefetched per-block liveness flags are what make bucket
+    # padding nearly free: grid steps still run, compute doesn't.
+    blk_live = live_blocks_ref[pl.program_id(0)] != 0
+
+    @pl.when(jnp.logical_not(blk_live))
+    def _pad_block():
+        out_ref[...] = jnp.full(out_ref.shape, -1, jnp.int32)
+
+    @pl.when(blk_live)
+    def _live_block():
+        match = _match_bitmap(
+            keys_ref[...], masks_ref[...], plane_ref[0], scoring)  # (bq, C)
+        live = match * valid_ref[...]                       # fused validity
+        bq, c = live.shape
+        pos = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
+        big = jnp.int32(c)
+        first = jnp.min(jnp.where(live == 1, pos, big), axis=1,
+                        keepdims=True)
+        # Ragged block tails (all-zero mask rows) also report -1, so the
+        # (Q,) result is deterministic end-to-end, not
+        # garbage-where-discarded.
+        row_live = jnp.any(masks_ref[...] != 0, axis=1)[:, None]
+        first = jnp.where(row_live, first, big)
+        out_ref[...] = jnp.where(first < big, first, -1).astype(jnp.int32)
 
 
 @functools.partial(
@@ -161,6 +183,7 @@ def xam_search_multiset_pallas(
     planes: jnp.ndarray,      # (n_sets, R, C) int8 device-resident bits
     valid: jnp.ndarray,       # (n_sets, C) int8 device-resident validity
     block_sets: jnp.ndarray,  # (Q // block_q,) int32 set id per query block
+    live_blocks: jnp.ndarray | None = None,  # (Q // block_q,) int32 0 = pad
     *,
     block_q: int = MULTISET_BLOCK_Q,
     scoring: str = "int8",
@@ -169,34 +192,42 @@ def xam_search_multiset_pallas(
     """One fused launch over a set-grouped query batch.  Returns (Q,) int32
     first matching *valid* way per query, -1 = miss.  Q must be a multiple
     of ``block_q`` and every query in block b must belong to set
-    ``block_sets[b]`` (padding rows carry all-zero masks and are ignored by
-    callers)."""
+    ``block_sets[b]``.  ``live_blocks`` (scalar-prefetched alongside the
+    block set ids) flags the non-padding blocks: blocks flagged 0 skip
+    the matmul and report -1 (as do all-zero-mask rows inside live
+    blocks), so both the flat pow2 bucket tail and the stacked sharded
+    layout — per-shard prefixes of real blocks, interleaved with pad runs
+    when flattened — get a deterministic result at no compute cost for
+    the padding.  None = every block live."""
     q, r = keys.shape
     n_sets, r2, c = planes.shape
     assert r == r2 and masks.shape == keys.shape
     assert valid.shape == (n_sets, c)
     assert q % block_q == 0 and block_sets.shape == (q // block_q,)
     assert scoring in ("int8", "f32"), scoring
+    if live_blocks is None:
+        live_blocks = jnp.ones(q // block_q, jnp.int32)
+    assert live_blocks.shape == (q // block_q,)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(q // block_q,),
         in_specs=[
-            pl.BlockSpec((block_q, r), lambda i, s: (i, 0)),
-            pl.BlockSpec((block_q, r), lambda i, s: (i, 0)),
-            pl.BlockSpec((1, r, c), lambda i, s: (s[i], 0, 0)),
-            pl.BlockSpec((1, c), lambda i, s: (s[i], 0)),
+            pl.BlockSpec((block_q, r), lambda i, s, nb: (i, 0)),
+            pl.BlockSpec((block_q, r), lambda i, s, nb: (i, 0)),
+            pl.BlockSpec((1, r, c), lambda i, s, nb: (s[i], 0, 0)),
+            pl.BlockSpec((1, c), lambda i, s, nb: (s[i], 0)),
         ],
-        out_specs=pl.BlockSpec((block_q, 1), lambda i, s: (i, 0)),
+        out_specs=pl.BlockSpec((block_q, 1), lambda i, s, nb: (i, 0)),
     )
     out = pl.pallas_call(
         functools.partial(_xam_multiset_kernel, scoring=scoring),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((q, 1), jnp.int32),
         interpret=interpret,
-    )(block_sets.astype(jnp.int32), keys.astype(jnp.int8),
-      masks.astype(jnp.int8), planes.astype(jnp.int8),
-      valid.astype(jnp.int8))
+    )(block_sets.astype(jnp.int32), live_blocks.astype(jnp.int32),
+      keys.astype(jnp.int8), masks.astype(jnp.int8),
+      planes.astype(jnp.int8), valid.astype(jnp.int8))
     return out[:, 0]
 
 

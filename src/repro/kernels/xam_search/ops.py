@@ -8,12 +8,15 @@ flipped rig-wide via ``REPRO_XAM_SCORING=f32``.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels.common import bucket_pow2
 from repro.kernels.xam_search.kernel import (
@@ -21,6 +24,26 @@ from repro.kernels.xam_search.kernel import (
 from repro.kernels.xam_search.ref import xam_search_ref
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+#: Host-side fused-search launches since import (every device dispatch of a
+#: multi-set search bumps it exactly once — the unsharded single call, each
+#: per-shard call of the host fan-out, and the ONE shard_map dispatch of the
+#: stacked path).  The dispatch-count tests read and reset it.
+LAUNCH_COUNT = 0
+
+#: Adaptive query-block policy: batches at/above this many queries use the
+#: wide block (fewer grid steps — the per-step overhead, not the matmul,
+#: dominates small tiles), smaller ones keep MULTISET_BLOCK_Q.  Search
+#: results are layout-independent (first-valid-way per query), so the
+#: width never changes an answer — pinned by the parity matrix.
+WIDE_BLOCK_AT = 256
+WIDE_BLOCK_Q = 64
+
+
+def _pick_block_q(n_queries: int, block_q: int | None) -> int:
+    if block_q is not None:
+        return block_q
+    return MULTISET_BLOCK_Q if n_queries < WIDE_BLOCK_AT else WIDE_BLOCK_Q
 
 
 def _resolve_scoring(scoring: str | None) -> str:
@@ -59,21 +82,17 @@ def xam_match_index(keys, data, masks=None, **kw) -> jnp.ndarray:
 # Fused multi-set fast path (device-resident planes, one launch per batch).
 # ---------------------------------------------------------------------------
 
-def group_queries_by_set(set_ids: np.ndarray, n_sets: int,
-                         block_q: int = MULTISET_BLOCK_Q):
-    """Host-side layout for the fused kernel: pack queries into per-set
-    blocks of ``block_q`` and bucket the block count to a power of two (so
-    varying batch sizes hit a handful of compiled shapes, not one each).
+def _group_one(set_ids: np.ndarray, n_sets: int, block_q: int):
+    """Unbucketed per-set block packing (one shard's level-2 grouping).
 
-    Returns ``(slot, block_sets, padded_q)``: query i goes to padded row
-    ``slot[i]``; grid block b searches set ``block_sets[b]``.
-    """
+    Returns ``(slot, block_sets, total_blocks)`` with ``block_sets`` of
+    exact length ``total_blocks`` — callers bucket/pad to their own
+    compiled-shape policy."""
     set_ids = np.asarray(set_ids, np.int64)
     q = set_ids.shape[0]
     counts = np.bincount(set_ids, minlength=n_sets)
     blocks_per_set = -(-counts // block_q)          # ceil
-    total_blocks = max(int(blocks_per_set.sum()), 1)
-    n_qb = bucket_pow2(total_blocks, lo=4)
+    total_blocks = int(blocks_per_set.sum())
 
     block_start = np.zeros(n_sets + 1, np.int64)
     np.cumsum(blocks_per_set, out=block_start[1:])
@@ -86,10 +105,89 @@ def group_queries_by_set(set_ids: np.ndarray, n_sets: int,
     slot = np.empty(q, np.int64)
     slot[order] = block_start[sorted_sets] * block_q + rank_in_set
 
-    block_sets = np.zeros(n_qb, np.int32)
-    block_sets[:total_blocks] = np.repeat(
+    block_sets = np.repeat(
         np.arange(n_sets, dtype=np.int32), blocks_per_set)
-    return slot, block_sets, n_qb * block_q
+    return slot, block_sets, total_blocks
+
+
+def group_queries_by_set(set_ids: np.ndarray, n_sets: int,
+                         block_q: int = MULTISET_BLOCK_Q):
+    """Host-side layout for the fused kernel: pack queries into per-set
+    blocks of ``block_q`` and bucket the block count to a power of two (so
+    varying batch sizes hit a handful of compiled shapes, not one each).
+
+    Returns ``(slot, block_sets, padded_q, n_blocks)``: query i goes to
+    padded row ``slot[i]``; grid block b searches set ``block_sets[b]``;
+    only the first ``n_blocks`` blocks are real — the kernel skips the
+    matmul for the bucket-padding tail via the scalar-prefetched count.
+    """
+    slot, block_sets, total_blocks = _group_one(set_ids, n_sets, block_q)
+    n_qb = bucket_pow2(max(total_blocks, 1), lo=4)
+    padded = np.zeros(n_qb, np.int32)
+    padded[:total_blocks] = block_sets
+    return slot, padded, n_qb * block_q, total_blocks
+
+
+def group_queries_by_set_stacked(set_ids: np.ndarray, n_sets: int,
+                                 n_parts: int,
+                                 block_q: int = MULTISET_BLOCK_Q):
+    """Two-level stacked layout for the single-dispatch sharded search.
+
+    Level 1 splits queries by owning shard (``set_id // (n_sets //
+    n_parts)`` — contiguous-block ownership, ``geometry.shard_of_set``);
+    level 2 packs each shard's queries into per-(local-)set blocks of
+    ``block_q`` exactly as :func:`group_queries_by_set` does.  Every
+    shard is then padded to ONE common block count — the pow2 bucket of
+    the largest shard's block count — so the query operand is a dense
+    ``(n_parts, Qmax, R)`` array that shards ``P("sets")`` over the
+    mesh, and the jit cache grows with the pow2 bucket count instead of
+    one entry per ragged shape.
+
+    Layout contract (consumed by ``xam_search_multiset_stacked``):
+
+    * query i lives at row ``slot[i]`` of shard ``part_of[i]``'s slice;
+    * grid block b of shard p searches that shard's LOCAL set
+      ``block_sets[p, b]``;
+    * only the first ``n_blocks[p]`` blocks of shard p are real — the
+      kernel gets ``n_blocks`` via scalar prefetch and reports -1 for
+      every padding block/row.
+
+    Returns ``(part_of, slot, block_sets, n_blocks, padded_q)`` with
+    ``block_sets`` of shape ``(n_parts, padded_q // block_q)`` and
+    ``n_blocks`` of shape ``(n_parts,)``.
+
+    Examples
+    --------
+    8 global sets over 2 shards, block width 4: set 5 is shard 1's local
+    set 1, and the empty shard 0 still occupies its padded slice (zero
+    real blocks):
+
+    >>> part_of, slot, block_sets, n_blocks, padded_q = (
+    ...     group_queries_by_set_stacked([5, 5, 4], 8, 2, block_q=4))
+    >>> part_of.tolist(), slot.tolist()
+    ([1, 1, 1], [4, 5, 0])
+    >>> block_sets.tolist(), n_blocks.tolist(), padded_q
+    ([[0, 0, 0, 0], [0, 1, 0, 0]], [0, 2], 16)
+    """
+    set_ids = np.asarray(set_ids, np.int64)
+    if n_sets % n_parts != 0:
+        raise ValueError(f"n_parts={n_parts} must divide n_sets={n_sets}")
+    s_part = n_sets // n_parts
+    part_of = set_ids // s_part
+    grouped = []
+    for p in range(n_parts):
+        sel = np.nonzero(part_of == p)[0]
+        sl, bs, tb = _group_one(set_ids[sel] - p * s_part, s_part, block_q)
+        grouped.append((sel, sl, bs, tb))
+    n_qb = bucket_pow2(max(max(g[3] for g in grouped), 1), lo=4)
+    slot = np.empty(set_ids.shape[0], np.int64)
+    block_sets = np.zeros((n_parts, n_qb), np.int32)
+    n_blocks = np.zeros(n_parts, np.int32)
+    for p, (sel, sl, bs, tb) in enumerate(grouped):
+        slot[sel] = sl
+        block_sets[p, :tb] = bs
+        n_blocks[p] = tb
+    return part_of, slot, block_sets, n_blocks, n_qb * block_q
 
 
 def _multiset_dispatch(key_bits: np.ndarray, set_ids: np.ndarray,
@@ -101,10 +199,12 @@ def _multiset_dispatch(key_bits: np.ndarray, set_ids: np.ndarray,
     result, ``slot`` the padded row of each input query.  Callers that fan
     out over shards dispatch every shard's kernel before materializing any
     result, so the launches overlap under jax async dispatch."""
+    global LAUNCH_COUNT
+    LAUNCH_COUNT += 1
     key_bits = np.asarray(key_bits, np.int8)
     _, r = key_bits.shape
     n_sets = planes.shape[0]
-    slot, block_sets, padded_q = group_queries_by_set(
+    slot, block_sets, padded_q, n_blocks = group_queries_by_set(
         set_ids, n_sets, block_q)
     keys_p = np.zeros((padded_q, r), np.int8)
     masks_p = np.zeros((padded_q, r), np.int8)
@@ -113,16 +213,17 @@ def _multiset_dispatch(key_bits: np.ndarray, set_ids: np.ndarray,
     # Query-side operands follow the planes' placement, so shard-local
     # calls run on the shard's own mesh device.
     put = lambda x: jax.device_put(jnp.asarray(x), planes.sharding)
+    live = (np.arange(len(block_sets)) < n_blocks).astype(np.int32)
     out = xam_search_multiset_pallas(
         put(keys_p), put(masks_p), planes, valid,
-        put(block_sets), block_q=block_q,
-        scoring=scoring, interpret=interpret)
+        put(block_sets), put(live),
+        block_q=block_q, scoring=scoring, interpret=interpret)
     return out, slot
 
 
 def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
                         planes: jnp.ndarray, valid: jnp.ndarray, *,
-                        block_q: int = MULTISET_BLOCK_Q,
+                        block_q: int | None = None,
                         scoring: str | None = None,
                         interpret: bool | None = None) -> np.ndarray:
     """Batched CAM search across sets in ONE kernel launch.
@@ -140,8 +241,11 @@ def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
         Per-way validity; dead ways are masked inside the kernel so they
         never produce hits.
     block_q, scoring, interpret
-        Kernel tile width, MXU arithmetic ("int8" default / "f32"), and
-        Pallas interpret-mode flag (defaults to True off-TPU).
+        Kernel tile width (None = adaptive: ``WIDE_BLOCK_Q`` at/above
+        ``WIDE_BLOCK_AT`` queries, else ``MULTISET_BLOCK_Q`` — the
+        answer is width-independent), MXU arithmetic ("int8" default /
+        "f32"), and Pallas interpret-mode flag (defaults to True
+        off-TPU).
 
     Returns
     -------
@@ -151,14 +255,139 @@ def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
     if interpret is None:
         interpret = not _ON_TPU
     out, slot = _multiset_dispatch(
-        key_bits, set_ids, planes, valid, block_q=block_q,
+        key_bits, set_ids, planes, valid,
+        block_q=_pick_block_q(len(set_ids), block_q),
         scoring=_resolve_scoring(scoring), interpret=interpret)
     return np.asarray(out)[slot]
 
 
+@functools.lru_cache(maxsize=None)
+def _stacked_shardmap_fn(mesh: Mesh, block_q: int, scoring: str,
+                         interpret: bool):
+    """Jitted shard_map wrapper placing every shard's fused search from
+    ONE dispatch.  Each mesh device receives its (1, Qmax, R) query slice,
+    its scalar-prefetch row of block set ids + valid block count, and its
+    resident (sets_per_shard, R, C) plane block; XLA runs the per-shard
+    pallas_calls concurrently inside the single program."""
+    def per_shard(keys, masks, block_sets, n_blocks, planes, valid):
+        live = (jnp.arange(block_sets.shape[1]) < n_blocks[0]
+                ).astype(jnp.int32)
+        out = xam_search_multiset_pallas(
+            keys[0], masks[0], planes, valid, block_sets[0], live,
+            block_q=block_q, scoring=scoring, interpret=interpret)
+        return out[None]
+
+    spec = (P("sets"),) * 6
+    return jax.jit(shard_map(per_shard, mesh=mesh, in_specs=spec,
+                             out_specs=P("sets"), check_rep=False))
+
+
+def xam_search_multiset_stacked(key_bits: np.ndarray, set_ids: np.ndarray,
+                                planes: jnp.ndarray, valid: jnp.ndarray, *,
+                                mesh: Mesh | None = None,
+                                n_parts: int | None = None,
+                                block_q: int | None = None,
+                                scoring: str | None = None,
+                                interpret: bool | None = None) -> np.ndarray:
+    """Sharded CAM search in ONE device dispatch (the shard_map fast path).
+
+    The two-level stacked layout of
+    :func:`group_queries_by_set_stacked` turns the whole query batch into
+    a dense ``(n_parts, Qmax, R)`` operand; with a ``("sets",)`` ``mesh``
+    the search is ONE jitted ``shard_map`` call — XLA places every
+    shard's fused kernel from a single program, replacing the
+    one-``pallas_call``-per-shard host fan-out of
+    :func:`xam_search_multiset_sharded`.  Without a mesh (co-located
+    shards) the same stacked layout flattens into ONE plain fused launch
+    over the global planes.
+
+    Parameters
+    ----------
+    key_bits : np.ndarray, shape (Q, R), {0, 1}
+        Host-side query bit rows.
+    set_ids : np.ndarray, shape (Q,), int
+        GLOBAL physical set ids in ``[0, n_sets)``.
+    planes : jnp.ndarray, shape (n_sets, R, C), int8
+        Stored bits for ALL sets.  With ``mesh`` this must be sharded
+        ``P("sets")`` over it (contiguous blocks, shard k's sets on mesh
+        device k — the layout ``MonarchKVIndex`` assembles zero-copy from
+        its per-shard planes); without a mesh any single-device array.
+    valid : jnp.ndarray, shape (n_sets, C), int8
+        Validity planes, sharded like ``planes``.
+    mesh : Mesh | None
+        The ``("sets",)`` mesh (``launch/mesh.make_set_mesh``).  None =
+        single-device host: one flattened fused launch.
+    n_parts : int | None
+        Shard count of the stacked layout; defaults to the mesh size
+        (must equal it when a mesh is given).
+
+    Returns
+    -------
+    np.ndarray, shape (Q,), int32
+        First matching valid way per query (set-local), -1 = miss — same
+        contract as :func:`xam_search_multiset`.
+
+    Notes
+    -----
+    With ``n_parts == 1`` and no mesh this is EXACTLY
+    :func:`xam_search_multiset` — same grouping, same kernel — keeping
+    the unsharded serving path bit-identical.
+    """
+    if n_parts is None:
+        n_parts = mesh.shape["sets"] if mesh is not None else 1
+    if mesh is not None and n_parts != mesh.shape["sets"]:
+        raise ValueError(
+            f"n_parts={n_parts} must equal the mesh size {mesh.shape['sets']}")
+    if n_parts == 1 and mesh is None:
+        return xam_search_multiset(key_bits, set_ids, planes, valid,
+                                   block_q=block_q, scoring=scoring,
+                                   interpret=interpret)
+    if interpret is None:
+        interpret = not _ON_TPU
+    scoring = _resolve_scoring(scoring)
+    block_q = _pick_block_q(len(set_ids), block_q)
+    key_bits = np.asarray(key_bits, np.int8)
+    n_sets = planes.shape[0]
+    r = key_bits.shape[1]
+    part_of, slot, block_sets, n_blocks, padded_q = (
+        group_queries_by_set_stacked(set_ids, n_sets, n_parts, block_q))
+    keys_p = np.zeros((n_parts, padded_q, r), np.int8)
+    masks_p = np.zeros((n_parts, padded_q, r), np.int8)
+    keys_p[part_of, slot] = key_bits
+    masks_p[part_of, slot] = 1
+
+    global LAUNCH_COUNT
+    LAUNCH_COUNT += 1
+    if mesh is None:
+        # Co-located shards: the stacked layout IS a valid flat grouping
+        # once block set ids are globalized — one plain fused launch.
+        # Each shard's pad run (blocks past its prefix of real ones, up
+        # to the common Qmax) stays flagged dead, so the kernel skips
+        # its matmuls exactly like the shard_map path does.
+        s_part = n_sets // n_parts
+        bs_global = (block_sets
+                     + (np.arange(n_parts, dtype=np.int32) * s_part)[:, None])
+        n_qb = block_sets.shape[1]
+        live = (np.arange(n_qb) < n_blocks[:, None]).astype(np.int32)
+        out = xam_search_multiset_pallas(
+            jnp.asarray(keys_p.reshape(-1, r)),
+            jnp.asarray(masks_p.reshape(-1, r)),
+            planes, valid, jnp.asarray(bs_global.reshape(-1)),
+            jnp.asarray(live.reshape(-1)),
+            block_q=block_q, scoring=scoring, interpret=interpret)
+        out = np.asarray(out).reshape(n_parts, padded_q)
+    else:
+        put = lambda x: jax.device_put(
+            jnp.asarray(x), NamedSharding(mesh, P("sets")))
+        fn = _stacked_shardmap_fn(mesh, block_q, scoring, interpret)
+        out = np.asarray(fn(put(keys_p), put(masks_p), put(block_sets),
+                            put(n_blocks), planes, valid))
+    return out[part_of, slot].astype(np.int32)
+
+
 def xam_search_multiset_sharded(key_bits: np.ndarray, set_ids: np.ndarray,
                                 planes_by_shard, valid_by_shard, *,
-                                block_q: int = MULTISET_BLOCK_Q,
+                                block_q: int | None = None,
                                 scoring: str | None = None,
                                 interpret: bool | None = None) -> np.ndarray:
     """Fan a query batch out over set-sharded CAM planes.
@@ -195,6 +424,15 @@ def xam_search_multiset_sharded(key_bits: np.ndarray, set_ids: np.ndarray,
     With one shard this is EXACTLY :func:`xam_search_multiset` — same
     grouping, same kernel, same inputs — which pins the single-shard
     serving path bit-identical to the unsharded implementation.
+
+    This host fan-out is the DIFFERENTIAL REFERENCE for the
+    single-dispatch path: :func:`xam_search_multiset_stacked` answers the
+    same ``(key_bits, set_ids)`` batch from one ``shard_map`` dispatch
+    over the stacked ``(n_parts, Qmax, R)`` layout (contract in
+    :func:`group_queries_by_set_stacked` — per-shard blocks padded to a
+    common pow2 ``Qmax``, per-shard valid block counts scalar-prefetched)
+    and must return bit-identical ways; ``tests/test_kv_index_differential
+    .py`` replays randomized schedules through both after every op.
     """
     n_shards = len(planes_by_shard)
     if n_shards == 1:
@@ -215,7 +453,8 @@ def xam_search_multiset_sharded(key_bits: np.ndarray, set_ids: np.ndarray,
         out, slot = _multiset_dispatch(
             key_bits[sel], set_ids[sel] - int(k) * s_local,
             planes_by_shard[int(k)], valid_by_shard[int(k)],
-            block_q=block_q, scoring=scoring, interpret=interpret)
+            block_q=_pick_block_q(sel.size, block_q),
+            scoring=scoring, interpret=interpret)
         pending.append((sel, slot, out))
     ways = np.empty(set_ids.shape[0], np.int32)
     for sel, slot, out in pending:

@@ -7,10 +7,16 @@ and smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 import jax
-from jax.sharding import Mesh
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import geometry
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -36,13 +42,33 @@ def make_host_mesh() -> Mesh:
     return Mesh(np.asarray(devices).reshape(len(devices), 1), ("data", "model"))
 
 
+def set_partitions(n_shards: int) -> int:
+    """Device-partition count for ``n_shards`` logical set shards.
+
+    The single-dispatch lookup/rotation paths shard the global plane
+    arrays contiguously over the ``("sets",)`` mesh, so the mesh size
+    must DIVIDE the logical shard count (partition boundaries coarsen
+    shard boundaries).  Returns the largest divisor of ``n_shards`` that
+    this host's device count can hold — 1 on a single-device host, where
+    every logical shard co-locates and the index collapses to the
+    unsharded single-launch path."""
+    devices = len(jax.devices())
+    if n_shards <= 1 or devices <= 1:
+        return 1
+    m = min(n_shards, devices)
+    while n_shards % m != 0:
+        m -= 1
+    return m
+
+
 def make_set_mesh(n_shards: int) -> Mesh | None:
     """1-D ``("sets",)`` mesh for the sharded ``MonarchKVIndex`` set planes.
 
-    The serving index splits its CAM sets into ``n_shards`` contiguous
-    blocks (see ``geometry.shard_of_set``); each block's plane arrays,
-    wear state and replacement counters live on one mesh device, and
-    lookup/admission batches fan out as shard-local device calls.
+    The serving index splits its CAM sets into contiguous blocks (see
+    ``geometry.shard_of_set``); each mesh device owns one block's plane
+    arrays, wear state and replacement counters, lookup runs as ONE
+    ``shard_map``-wrapped fused search over the mesh, and rotation is a
+    ``ppermute`` boundary exchange on it.
 
     Parameters
     ----------
@@ -52,31 +78,89 @@ def make_set_mesh(n_shards: int) -> Mesh | None:
     Returns
     -------
     Mesh | None
-        A mesh over ``min(n_shards, n_devices)`` devices with the single
-        axis ``"sets"`` — shards are assigned round-robin over its
-        devices — or ``None`` when this host has one device (all shards
-        co-locate; the fan-out structure still runs, placement is just a
-        no-op).  Like every constructor here this touches jax device
-        state only when CALLED, never at import.
+        A mesh over ``set_partitions(n_shards)`` devices with the single
+        axis ``"sets"`` (the size always divides ``n_shards``, so
+        contiguous ``NamedSharding`` partitions align with shard
+        boundaries), or ``None`` when this host has one device (all
+        shards co-locate; the index collapses to the unsharded
+        single-launch path).  Like every constructor here this touches
+        jax device state only when CALLED, never at import.
     """
-    devices = jax.devices()
-    if n_shards <= 1 or len(devices) <= 1:
+    n = set_partitions(n_shards)
+    if n <= 1:
         return None
-    n = min(n_shards, len(devices))
-    return Mesh(np.asarray(devices[:n]), ("sets",))
+    return Mesh(np.asarray(jax.devices()[:n]), ("sets",))
 
 
 def set_shard_devices(mesh: Mesh | None, n_shards: int) -> list | None:
     """Per-shard device assignment over a ``make_set_mesh`` mesh.
 
-    Returns a length-``n_shards`` list (shard k -> device, round-robin
-    over the mesh's ``"sets"`` axis), or ``None`` when ``mesh`` is None
-    (single-device host: callers skip explicit placement entirely, which
-    keeps the 1-shard path byte-identical to the unsharded code)."""
+    Returns a length-``n_shards`` list mapping shard k to a mesh device
+    in CONTIGUOUS blocks (``k * n_devices // n_shards`` — contiguous so
+    the per-shard placement agrees with the ``NamedSharding(mesh,
+    P("sets"))`` partitions the single-dispatch paths assemble), or
+    ``None`` when ``mesh`` is None (single-device host: callers skip
+    explicit placement entirely, which keeps the 1-shard path
+    byte-identical to the unsharded code)."""
     if mesh is None:
         return None
     devs = list(mesh.devices.flat)
-    return [devs[k % len(devs)] for k in range(n_shards)]
+    return [devs[k * len(devs) // n_shards] for k in range(n_shards)]
+
+
+def set_axis_sharding(mesh: Mesh) -> NamedSharding:
+    """Contiguous leading-axis sharding over the ``("sets",)`` mesh —
+    the layout of every assembled global plane array."""
+    return NamedSharding(mesh, P("sets"))
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_roll(mesh: Mesh, n_rows: int, shift: int):
+    """Donated on-device cyclic roll of set-sharded plane arrays.
+
+    Builds (and caches) a jitted ``shard_map`` function implementing
+    ``new[g] = old[(g - shift) mod n_rows]`` along the leading (set)
+    axis of any number of arrays sharded ``P("sets")`` over ``mesh`` —
+    the global rotary remap — WITHOUT moving plane data through the
+    host: per ``geometry.shard_roll_plan`` each device keeps the
+    block-aligned slab local (or ppermutes it whole) and exchanges only
+    the ``shift mod sets_per_device`` boundary sets with its neighbor.
+    All operands are donated, so the remap is in-place buffer reuse.
+
+    Returns a function ``roll(*arrays) -> tuple`` (one output per input,
+    same shapes/shardings).
+    """
+    m = mesh.shape["sets"]
+    s_loc = n_rows // m
+    _q, r, low_perm, high_perm = geometry.shard_roll_plan(shift, n_rows, m)
+
+    def _roll_one(x):
+        low = x[: s_loc - r] if r else x
+        if low_perm is not None:
+            low = jax.lax.ppermute(low, "sets", low_perm)
+        if r == 0:
+            return low
+        high = x[s_loc - r:]
+        if high_perm is not None:
+            high = jax.lax.ppermute(high, "sets", high_perm)
+        return jnp.concatenate([high, low], axis=0)
+
+    def _roll(*arrays):
+        return tuple(_roll_one(x) for x in arrays)
+
+    jitted = {}   # arity -> jitted donated shard_map (built once, reused)
+
+    def roll(*arrays):
+        n = len(arrays)
+        if n not in jitted:
+            spec = tuple(P("sets") for _ in range(n))
+            jitted[n] = jax.jit(
+                shard_map(_roll, mesh=mesh, in_specs=spec, out_specs=spec,
+                          check_rep=False),
+                donate_argnums=tuple(range(n)))
+        return jitted[n](*arrays)
+
+    return roll
 
 
 def make_grid_mesh(grid_size: int) -> Mesh | None:

@@ -11,10 +11,12 @@ split-KV layout) and batch scheduling over a request queue.
 
 Index scaling knobs (see docs/SERVING.md for the full operator guide):
 ``--n-shards`` splits the Monarch index's CAM sets across the
-``("sets",)`` device mesh (lookup/admit batches fan out per shard);
-admissions run behind an async ``AdmitQueue`` by default — installs
-overlap the decode loop — with ``--sync-admit`` restoring the inline
-path.
+``("sets",)`` device mesh — lookups run as ONE ``shard_map`` dispatch
+over the stacked layout and rotation stays device-resident (``ppermute``
+boundary exchange); on a single-device host every shard co-locates and
+the index collapses to the unsharded single-launch path.  Admissions run
+behind an async ``AdmitQueue`` by default — installs overlap the decode
+loop — with ``--sync-admit`` restoring the inline path.
 """
 from __future__ import annotations
 
@@ -63,7 +65,8 @@ def main(argv=None):
     ap.add_argument("--n-shards", type=int, default=1,
                     help="set-axis shards for the Monarch index (must "
                          "divide its n_sets; shards map onto the "
-                         '("sets",) device mesh round-robin)')
+                         '("sets",) device mesh in contiguous blocks; '
+                         "lookup stays ONE dispatch at any shard count)")
     ap.add_argument("--sync-admit", action="store_true",
                     help="admit inline on the serving loop instead of "
                          "behind the async AdmitQueue")
@@ -92,9 +95,12 @@ def main(argv=None):
                                n_shards=args.n_shards)
     idx = MonarchKVIndex(kv_cfg)
     if args.n_shards > 1:
+        placement = ("co-located, 1 device (collapsed to the unsharded "
+                     "single-launch path)" if idx.set_mesh is None
+                     else f"{idx.set_mesh}, single shard_map dispatch "
+                          f"over {idx.n_parts} partitions")
         print(f"[serve] index sharded over {args.n_shards} set shards "
-              f"({idx.sets_per_shard} sets each; mesh: "
-              f"{'co-located, 1 device' if idx.set_mesh is None else idx.set_mesh})")
+              f"({idx.sets_per_shard} sets each; {placement})")
     admit_q = AdmitQueue(idx, background=not args.sync_admit)
 
     with mesh:

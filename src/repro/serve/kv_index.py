@@ -13,12 +13,18 @@ on its own mesh device.
 
 Data flow per batch:
 
-* LOOKUP: every 16-token chunk is fingerprinted (murmur3) and the batch
-  fans out through ``xam_ops.xam_search_multiset_sharded`` — two-level
-  host grouping (shard -> per-set block, pow2-bucketed) and ONE fused
-  ``pallas_call`` per shard holding queries, all dispatched before any is
-  synced, so shard searches overlap under jax async dispatch.  With
-  ``n_shards == 1`` the path IS the unsharded fused kernel, bit for bit.
+* LOOKUP: every 16-token chunk is fingerprinted (murmur3) and the whole
+  batch is answered by ONE device dispatch regardless of the shard
+  count: the two-level host grouping emits a stacked ``(n_shards, Qmax,
+  R)`` padded layout (per-shard per-set blocks, Qmax pow2-bucketed,
+  per-shard valid block counts scalar-prefetched) and
+  ``xam_ops.xam_search_multiset_stacked`` wraps the fused multiset
+  kernel in a ``shard_map`` over the ``("sets",)`` mesh, so XLA places
+  all per-shard searches from a single call — no per-shard host
+  round-trips.  With one shard (or all shards co-located on one device)
+  the path IS the unsharded fused kernel, bit for bit.  The PR-4 host
+  fan-out (one ``pallas_call`` per shard) survives as the differential
+  reference behind ``dispatch="fanout"``.
 * ADMISSION: candidate fingerprints are grouped per shard (original batch
   order preserved inside each group, cycle stamps keep their GLOBAL batch
   position) and each shard runs ONE jitted, donated-state ``_admit_batch``
@@ -36,7 +42,12 @@ Data flow per batch:
   bump, so resident entries stay searchable after the remap (pinned since
   the batched-admission PR) and the fingerprint -> physical-set mapping —
   hence wear accounting — is independent of the shard count.  Across
-  shards the roll is a (rare) cross-shard gather.
+  shards the roll is DEVICE-RESIDENT: per-shard plane rolls plus a
+  ``ppermute`` boundary exchange of the sets that cross shard edges
+  under the global permutation (``geometry.shard_roll_plan`` /
+  ``mesh.make_sharded_roll``) — bits/valid/fp_of/read_after never move
+  through the host, and set_writes/WearState track PHYSICAL sets so they
+  never move at all.
 
 Intentional change pinned by the shard-invariance tests: the replacement
 counter is PER SET (it was one free-running global scalar).  A global
@@ -176,8 +187,11 @@ class KVIndexStats:
     throttled: int = 0            # t_MWW window exhausted
     evictions: int = 0
     rotations: int = 0
-    searches: int = 0             # fused kernel launches (1 per shard w/ queries)
-    admit_calls: int = 0          # jitted admit launches (1 per shard w/ cands)
+    searches: int = 0             # lookup dispatches (1 per batch on the
+                                  # single-dispatch paths; 1 per occupied
+                                  # shard on the "fanout" reference)
+    admit_calls: int = 0          # jitted admit launches (1 per partition
+                                  # holding candidates)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -295,9 +309,10 @@ def _rotate_planes(bits, valid, fp_of, read_after, shift: int):
 
 
 def _shard_property(name: str, doc: str, settable: bool = True):
-    """Global view over a per-shard plane list: shard 0's array unwrapped
-    when unsharded (zero-copy — donation-safe for external callers like the
-    bench host loop), a host-side concatenation in shard order otherwise."""
+    """Global view over a per-partition plane list: partition 0's array
+    unwrapped when there is only one (zero-copy — donation-safe for
+    external callers like the bench host loop), a host-side concatenation
+    in partition order otherwise."""
     def get(self):
         parts = getattr(self, name)
         if len(parts) == 1:
@@ -305,12 +320,12 @@ def _shard_property(name: str, doc: str, settable: bool = True):
         return np.concatenate([np.asarray(p) for p in parts], axis=0)
 
     def set_(self, value):
-        if self.n_shards == 1:
+        if self.n_parts == 1:
             getattr(self, name)[0] = value
         else:
             setattr(self, name, [
                 self._put(np.asarray(value)[self._slice(k)], k)
-                for k in range(self.n_shards)])
+                for k in range(self.n_parts)])
 
     return property(get, set_ if settable else None, None, doc)
 
@@ -325,15 +340,30 @@ class MonarchKVIndex:
     seed : int
         Reserved for future stochastic policies (placement is currently
         deterministic).
+    dispatch : {"auto", "fanout"}
+        ``"auto"`` (default): single-dispatch paths — state lives in
+        ``n_parts = mesh-partition`` blocks (1 when every shard
+        co-locates), lookup is one ``shard_map``/``pallas_call`` launch,
+        rotation is the on-device ``ppermute`` boundary exchange.
+        ``"fanout"``: the PR-4 reference — one storage block PER LOGICAL
+        SHARD, one ``pallas_call`` per shard from the host, rotation
+        gathered through the host.  Kept as the differential oracle
+        (``tests/test_kv_index_differential.py`` pins both paths
+        bit-identical after every op); results never depend on it.
 
     Attributes
     ----------
     bits, valid, fp_of, read_after : global views (property)
         The CAM planes — ``(n_sets, key_bits, set_ways)`` int8 stored
         bits, ``(n_sets, set_ways)`` validity/fingerprint/D̄&R̄ planes.
-        With one shard these are THE device arrays; with several they are
-        host-side concatenations of the shard-resident planes (read-only
-        use intended; assignment re-splits across shards).
+        With one partition these are THE device arrays; with several they
+        are host-side concatenations of the partition-resident planes
+        (read-only use intended; assignment re-splits across partitions).
+    n_parts : int
+        Device partitions actually holding state: the ``("sets",)`` mesh
+        size under ``dispatch="auto"`` (1 on a single-device host —
+        co-located shards collapse to the unsharded path), ``n_shards``
+        under ``dispatch="fanout"``.
     stats : KVIndexStats
         Host-side operation counters.
     ops_total : int
@@ -351,47 +381,67 @@ class MonarchKVIndex:
     True
     """
 
-    def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0):
+    def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0,
+                 dispatch: str = "auto"):
         # cfg default constructed per instance: a shared KVIndexConfig()
         # default would alias mutable config across indexes.
+        assert dispatch in ("auto", "fanout"), dispatch
         self.cfg = KVIndexConfig() if cfg is None else cfg
         c = self.cfg
+        self.dispatch = dispatch
         self.n_shards = c.n_shards
         self.sets_per_shard = geometry.sets_per_shard(c.n_sets, c.n_shards)
-        # ("sets",) mesh placement: shard k's planes/wear live on mesh
-        # device k (round-robin); None on a single-device host — every
-        # shard co-locates and placement is skipped entirely, keeping the
-        # one-shard path identical to the unsharded implementation.
+        # ("sets",) mesh placement: partition k's planes/wear live on mesh
+        # device k; None on a single-device host — every shard co-locates.
+        # Under "auto" state is stored in one block per MESH PARTITION
+        # (sharding is a pure relabeling, so coarsening co-located shards
+        # into one block changes no result — pinned by the invariance
+        # tests), which is what lets lookup run as ONE shard_map dispatch
+        # and collapses to the exact unsharded path on one device.  Under
+        # "fanout" state keeps one block per logical shard (the PR-4
+        # reference paths).
         self.set_mesh = mesh_mod.make_set_mesh(c.n_shards)
-        self._devices = mesh_mod.set_shard_devices(self.set_mesh, c.n_shards)
-        s_loc = self.sets_per_shard
-        # Device-resident CAM state, per shard: fingerprint bits
+        if dispatch == "fanout":
+            self.n_parts = c.n_shards
+            self._devices = mesh_mod.set_shard_devices(
+                self.set_mesh, c.n_shards)
+        elif self.set_mesh is None:
+            self.n_parts = 1
+            self._devices = None
+        else:
+            self.n_parts = int(self.set_mesh.devices.size)
+            self._devices = list(self.set_mesh.devices.flat)
+        self._use_shard_map = (dispatch == "auto"
+                               and self.set_mesh is not None)
+        self.sets_per_part = c.n_sets // self.n_parts
+        s_loc = self.sets_per_part
+        # Device-resident CAM state, per partition: fingerprint bits
         # column-wise per set, plus the validity / fingerprint / D-R
         # metadata planes, the PER-SET replacement counters and the
         # per-set install (wear) counters.
         self._bits = [
             self._put(np.zeros((s_loc, c.key_bits, c.set_ways), np.int8), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         self._valid = [
             self._put(np.zeros((s_loc, c.set_ways), np.int8), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         self._fp_of = [
             self._put(np.zeros((s_loc, c.set_ways), np.uint32), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         self._read_after = [
             self._put(np.zeros((s_loc, c.set_ways), np.int32), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         self._set_writes = [
             self._put(np.zeros((s_loc,), np.int32), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         self._counters = [
             self._put(np.zeros((s_loc,), np.int32), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         # §8 wear state over the physical sets — the simulator's own
         # machinery with serving knobs: window length = window_ops (op-count
         # cycle proxy), budget = set_ways * m_writes, WR/WC/DC rotation
         # signals disabled (serving rotates on the rotate_every cadence).
-        # One state per shard, over that shard's sets.
+        # One state per partition, over that partition's sets.
         self.wear_cfg = wear.WearConfig(
             n_supersets=c.n_sets, m_writes=c.m_writes,
             dc_limit=1 << 30, wc_limit=1 << 30,
@@ -400,12 +450,12 @@ class MonarchKVIndex:
         self._wear_states = [
             self._put_tree(st, k)
             for k, st in enumerate(wear.shard_states(self.wear_cfg,
-                                                     c.n_shards))]
+                                                     self.n_parts))]
         self._wear_dyns = [self._put_tree(self.wear_dyn, k)
-                           for k in range(c.n_shards)]
+                           for k in range(self.n_parts)]
         self._admit_after = [
             self._put(np.asarray(c.admit_after_reads, np.int32), k)
-            for k in range(c.n_shards)]
+            for k in range(self.n_parts)]
         # Host-side policy shadow (map + mirrors): keeps assertions and
         # eviction bookkeeping off the device sync path.
         self.valid_np = np.zeros((c.n_sets, c.set_ways), bool)
@@ -430,8 +480,30 @@ class MonarchKVIndex:
         return jax.device_put(tree, self._devices[k])
 
     def _slice(self, k: int) -> slice:
-        """Global-set slice owned by shard k."""
-        return geometry.shard_set_slice(k, self.cfg.n_sets, self.n_shards)
+        """Global-set slice owned by storage partition k."""
+        return geometry.shard_set_slice(k, self.cfg.n_sets, self.n_parts)
+
+    def _assemble(self, parts: list) -> jnp.ndarray:
+        """Zero-copy GLOBAL jax.Array over the per-partition planes:
+        each partition's block is already resident on its mesh device, so
+        the contiguous ``P("sets")`` sharded view costs no data movement.
+        The assembled array SHARES buffers with ``parts`` — donating it
+        (rotation) invalidates them, so callers rebind from the output."""
+        if self.n_parts == 1:
+            return parts[0]
+        shape = (self.cfg.n_sets,) + tuple(parts[0].shape[1:])
+        return jax.make_array_from_single_device_arrays(
+            shape, mesh_mod.set_axis_sharding(self.set_mesh), list(parts))
+
+    def _split_global(self, arr: jnp.ndarray) -> list:
+        """Inverse of :meth:`_assemble`: the per-device blocks of a
+        ``P("sets")``-sharded global array, in global set order (zero
+        copy — each block is a view of the resident shard buffer)."""
+        if self.n_parts == 1:
+            return [arr]
+        shards = sorted(arr.addressable_shards,
+                        key=lambda s: s.index[0].start or 0)
+        return [s.data for s in shards]
 
     bits = _shard_property("_bits", "stored-bit planes, global view")
     valid = _shard_property("_valid", "validity planes, global view")
@@ -469,7 +541,7 @@ class MonarchKVIndex:
         if self.ops_total < wear.CLOCK_REBASE_AT:
             return
         ops = self.ops_total
-        for k in range(self.n_shards):
+        for k in range(self.n_parts):
             self._wear_states[k], folded = wear.maybe_rebase(
                 self._wear_states[k], ops)
         self.ops_total = folded
@@ -486,10 +558,11 @@ class MonarchKVIndex:
         Returns
         -------
         np.ndarray, shape (B, S // 16), bool
-            True where the chunk's KV is already cached.  One fused CAM
-            search per shard holding queries (a single launch when
-            ``n_shards == 1``), all dispatched before any result is
-            synced.
+            True where the chunk's KV is already cached.  ONE device
+            dispatch for the whole batch: the fused multiset kernel
+            (one partition) or its ``shard_map`` wrapping over the
+            ``("sets",)`` mesh (the stacked layout).  The ``"fanout"``
+            reference dispatches one call per shard holding queries.
         """
         self._maybe_rebase_clock()
         fps = fingerprint_blocks(tokens, CHUNK_TOKENS)
@@ -500,9 +573,20 @@ class MonarchKVIndex:
         sets = self._set_of(flat)
         key_bits = xam_ops.words_to_bits_np(
             flat.astype(np.uint32), self.cfg.key_bits)
-        ways = xam_ops.xam_search_multiset_sharded(
-            key_bits, sets, self._bits, self._valid)
-        self.stats.searches += len(np.unique(sets // self.sets_per_shard))
+        if self._use_shard_map and self.n_parts > 1:
+            ways = xam_ops.xam_search_multiset_stacked(
+                key_bits, sets, self._assemble(self._bits),
+                self._assemble(self._valid), mesh=self.set_mesh)
+            self.stats.searches += 1
+        elif self.n_parts == 1:
+            ways = xam_ops.xam_search_multiset(
+                key_bits, sets, self._bits[0], self._valid[0])
+            self.stats.searches += 1
+        else:
+            ways = xam_ops.xam_search_multiset_sharded(
+                key_bits, sets, self._bits, self._valid)
+            self.stats.searches += len(
+                np.unique(sets // self.sets_per_part))
         hit = ways >= 0
         self.stats.chunk_hits += int(hit.sum())
         self.stats.chunk_misses += int((~hit).sum())
@@ -539,14 +623,15 @@ class MonarchKVIndex:
 
         Notes
         -----
-        Candidates are grouped by owning shard (original order preserved
-        within each group; cycle stamps keep their global batch position)
-        and every shard with candidates runs ONE donated ``_admit_batch``
-        scan — dispatched back-to-back, synced together, then folded into
-        the host shadow map in one pass.  Because every decision couples
-        only through per-set state, the per-shard scans are
-        bit-equivalent to admitting the same fingerprints one at a time
-        in batch order, at any shard count.
+        Candidates are grouped by owning storage partition (original
+        order preserved within each group; cycle stamps keep their global
+        batch position) and every partition with candidates runs ONE
+        donated ``_admit_batch`` scan — dispatched back-to-back, synced
+        together, then folded into the host shadow map in one pass.
+        Because every decision couples only through per-set state, the
+        per-partition scans are bit-equivalent to admitting the same
+        fingerprints one at a time in batch order, at any shard count
+        (and any partitioning of the shards onto devices).
         """
         fps = np.asarray(fps, np.uint32)
         b = int(fps.size)
@@ -554,13 +639,13 @@ class MonarchKVIndex:
             return
         self._maybe_rebase_clock()
         sets = self._set_of(fps)
-        shard_ids = sets // self.sets_per_shard
+        shard_ids = sets // self.sets_per_part
         touches = np.asarray(
             [self.first_touch.get(int(fp), 0) for fp in fps], np.int32)
         bitcols = xam_ops.words_to_bits_np(fps, self.cfg.key_bits)
 
-        # Dispatch one donated scan per shard holding candidates; sync
-        # nothing until every shard's call is in flight.
+        # Dispatch one donated scan per partition holding candidates;
+        # sync nothing until every partition's call is in flight.
         launches = []
         for k in np.unique(shard_ids):
             k = int(k)
@@ -570,7 +655,7 @@ class MonarchKVIndex:
             fps_p = np.zeros(bb, np.uint32)
             fps_p[:bk] = fps[sel]
             sets_p = np.zeros(bb, np.int32)
-            sets_p[:bk] = sets[sel] - k * self.sets_per_shard  # shard-local
+            sets_p[:bk] = sets[sel] - k * self.sets_per_part  # partition-local
             bit_p = np.zeros((bb, self.cfg.key_bits), np.int8)
             bit_p[:bk] = bitcols[sel]
             cycles = np.full(bb, self.ops_total, np.int32)
@@ -634,26 +719,31 @@ class MonarchKVIndex:
         GLOBAL permutation ``set -> set + 7 (mod n_sets)`` while the
         ``_set_of`` offset moves in lockstep, so resident entries stay
         searchable under the rotated placement and the physical mapping is
-        identical at every shard count.  Unsharded this is ONE donated
-        device roll; across shards it is a (rare) cross-shard gather —
-        entries whose rotated set lands in another shard migrate to that
-        shard's planes.  Wear/replacement counters track PHYSICAL sets and
-        are untouched.  When admissions flow through an ``AdmitQueue``,
-        the queue drains before calling this (drain barrier)."""
+        identical at every shard count.  One partition: ONE donated device
+        roll.  Across partitions: DEVICE-RESIDENT — each shard donates a
+        local roll of its block-aligned slab and ``ppermute``s the
+        boundary sets that cross shard edges under the global permutation
+        (``mesh.make_sharded_roll``); no plane data touches the host.
+        The ``"fanout"`` reference keeps the PR-4 host gather.
+        Wear/replacement counters track PHYSICAL sets and are untouched.
+        When admissions flow through an ``AdmitQueue``, the queue drains
+        before calling this (drain barrier)."""
         n = self.cfg.n_sets
         shift = ROTATE_STRIDE % n
         self.offset = (self.offset + ROTATE_STRIDE) % n
         self.stats.rotations += 1
         if shift:
-            if self.n_shards == 1:
+            if self.n_parts == 1:
                 (self._bits[0], self._valid[0], self._fp_of[0],
                  self._read_after[0]) = _rotate_planes(
                     self._bits[0], self._valid[0], self._fp_of[0],
                     self._read_after[0], shift=shift)
+            elif self._use_shard_map:
+                self._rotate_device(shift)
             else:
-                # Cross-shard gather/scatter via the global-view
-                # properties (getter concatenates, setter re-splits and
-                # re-places per shard).
+                # "fanout" reference: cross-shard gather/scatter via the
+                # global-view properties (getter concatenates, setter
+                # re-splits and re-places per shard).
                 self.bits = np.roll(self.bits, shift, axis=0)
                 self.valid = np.roll(self.valid, shift, axis=0)
                 self.fp_of = np.roll(self.fp_of, shift, axis=0)
@@ -662,6 +752,22 @@ class MonarchKVIndex:
             self.fp_of_np = np.roll(self.fp_of_np, shift, axis=0)
             self.slot_of = {fp: ((s + shift) % n, w)
                             for fp, (s, w) in self.slot_of.items()}
+
+    def _rotate_device(self, shift: int):
+        """On-device cross-shard remap: donated per-shard rolls + the
+        ``ppermute`` boundary exchange, applied to all four planes in one
+        jitted collective.  The assembled global views share buffers with
+        the per-partition lists, so after the donation the lists are
+        rebound from the outputs (zero-copy device views)."""
+        roll = mesh_mod.make_sharded_roll(
+            self.set_mesh, self.cfg.n_sets, shift)
+        bits, valid, fp_of, read_after = roll(
+            self._assemble(self._bits), self._assemble(self._valid),
+            self._assemble(self._fp_of), self._assemble(self._read_after))
+        self._bits = self._split_global(bits)
+        self._valid = self._split_global(valid)
+        self._fp_of = self._split_global(fp_of)
+        self._read_after = self._split_global(read_after)
 
     # ------------------------------------------------------------------
     @property
@@ -696,8 +802,8 @@ class MonarchKVIndex:
         throttled_now = sum(
             int(np.asarray(wear.window_would_exceed(
                 self._wear_states[k], self._wear_dyns[k],
-                jnp.arange(self.sets_per_shard), cyc)).sum())
-            for k in range(self.n_shards))
+                jnp.arange(self.sets_per_part), cyc)).sum())
+            for k in range(self.n_parts))
         return {
             "installs_per_set_max": float(w.max()) if w.size else 0.0,
             "installs_per_set_mean": mean,

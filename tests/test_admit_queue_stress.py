@@ -1,0 +1,224 @@
+"""AdmitQueue concurrency stress: submit/lookup/rotate/flush hammered
+from multiple threads.
+
+The queue's published guarantees were only ever exercised single-threaded
+(plus one worker); this module drives them under real contention with a
+seeded schedule:
+
+* READ-YOUR-WRITES — every thread's lookup of tokens it has already
+  submitted must hit, no matter how many other threads are admitting,
+  flushing or rotating at that moment.
+* DRAIN-BARRIER ORDERING — a rotation may never overlap an in-flight
+  ``admit_fps`` (the worker holds the index lock across each batch; the
+  remap takes it after the flush), asserted by instrumenting the index
+  with an in-admit counter that ``_rotate`` observes.
+* FAILURE SURFACING — a worker exception raised mid-schedule must come
+  out of the NEXT barrier (flush/rotate/close) as ``RuntimeError``
+  instead of killing the drain loop or vanishing, and the queue must
+  keep admitting afterwards.
+
+Capacity/window knobs are sized so the schedule has no evictions and no
+throttles — total installs then have a closed-form expectation the final
+asserts check against, which would catch lost or double-admitted
+batches."""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import fingerprint_blocks
+from repro.serve.admit_queue import AdmitQueue
+from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+
+N_THREADS = 4
+BATCHES_PER_THREAD = 6
+CHUNKS_PER_BATCH = 8
+
+
+def _mk_index(n_shards: int = 1) -> MonarchKVIndex:
+    # ample ways + huge window: no evictions, no throttles, so every
+    # unique fingerprint submitted must end up (and stay) resident
+    return MonarchKVIndex(KVIndexConfig(
+        n_sets=8, set_ways=256, admit_after_reads=0, m_writes=1 << 20,
+        window_ops=1 << 30, rotate_every=1 << 30, n_shards=n_shards))
+
+
+def _thread_tokens(tid: int, rng: np.random.Generator) -> list[np.ndarray]:
+    """Disjoint token batches per thread (disjoint token values =>
+    distinct chunks; murmur3 collisions across ~200 fps are ~2^-15 and
+    the schedule is seeded, so a pass is reproducible)."""
+    lo = 1 + tid * 100_000
+    return [rng.integers(lo, lo + 90_000,
+                         (1, CHUNKS_PER_BATCH * CHUNK_TOKENS)
+                         ).astype(np.int32)
+            for _ in range(BATCHES_PER_THREAD)]
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_concurrent_submit_lookup_rotate_flush(n_shards):
+    idx = _mk_index(n_shards)
+    q = AdmitQueue(idx, background=True, read_your_writes=True)
+
+    # ordering instrumentation: rotation must observe zero in-flight admits
+    in_admit = [0]
+    overlap = []
+    real_admit = idx.admit_fps
+    real_rotate = idx._rotate
+
+    def counting_admit(fps):
+        in_admit[0] += 1
+        try:
+            real_admit(fps)
+        finally:
+            in_admit[0] -= 1
+
+    def checking_rotate():
+        if in_admit[0] != 0:
+            overlap.append(in_admit[0])
+        real_rotate()
+
+    idx.admit_fps = counting_admit
+    idx._rotate = checking_rotate
+
+    errors = []
+    barrier = threading.Barrier(N_THREADS + 1)
+
+    def worker(tid: int):
+        rng = np.random.default_rng(1000 + tid)
+        try:
+            batches = _thread_tokens(tid, rng)
+            barrier.wait(timeout=30)
+            for i, toks in enumerate(batches):
+                q.submit_tokens(toks)
+                # read-your-writes: my own submissions must be visible
+                assert q.lookup(toks).all(), f"tid={tid} batch={i}"
+                if rng.random() < 0.3:
+                    q.flush()
+                # ...and must STILL be visible on a later re-lookup
+                probe = batches[rng.integers(0, i + 1)]
+                assert q.lookup(probe).all(), f"tid={tid} re-probe@{i}"
+        except BaseException as e:  # noqa: BLE001 — surfaced in main thread
+            errors.append((tid, e))
+
+    def rotator():
+        try:
+            barrier.wait(timeout=30)
+            for _ in range(5):
+                q.rotate()
+        except BaseException as e:  # noqa: BLE001
+            errors.append(("rotator", e))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(N_THREADS)] + [threading.Thread(target=rotator)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "stress thread hung (deadlock?)"
+    assert not errors, errors
+    q.flush()
+    assert not overlap, f"rotation overlapped {overlap} in-flight admits"
+    assert idx.stats.rotations == 5
+    assert q.pending() == 0
+
+    # closed-form accounting: every unique fp admitted exactly once,
+    # still resident (no evictions/throttles possible at this sizing)
+    all_fps = np.unique(np.concatenate([
+        fingerprint_blocks(toks, CHUNK_TOKENS).reshape(-1)
+        for tid in range(N_THREADS)
+        for toks in _thread_tokens(tid, np.random.default_rng(1000 + tid))]))
+    assert idx.stats.evictions == 0 and idx.stats.throttled == 0
+    assert idx.stats.admissions == all_fps.size
+    assert set(idx.slot_of) == {int(fp) for fp in all_fps}
+    assert idx._shadow_hits(all_fps).all()
+    q.close()
+
+
+def test_worker_exception_mid_schedule_surfaces_at_next_barrier():
+    """Fault injection under concurrency: one submitter's batches start
+    failing mid-schedule; SOME barrier (flush/rotate/close) must re-raise
+    RuntimeError while every other thread keeps working, and the queue
+    must drain normally once the fault clears."""
+    idx = _mk_index()
+    q = AdmitQueue(idx, background=True, read_your_writes=False)
+    real_admit = idx.admit_fps
+    poison = np.asarray([0xDEAD], np.uint32)
+
+    def flaky_admit(fps):
+        if fps.size == 1 and fps[0] == poison[0]:
+            raise ValueError("injected mid-schedule failure")
+        real_admit(fps)
+
+    idx.admit_fps = flaky_admit
+    caught = []
+    done = threading.Event()
+
+    def good_submitter():
+        rng = np.random.default_rng(7)
+        for _ in range(8):
+            q.submit(np.unique(rng.integers(1, 50_000, 16).astype(np.uint32)))
+        done.set()
+
+    def barrier_poller():
+        # keep hitting barriers until one surfaces the injected failure
+        for _ in range(200):
+            try:
+                q.flush()
+            except RuntimeError as e:
+                caught.append(e)
+                return
+            if done.is_set() and caught:
+                return
+
+    t1 = threading.Thread(target=good_submitter)
+    t1.start()
+    q.submit(poison)                       # the failing batch
+    t2 = threading.Thread(target=barrier_poller)
+    t2.start()
+    t1.join(timeout=60)
+    t2.join(timeout=60)
+    assert not t1.is_alive() and not t2.is_alive()
+    assert caught, "injected failure never surfaced at a barrier"
+    assert "admission batch failed" in str(caught[0])
+    # the drain loop survived: later batches admitted, barrier clean
+    q.submit(np.asarray([1, 2, 3], np.uint32))
+    q.flush()
+    assert {1, 2, 3} <= set(idx.slot_of)
+    q.close()
+
+
+def test_concurrent_flushes_do_not_deadlock_or_double_raise():
+    """Many threads flushing the same failed batch: exactly one barrier
+    re-raises (the error is consumed), none hang."""
+    idx = _mk_index()
+    q = AdmitQueue(idx, background=True)
+    idx.admit_fps = lambda fps: (_ for _ in ()).throw(ValueError("boom"))
+    q.submit(np.asarray([9], np.uint32))
+    # wait until the worker has consumed the batch (error latched)
+    deadline = threading.Event()
+    for _ in range(100):
+        if q.pending() == 0:
+            break
+        deadline.wait(0.05)
+    raises = []
+
+    def flusher():
+        try:
+            q.flush()
+        except RuntimeError:
+            raises.append(1)
+
+    threads = [threading.Thread(target=flusher) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    assert sum(raises) == 1
+    q.close()
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

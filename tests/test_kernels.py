@@ -147,7 +147,7 @@ def _random_multiset(rng, n_sets, r, c, n_q, plant_every=3):
     return planes, valid, bits, sets
 
 
-@pytest.mark.parametrize("n_q", [1, 7, 64, 130])
+@pytest.mark.parametrize("n_q", [1, 7, 64, 130, 300])  # 300: wide-block path
 @pytest.mark.parametrize("scoring", ["int8", "f32"])
 def test_xam_multiset_matches_ref(n_q, scoring, rng):
     n_sets, r, c = 8, 32, 256
@@ -304,11 +304,129 @@ def test_multiset_grouping_layout(rng):
     """Every query lands in a block whose block_set matches its set id."""
     sets = rng.integers(0, 5, 37)
     bq = MULTISET_BLOCK_Q
-    slot, block_sets, padded_q = xam_ops.group_queries_by_set(sets, 5, bq)
+    slot, block_sets, padded_q, n_blocks = xam_ops.group_queries_by_set(
+        sets, 5, bq)
     assert padded_q % bq == 0 and len(block_sets) == padded_q // bq
+    assert n_blocks <= padded_q // bq
     assert len(np.unique(slot)) == len(slot)       # injective placement
     for i, s in enumerate(sets):
         assert block_sets[slot[i] // bq] == s
+        assert slot[i] // bq < n_blocks            # real rows in real blocks
+
+
+# ---------------------------------------------------------------------------
+# Stacked (single-dispatch sharded) layout — the shapes the shard_map path
+# introduces: shards with ZERO queries (Qmax padding only), all-queries-
+# one-shard skew, and boundary sets straddling shard edges post-rotation.
+# Pinned bit-identical against both the per-set reference and the flat
+# fused kernel.
+# ---------------------------------------------------------------------------
+
+def test_stacked_grouping_layout(rng):
+    """Stacked layout contract: injective (part, slot) placement, local
+    block set ids, a common padded Qmax, exact per-part block counts."""
+    n_sets, n_parts = 8, 4
+    sets = rng.integers(0, n_sets, 41)
+    bq = MULTISET_BLOCK_Q
+    part_of, slot, block_sets, n_blocks, padded_q = (
+        xam_ops.group_queries_by_set_stacked(sets, n_sets, n_parts, bq))
+    assert padded_q % bq == 0
+    assert block_sets.shape == (n_parts, padded_q // bq)
+    assert len({(int(p), int(s)) for p, s in zip(part_of, slot)}) == len(sets)
+    s_part = n_sets // n_parts
+    for i, s in enumerate(sets):
+        p = s // s_part
+        assert part_of[i] == p
+        assert block_sets[p, slot[i] // bq] == s % s_part
+        assert slot[i] // bq < n_blocks[p]         # real rows in real blocks
+
+
+@pytest.mark.parametrize("scoring", ["int8", "f32"])
+@pytest.mark.parametrize("n_parts", [1, 2, 4])
+@pytest.mark.parametrize("n_q", [33, 300])     # 300: wide-block path
+@pytest.mark.parametrize("case", ["mixed", "one_shard_skew", "empty_shards"])
+def test_xam_stacked_parity_matrix(case, n_q, n_parts, scoring, rng):
+    """The stacked single-dispatch layout vs the per-set reference and
+    the flat fused kernel, over the new edge shapes:
+
+    * ``mixed`` — ragged spread over all shards;
+    * ``one_shard_skew`` — every query on ONE shard, all others Qmax==0;
+    * ``empty_shards`` — interior shards empty (queries only on the
+      outermost shards' boundary sets).
+    """
+    n_sets, r, c = 8, 24, 96
+    planes, valid, bits, sets = _random_multiset(rng, n_sets, r, c, n_q)
+    s_part = n_sets // n_parts
+    if case == "one_shard_skew":
+        sets = (sets % s_part) + (n_parts - 1) * s_part   # last shard only
+    elif case == "empty_shards":
+        # only the global edge sets 0 and n_sets-1 (first/last shard)
+        sets = np.where(sets % 2 == 0, 0, n_sets - 1).astype(sets.dtype)
+    got = np.asarray(xam_ops.xam_search_multiset_stacked(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid),
+        n_parts=n_parts, scoring=scoring))
+    want = _per_set_reference(bits, sets, planes, valid)
+    np.testing.assert_array_equal(got, want)
+    flat = np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid),
+        scoring=scoring))
+    np.testing.assert_array_equal(got, flat)
+
+
+@pytest.mark.parametrize("n_parts", [2, 4])
+def test_xam_stacked_boundary_sets_post_rotation(n_parts, rng):
+    """Sets that straddle shard boundaries after a set+7 rotary remap:
+    roll the planes like the serving remap does, address the queries to
+    the rotated (boundary-crossing) sets, and require stacked == flat ==
+    per-set reference."""
+    n_sets, r, c = 8, 24, 96
+    planes, valid, bits, _ = _random_multiset(rng, n_sets, r, c, 24)
+    shift = 7 % n_sets
+    planes = np.roll(planes, shift, axis=0)
+    valid = np.roll(valid, shift, axis=0)
+    s_part = n_sets // n_parts
+    # probe exactly the shard-edge sets (local rows 0 and s_part-1)
+    edges = np.asarray(sorted(
+        {(k * s_part) % n_sets for k in range(n_parts)} |
+        {(k * s_part - 1) % n_sets for k in range(n_parts)}), np.int64)
+    sets = edges[rng.integers(0, edges.size, bits.shape[0])]
+    got = np.asarray(xam_ops.xam_search_multiset_stacked(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid),
+        n_parts=n_parts))
+    np.testing.assert_array_equal(got, _per_set_reference(
+        bits, sets, planes, valid))
+    np.testing.assert_array_equal(got, np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid))))
+
+
+def test_stacked_compile_cache_capped_at_pow2_buckets():
+    """Jit-cache growth pin for the stacked layout: ~40 distinct ragged
+    batch sizes collapse onto the pow2 Qmax buckets, so the fused
+    kernel's compiled-shape count stays logarithmic (the host fan-out
+    per-shard path obeys the same bucket policy via
+    ``group_queries_by_set``)."""
+    import jax
+    from repro.kernels.xam_search.kernel import xam_search_multiset_pallas
+    rng = np.random.default_rng(0)
+    n_sets, r, c = 8, 16, 64
+    planes = jnp.asarray(rng.integers(0, 2, (n_sets, r, c)).astype(np.int8))
+    valid = jnp.asarray(rng.integers(0, 2, (n_sets, c)).astype(np.int8))
+    qs = list(range(1, 80, 2))
+    buckets = set()
+    for q in qs:
+        sets = rng.integers(0, n_sets, q)
+        _, _, block_sets, _, padded_q = (
+            xam_ops.group_queries_by_set_stacked(sets, n_sets, 2))
+        buckets.add((padded_q, block_sets.shape[1]))
+    assert len(buckets) <= int(np.log2(max(qs))) + 2, buckets
+    jax.clear_caches()
+    for q in qs:
+        sets = rng.integers(0, n_sets, q)
+        bits = xam_ops.words_to_bits_np(
+            rng.integers(0, 2 ** 32, q, dtype=np.uint32), r)
+        xam_ops.xam_search_multiset_stacked(
+            bits, sets, planes, valid, n_parts=2)
+    assert xam_search_multiset_pallas._cache_size() <= len(buckets)
 
 
 def test_batched_block_sizes_meet_floor():

@@ -1,0 +1,238 @@
+"""Differential step-trace pins: single-dispatch paths vs the PR-4 paths.
+
+The single-dispatch PR replaced the host fan-out lookup (one
+``pallas_call`` per shard) with ONE ``shard_map``-wrapped stacked launch,
+and the host-gather rotation with an on-device ``ppermute`` boundary
+exchange.  Both old paths are KEPT behind
+``MonarchKVIndex(..., dispatch="fanout")`` as the oracle, and this module
+replays the same randomized schedule through both indexes side by side,
+pinning planes / hits / shadow maps / replacement counters / wear
+IDENTICAL after EVERY op — not just at end of schedule, so a transient
+divergence (e.g. a boundary set landing on the wrong shard mid-remap)
+cannot cancel out before the final check.
+
+On a one-device host the "auto" index collapses every shard count to the
+unsharded layout, so the differential still pins collapsed-vs-fanout
+bit-equality; under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(the CI multi-device leg) the same tests drive the real shard_map
+dispatch, multi-device placement and the ppermute rotation.
+
+Also here: the no-host-transfer rotation pin (the remap must move no
+plane data through the host — ``jax.transfer_guard("disallow")``) and
+the jit-cache growth cap of the stacked layout (pow2 Qmax bucketing).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.data.pipeline import fingerprint_blocks
+from repro.kernels.xam_search import ops as xam_ops
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig,
+                                  MonarchKVIndex)
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _pair(n_shards: int, **kw):
+    base = dict(n_sets=8, set_ways=8, admit_after_reads=1, m_writes=2,
+                window_ops=256, rotate_every=1 << 30)
+    base.update(kw)
+    cfg = dict(n_shards=n_shards, **base)
+    return (MonarchKVIndex(KVIndexConfig(**cfg)),
+            MonarchKVIndex(KVIndexConfig(**cfg), dispatch="fanout"))
+
+
+def _state(idx: MonarchKVIndex) -> dict:
+    return dict(
+        slot_of=dict(idx.slot_of),
+        first_touch=dict(idx.first_touch),
+        offset=idx.offset,
+        bits=np.asarray(idx.bits).copy(),
+        valid=np.asarray(idx.valid).copy(),
+        fp_of=np.asarray(idx.fp_of).copy(),
+        read_after=np.asarray(idx.read_after).copy(),
+        counter=np.asarray(idx.counter).copy(),
+        writes=idx.write_distribution(),
+        window_writes=np.asarray(idx.wear_state.window_writes).copy(),
+        ops=idx.ops_total,
+        stats=(idx.stats.admissions, idx.stats.admission_skips,
+               idx.stats.throttled, idx.stats.evictions,
+               idx.stats.chunk_hits, idx.stats.chunk_misses,
+               idx.stats.rotations),
+    )
+
+
+def _assert_same(sa: dict, sb: dict, msg: str):
+    for key in sa:
+        if isinstance(sa[key], np.ndarray):
+            np.testing.assert_array_equal(sa[key], sb[key],
+                                          err_msg=f"{msg}: {key}")
+        else:
+            assert sa[key] == sb[key], (msg, key, sa[key], sb[key])
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_differential_step_trace(seed, n_shards):
+    """Randomized admit/lookup/rotate schedule; auto and fanout indexes
+    must agree on EVERY intermediate state and every lookup result."""
+    rng = np.random.default_rng(seed)
+    auto, ref = _pair(n_shards)
+    rotated = False
+    for step in range(10):
+        toks = rng.integers(1, 600, (2, 6 * CHUNK_TOKENS)).astype(np.int32)
+        op = rng.random()
+        if op < 0.55:
+            fps = np.unique(
+                fingerprint_blocks(toks, CHUNK_TOKENS).reshape(-1))
+            auto.admit_fps(fps)
+            ref.admit_fps(fps)
+            if op < 0.35:      # re-offer crosses the no-allocate gate
+                auto.admit_fps(fps)
+                ref.admit_fps(fps)
+        elif op < 0.85:
+            np.testing.assert_array_equal(auto.lookup(toks),
+                                          ref.lookup(toks))
+        else:
+            auto._rotate()
+            ref._rotate()
+            rotated = True
+        _assert_same(_state(auto), _state(ref),
+                     f"seed={seed} step={step} n_shards={n_shards}")
+        assert auto.wear_report() == ref.wear_report(), (seed, step)
+    if not rotated:            # every trace must cross a remap at least once
+        auto._rotate()
+        ref._rotate()
+        _assert_same(_state(auto), _state(ref), f"seed={seed} final rotate")
+    assert auto.stats.admissions > 0
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_differential_boundary_straddle_after_rotation(n_shards):
+    """Fingerprints whose sets sit at shard edges, pushed ACROSS the
+    boundary by repeated set+7 rotations: residency must survive the
+    remap on both paths and the paths must agree bit-for-bit — the exact
+    traffic the ppermute boundary exchange carries."""
+    auto, ref = _pair(n_shards, admit_after_reads=0, set_ways=16)
+    n_sets = auto.cfg.n_sets
+    s_part = n_sets // n_shards
+    # enough distinct fps that every set — in particular every shard-edge
+    # set (local row 0 and s_part-1 of each shard) — holds residents
+    fps = np.arange(1, 257, dtype=np.uint32)
+    auto.admit_fps(fps)
+    ref.admit_fps(fps)
+    edge_sets = {b % n_sets
+                 for k in range(n_shards)
+                 for b in (k * s_part, (k + 1) * s_part - 1)}
+    assert {int(s) for s, _ in auto.slot_of.values()} >= edge_sets
+    for rot in range(3):       # offset walks 7, 14, 21 (mod 8: 7, 6, 5)
+        auto._rotate()
+        ref._rotate()
+        _assert_same(_state(auto), _state(ref),
+                     f"n_shards={n_shards} rot={rot}")
+        hits = auto._shadow_hits(fps)
+        # every installed fp must still be found by the DEVICE search
+        key_bits = xam_ops.words_to_bits_np(fps, auto.cfg.key_bits)
+        sets = auto._set_of(fps)
+        if auto._use_shard_map and auto.n_parts > 1:
+            ways = xam_ops.xam_search_multiset_stacked(
+                key_bits, sets, auto._assemble(auto._bits),
+                auto._assemble(auto._valid), mesh=auto.set_mesh)
+        else:
+            ways = xam_ops.xam_search_multiset(
+                key_bits, sets, auto._bits[0], auto._valid[0])
+        np.testing.assert_array_equal(ways >= 0, hits)
+        ways_ref = xam_ops.xam_search_multiset_sharded(
+            key_bits, sets, ref._bits, ref._valid)
+        np.testing.assert_array_equal(ways, ways_ref)
+    assert auto.stats.rotations == 3
+
+
+def test_rotation_moves_no_plane_data_through_host():
+    """Acceptance pin: the rotate path performs NO host transfer of plane
+    data (device_get/device_put both trip the guard).  Runs on every
+    device count — one partition exercises the donated local roll,
+    several the ppermute boundary exchange."""
+    idx, _ = _pair(4, admit_after_reads=0)
+    idx.admit_fps(np.arange(1, 65, dtype=np.uint32))
+    with jax.transfer_guard("disallow"):
+        idx._rotate()
+        idx._rotate()
+    assert idx.stats.rotations == 2
+    # ...and the remap preserved residency (device search vs the host
+    # shadow oracle, outside the guard)
+    probe = np.arange(1, 65, dtype=np.uint32)
+    key_bits = xam_ops.words_to_bits_np(probe, idx.cfg.key_bits)
+    sets = idx._set_of(probe)
+    if idx._use_shard_map and idx.n_parts > 1:
+        ways = xam_ops.xam_search_multiset_stacked(
+            key_bits, sets, idx._assemble(idx._bits),
+            idx._assemble(idx._valid), mesh=idx.set_mesh)
+    else:
+        ways = xam_ops.xam_search_multiset(
+            key_bits, sets, idx._bits[0], idx._valid[0])
+    want = idx._shadow_hits(probe)
+    assert want.any()
+    np.testing.assert_array_equal(ways >= 0, want)
+
+
+def test_device_rotation_never_replaces_planes_from_host():
+    """Behavioral twin of the transfer-guard pin (the CPU backend's guard
+    cannot see host<->device copies — everything is host memory): the
+    device rotate path must never route plane data through ``_put`` (the
+    host->device placement every fanout re-split uses), while the fanout
+    reference with >1 partition must."""
+    idx, ref = _pair(4, admit_after_reads=0)
+    fps = np.arange(1, 65, dtype=np.uint32)
+    idx.admit_fps(fps)
+    ref.admit_fps(fps)
+
+    def instrument(index):
+        calls = []
+        orig = index._put
+        index._put = lambda x, k: (calls.append(k), orig(x, k))[-1]
+        return calls
+
+    auto_puts = instrument(idx)
+    idx._rotate()
+    assert auto_puts == []
+    ref_puts = instrument(ref)
+    ref._rotate()
+    if ref.n_parts > 1:
+        assert len(ref_puts) >= 4 * ref.n_parts   # 4 planes re-placed/shard
+    _assert_same(_state(idx), _state(ref), "post-instrumented rotate")
+
+
+def test_stacked_layout_caps_jit_cache_growth():
+    """Satellite pin: DISTINCT ragged batch sizes may not each compile a
+    new program — the stacked grouping buckets Qmax to a pow2, so the
+    number of distinct padded shapes (== jit cache entries of the fused
+    kernel) is logarithmic in the batch-size range."""
+    qs = list(range(1, 120, 7))
+    shapes = set()
+    for q in qs:
+        sets = np.arange(q) % 8
+        _, _, block_sets, _, padded_q = (
+            xam_ops.group_queries_by_set_stacked(sets, 8, 2))
+        shapes.add((padded_q, block_sets.shape))
+    # 17 ragged sizes -> a handful of pow2 buckets
+    assert len(shapes) <= 4, shapes
+
+    # and the end-to-end index path compiles once per bucket, not per size
+    jax.clear_caches()
+    idx, _ = _pair(1, admit_after_reads=0, n_sets=8)
+    rng = np.random.default_rng(0)
+    for q in range(1, 14):
+        idx.lookup(rng.integers(1, 10_000,
+                                (1, q * CHUNK_TOKENS)).astype(np.int32))
+    from repro.kernels.xam_search.kernel import xam_search_multiset_pallas
+    n_buckets = len({xam_ops.group_queries_by_set(
+        np.zeros(q, np.int64), 8)[2] for q in range(1, 14)})
+    assert xam_search_multiset_pallas._cache_size() <= n_buckets + 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -4,13 +4,18 @@ The load-bearing pin: a randomized lookup/admit/rotate schedule replayed
 at ``n_shards in {1, 2, 4}`` must produce IDENTICAL hits, installs
 (shadow map + device planes), per-set replacement counters and wear
 reports — sharding is a relabeling of who stores a set, never a policy
-change.  ``n_shards=1`` runs the same single fused launch / single scan
-per batch as the pre-sharding implementation, so this matrix also pins
-the unsharded path.
+change.  Since the single-dispatch PR the index stores state in MESH
+PARTITIONS (``idx.n_parts``): on a one-device host every shard count
+collapses to the exact unsharded path, and under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+multi-device leg) the same matrix exercises the real ``shard_map``
+lookup and ``ppermute`` rotation.  The step-for-step pins against the
+kept PR-4 fan-out paths live in ``tests/test_kv_index_differential.py``.
 
 The AdmitQueue tests pin the async relaxation: flush == the same
 ``admit_fps`` calls inline, rotation is a drain barrier, and
-read-your-writes lookups never miss a pending install.
+read-your-writes lookups never miss a pending install (concurrency
+stress lives in ``tests/test_admit_queue_stress.py``).
 """
 from __future__ import annotations
 
@@ -128,14 +133,27 @@ def test_shard_invariance_under_eviction_and_throttle_pressure():
 
 
 def test_sharded_state_shapes_and_ownership():
+    """Storage is one block per MESH PARTITION: n_parts == the ("sets",)
+    mesh size under "auto" (1 on a one-device host — co-located shards
+    collapse to the unsharded layout), n_shards under the "fanout"
+    reference."""
     idx = _mk(4, n_sets=8)
-    assert idx.sets_per_shard == 2
-    assert len(idx._bits) == 4
-    for k in range(4):
-        assert idx._bits[k].shape == (2, idx.cfg.key_bits, idx.cfg.set_ways)
-        assert idx._wear_states[k].window_writes.shape == (2,)
-        assert idx._counters[k].shape == (2,)
-    # global views concatenate in shard order == global set order
+    assert idx.sets_per_shard == 2           # logical shard geometry
+    want_parts = mesh_mod.set_partitions(4)  # largest divisor host holds
+    assert idx.n_parts == want_parts
+    s_loc = 8 // want_parts
+    assert len(idx._bits) == want_parts
+    for k in range(want_parts):
+        assert idx._bits[k].shape == (
+            s_loc, idx.cfg.key_bits, idx.cfg.set_ways)
+        assert idx._wear_states[k].window_writes.shape == (s_loc,)
+        assert idx._counters[k].shape == (s_loc,)
+    # the fan-out reference keeps one block per logical shard
+    ref = MonarchKVIndex(KVIndexConfig(
+        n_shards=4, n_sets=8, set_ways=8), dispatch="fanout")
+    assert ref.n_parts == 4 and len(ref._bits) == 4
+    assert ref._bits[0].shape == (2, ref.cfg.key_bits, ref.cfg.set_ways)
+    # global views concatenate in partition order == global set order
     assert np.asarray(idx.valid).shape == (8, idx.cfg.set_ways)
     shard, local = geometry.shard_of_set(np.arange(8), 8, 4)
     np.testing.assert_array_equal(shard, np.arange(8) // 2)
@@ -147,17 +165,28 @@ def test_shard_count_must_divide_sets():
         MonarchKVIndex(KVIndexConfig(n_sets=8, n_shards=3))
 
 
-def test_lookup_launch_count_scales_with_occupied_shards(rng):
-    """One fused launch per shard that actually holds queries."""
-    idx = _mk(4, n_sets=8, admit_after_reads=0)
+def test_lookup_is_single_dispatch_at_every_shard_count(rng):
+    """The tentpole acceptance pin: ONE fused-search device dispatch per
+    lookup batch REGARDLESS of n_shards (the stacked shard_map path on a
+    multi-device mesh, the collapsed unsharded launch otherwise), counted
+    at the ops layer — where every host-side launch site increments
+    ``xam_ops.LAUNCH_COUNT`` exactly once.  The kept fan-out reference
+    still pays one dispatch per occupied shard."""
+    from repro.kernels.xam_search import ops as xam_ops
     toks = rng.integers(1, 50_000, (4, 256)).astype(np.int32)
-    before = idx.stats.searches
-    idx.lookup(toks)           # 64 chunks spread over all sets -> 4 shards
-    assert idx.stats.searches == before + 4
-    one = _mk(1, n_sets=8, admit_after_reads=0)
-    before = one.stats.searches
-    one.lookup(toks)
-    assert one.stats.searches == before + 1       # unsharded: single launch
+    for n_shards in SHARD_COUNTS:
+        idx = _mk(n_shards, n_sets=8, admit_after_reads=0)
+        before = xam_ops.LAUNCH_COUNT
+        s_before = idx.stats.searches
+        idx.lookup(toks)       # 64 chunks spread over all sets
+        assert xam_ops.LAUNCH_COUNT == before + 1, n_shards
+        assert idx.stats.searches == s_before + 1
+    ref = MonarchKVIndex(KVIndexConfig(
+        n_shards=4, n_sets=8, set_ways=8, admit_after_reads=0),
+        dispatch="fanout")
+    before = xam_ops.LAUNCH_COUNT
+    ref.lookup(toks)           # all 4 shards occupied -> 4 dispatches
+    assert xam_ops.LAUNCH_COUNT == before + 4
 
 
 def test_set_mesh_single_device_is_none():
