@@ -176,6 +176,64 @@ def run(csv_rows: list[str], quick: bool = False):
     csv_rows.append(f"kv_index_admit_hostloop,{t2.median_us:.0f},"
                     f"{t2.median_us / t.median_us:.1f}x")
 
+    # stacked admission at 4 set shards: STILL one device dispatch per
+    # batch (round-grid shard_map over the ("sets",) mesh; collapsed to
+    # the single donated scan on this 1-device rig), vs the kept
+    # per-partition fanout oracle paying one dispatch per occupied
+    # partition.
+    st_batches = iter(np.split(all_fps + 4_000_000, n_batches))
+    idx_st = MonarchKVIndex(KVIndexConfig(
+        n_sets=8, n_shards=4, admit_after_reads=0))
+    t = time_callable(lambda: idx_st.admit_fps(next(st_batches)),
+                      warmup=2, reps=reps)
+    timings["kv_index_admit_stacked"] = t
+    assert idx_st.stats.admit_calls == reps + 2   # ONE dispatch per batch
+    print(f"kv_index admit 64 fps, 4 set shards (stacked): "
+          f"{t.median_us:.0f} us ({idx_st.stats.admit_calls} dispatches/"
+          f"{reps + 2} batches)")
+    csv_rows.append(f"kv_index_admit_stacked,{t.median_us:.0f},4shards")
+
+    fan_batches = iter(np.split(all_fps + 5_000_000, n_batches))
+    idx_fa = MonarchKVIndex(KVIndexConfig(
+        n_sets=8, n_shards=4, admit_after_reads=0), dispatch="fanout")
+    t2 = time_callable(lambda: idx_fa.admit_fps(next(fan_batches)),
+                       warmup=2, reps=reps)
+    timings["kv_index_admit_fanout"] = t2
+    print(f"kv_index admit 64 fps, 4-shard fanout oracle: "
+          f"{t2.median_us:.0f} us -> stacked speedup "
+          f"{t2.median_us / t.median_us:.1f}x")
+    csv_rows.append(f"kv_index_admit_fanout,{t2.median_us:.0f},"
+                    f"{t2.median_us / t.median_us:.1f}x")
+
+    # device-resident hopscotch insert (apps/hashtable.py device backend):
+    # one donated device call per insert — windowed scatter + bounded
+    # hop-chain while-loop — vs the numpy reference store.  32 inserts
+    # per timed call; fresh keys every call, sized so no rehash occurs.
+    from repro.apps.hashtable import HopscotchTable
+    ins_per_call = 32
+    ht_keys = iter(range(1, 1 + ins_per_call * (reps + 2) * 2))
+    ht_dev = HopscotchTable(12, window=32, backend="device")
+
+    def _insert_many(table):
+        for _ in range(ins_per_call):
+            table.insert(next(ht_keys), 7)
+
+    t = time_callable(lambda: _insert_many(ht_dev), warmup=1, reps=reps)
+    timings["hashtable_insert_device"] = t
+    print(f"hashtable insert x{ins_per_call} (device backend): "
+          f"{t.median_us:.0f} us ({t.median_us / ins_per_call:.1f} "
+          f"us/insert)")
+    csv_rows.append(f"hashtable_insert_device,{t.median_us:.0f},"
+                    f"{ins_per_call}ins")
+
+    ht_host = HopscotchTable(12, window=32, backend="host")
+    t2 = time_callable(lambda: _insert_many(ht_host), warmup=1, reps=reps)
+    timings["hashtable_insert_host"] = t2
+    print(f"hashtable insert x{ins_per_call} (host reference): "
+          f"{t2.median_us:.0f} us")
+    csv_rows.append(f"hashtable_insert_host,{t2.median_us:.0f},"
+                    f"{ins_per_call}ins")
+
     # async admission: a serving-loop step is admit(64 fps) + model
     # compute.  Inline pays admit + compute in series; behind the
     # AdmitQueue the worker drains the install WHILE the jitted compute

@@ -15,6 +15,19 @@ Open addressing with windowed (neighborhood) probing:
 
 The table also reports OPERATION COUNTS (probes, searches, writes, swaps,
 rehashes) — the inputs to the §10.4 timing model in benchmarks/hashing.py.
+
+Two storage backends share every code path above the bucket store:
+
+* ``backend="host"`` — numpy bucket arrays, the original reference; the
+  lookup kernel reads a device mirror rebuilt when inserts dirty it.
+* ``backend="device"`` — the table LIVES on device as split uint32
+  key/value planes; ``insert``/``delete`` run as ONE donated device call
+  each (``kernels.hopscotch.ops.hopscotch_insert_device`` — windowed
+  scatter with the hop-chain displacement as a bounded while-loop) and
+  the host keeps only a lazy mirror for rehash/baseline paths.  Stats and
+  §8 wear records are bit-identical to the host backend (the insert op
+  returns the touched buckets in host ``_record_write`` order), pinned by
+  ``tests/test_hashtable_device_differential.py``.
 """
 from __future__ import annotations
 
@@ -22,6 +35,7 @@ import dataclasses
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import wear
@@ -43,17 +57,26 @@ class HashStats:
     swaps: int = 0
     rehashes: int = 0
     writes: int = 0
+    deletes: int = 0
 
 
 class HopscotchTable:
     def __init__(self, log2_size: int, window: int = 32, seed: int = 0,
-                 wear_cfg: wear.WearConfig | None = None):
+                 wear_cfg: wear.WearConfig | None = None,
+                 backend: str = "host"):
         """``wear_cfg``: optional §8 wear accounting over the table's
         backing store (a flat-CAM in the paper's deployment).  Bucket
         writes are charged to ``n_supersets`` equal superset stripes via
         the SAME ``wear.record_writes`` device op the simulator and the
         serving index use; writes are buffered and applied in batched
-        device calls, not one dispatch per insert."""
+        device calls, not one dispatch per insert.
+
+        ``backend``: ``"host"`` (numpy bucket store, the reference) or
+        ``"device"`` (device-resident planes; insert/delete are single
+        donated device calls, bit-identical results — see module
+        docstring)."""
+        assert backend in ("host", "device"), backend
+        self.backend = backend
         self.window = window
         self.wear_cfg = wear_cfg
         if wear_cfg is not None:
@@ -74,6 +97,13 @@ class HopscotchTable:
         self.vals = np.zeros(n + 2 * self.window, np.uint64)
         self._table_version = getattr(self, "_table_version", 0) + 1
         self._dev_planes = None     # (version, t_lo, t_hi) device cache
+        if self.backend == "device":
+            # the authoritative store: split uint32 key/value planes
+            # (four DISTINCT buffers — the insert op donates all four)
+            shape = (n + 2 * self.window,)
+            self._pk_lo, self._pk_hi, self._pv_lo, self._pv_hi = (
+                jnp.zeros(shape, jnp.uint32) for _ in range(4))
+            self._host_dirty = False   # keys/vals mirror is in sync
         if self.wear_cfg is not None:
             # superset stripe width over the (padded) bucket array
             self._ss_stripe = -(-len(self.keys) // self.wear_cfg.n_supersets)
@@ -154,7 +184,24 @@ class HopscotchTable:
 
     @property
     def load(self) -> float:
+        if self.backend == "device":
+            occupied = int(jnp.sum((self._pk_lo != 0) | (self._pk_hi != 0)))
+            return float(occupied) / self.n
         return float((self.keys != EMPTY).sum()) / self.n
+
+    def _sync_host(self):
+        """Refresh the host keys/vals mirror from the device planes (device
+        backend only; one transfer per mutation epoch, rehash/baseline
+        paths are the only consumers)."""
+        if self.backend != "device" or not self._host_dirty:
+            return
+        klo, khi, vlo, vhi = jax.device_get(
+            (self._pk_lo, self._pk_hi, self._pv_lo, self._pv_hi))
+        self.keys = ((khi.astype(np.uint64) << np.uint64(32))
+                     | klo.astype(np.uint64))
+        self.vals = ((vhi.astype(np.uint64) << np.uint64(32))
+                     | vlo.astype(np.uint64))
+        self._host_dirty = False
 
     # ------------------------------------------------------------------
     def insert(self, key: int, val: int) -> bool:
@@ -162,6 +209,41 @@ class HopscotchTable:
         if key == EMPTY:
             raise ValueError("0 is the empty sentinel")
         self.stats.inserts += 1
+        if self.backend == "device":
+            return self._insert_device(key, np.uint64(val))
+        return self._insert_host(key, np.uint64(val))
+
+    def _insert_device(self, key: np.uint64, val: np.uint64) -> bool:
+        """ONE donated device dispatch per insert; the returned write log
+        replays the host backend's exact ``_record_write`` sequence."""
+        h = np.int32(self.home(key))
+        (self._pk_lo, self._pk_hi, self._pv_lo, self._pv_hi,
+         status, probes, swaps, log, n_log) = hop_ops.hopscotch_insert_device(
+            self._pk_lo, self._pk_hi, self._pv_lo, self._pv_hi, h,
+            np.uint32(key & np.uint64(0xFFFFFFFF)),
+            np.uint32(key >> np.uint64(32)),
+            np.uint32(val & np.uint64(0xFFFFFFFF)),
+            np.uint32(val >> np.uint64(32)),
+            window=self.window)
+        # the dispatch donated the old planes; drop any lookup cache that
+        # might alias them (rebuilt device-side on the next lookup)
+        self._dev_planes = None
+        status, swaps, n_log = int(status), int(swaps), int(n_log)
+        self.stats.insert_probes += int(probes)
+        self.stats.swaps += swaps
+        self.stats.writes += n_log
+        if n_log:
+            self._host_dirty = True
+            for slot in np.asarray(log)[:n_log]:
+                self._record_write(int(slot))
+        if status == 1 or swaps:     # key planes changed (host parity:
+            self._table_version += 1  # resident val update doesn't bump)
+        if status == 2:
+            self._rehash()
+            return self.insert(int(key), int(val))
+        return True
+
+    def _insert_host(self, key: np.uint64, val: np.uint64) -> bool:
         h = int(self.home(key))
         w = self.window
         # already present? (one lookup)
@@ -221,8 +303,36 @@ class HopscotchTable:
         self._table_version += 1
         return True
 
+    def delete(self, key: int) -> bool:
+        """Remove ``key`` (clears the bucket's key AND value).  Returns
+        False on miss.  Safe for the Monarch lookup, which always scans
+        the FULL home window; the serial baseline keeps its
+        metadata-bitmap early-stop semantics (see ``lookup_baseline``)."""
+        key = np.uint64(key)
+        if key == EMPTY:
+            raise ValueError("0 is the empty sentinel")
+        self.stats.deletes += 1
+        off = int(self._lookup_window(np.asarray([key]))[0])
+        if off < 0:
+            return False
+        idx = int(self.home(key)) + off
+        if self.backend == "device":
+            (self._pk_lo, self._pk_hi, self._pv_lo,
+             self._pv_hi) = hop_ops.hopscotch_delete_device(
+                self._pk_lo, self._pk_hi, self._pv_lo, self._pv_hi,
+                np.int32(idx))
+            self._host_dirty = True
+        else:
+            self.keys[idx] = EMPTY
+            self.vals[idx] = np.uint64(0)
+        self.stats.writes += 1
+        self._record_write(idx)
+        self._table_version += 1
+        return True
+
     def _rehash(self):
         self.stats.rehashes += 1
+        self._sync_host()
         old_k, old_v = self.keys.copy(), self.vals.copy()
         self._alloc(self.n * 2)
         for k, v in zip(old_k, old_v):
@@ -232,15 +342,24 @@ class HopscotchTable:
     # ------------------------------------------------------------------
     def _table_planes(self):
         """Device-resident uint32 key planes, rebuilt only after inserts
-        dirty the table (read-heavy phases skip the host->device upload)."""
+        dirty the table (read-heavy phases skip the host->device upload;
+        the device backend pads its resident planes in place — no host
+        round trip at all)."""
         if (self._dev_planes is None
                 or self._dev_planes[0] != self._table_version):
-            t_lo = (self.keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-            t_hi = (self.keys >> np.uint64(32)).astype(np.uint32)
-            pad = (-t_lo.shape[0]) % self.window
-            if pad:
-                t_lo = np.pad(t_lo, (0, pad))
-                t_hi = np.pad(t_hi, (0, pad))
+            if self.backend == "device":
+                t_lo, t_hi = self._pk_lo, self._pk_hi
+                pad = (-t_lo.shape[0]) % self.window
+                if pad:
+                    t_lo = jnp.pad(t_lo, (0, pad))
+                    t_hi = jnp.pad(t_hi, (0, pad))
+            else:
+                t_lo = (self.keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+                t_hi = (self.keys >> np.uint64(32)).astype(np.uint32)
+                pad = (-t_lo.shape[0]) % self.window
+                if pad:
+                    t_lo = np.pad(t_lo, (0, pad))
+                    t_hi = np.pad(t_hi, (0, pad))
             self._dev_planes = (self._table_version, jnp.asarray(t_lo),
                                 jnp.asarray(t_hi))
         return self._dev_planes[1], self._dev_planes[2]
@@ -264,11 +383,20 @@ class HopscotchTable:
         hits = offs >= 0
         self.stats.data_reads += int(hits.sum())
         idx = self.home(keys).astype(np.int64) + np.where(hits, offs, 0)
+        if self.backend == "device":
+            # value gather stays on device; only the (Q,) results land
+            vlo, vhi = jax.device_get(
+                (jnp.take(self._pv_lo, jnp.asarray(idx, jnp.int32)),
+                 jnp.take(self._pv_hi, jnp.asarray(idx, jnp.int32))))
+            got = ((vhi.astype(np.uint64) << np.uint64(32))
+                   | vlo.astype(np.uint64))
+            return np.where(hits, got, 0), hits
         vals = np.where(hits, self.vals[idx], 0)
         return vals, hits
 
     def lookup_baseline(self, keys: np.ndarray):
         """Serial window probing; counts the reads Monarch saves."""
+        self._sync_host()
         keys = np.asarray(keys, np.uint64)
         self.stats.lookups += len(keys)
         vals = np.zeros(len(keys), np.uint64)

@@ -366,6 +366,100 @@ record_writes_device = functools.partial(
     jax.jit, donate_argnums=(0,))(record_writes)
 
 
+def record_write_rows(state: WearState, cfg, supersets, cycles, active,
+                      makes_dirty=None) -> WearState:
+    """Vectorized :func:`record_write` over DISTINCT supersets — one fully
+    parallel row update instead of a scan.
+
+    Bit-identical to folding :func:`record_write` over the lanes in any
+    order, PROVIDED two contract conditions hold (the caller's to keep):
+
+    * the active supersets are pairwise distinct — every per-superset row
+      (window fields, SWT flags) is touched by at most one lane, so the
+      row scatters commute and the scalar counters become order-free sums;
+    * the rotate signals are disabled (``wr_shift >= 32`` and huge
+      WC/DC limits, the serving index's configuration) — ``record_write``'s
+      rotate branch is then the identity, so offsets / ``total_rotates`` /
+      ``total_flushed`` are invariants and are passed through untouched.
+
+    The single-dispatch admission path (serve/kv_index.py) calls this once
+    per admission round; its round grid holds distinct sets per round by
+    construction.  Inactive lanes are full no-ops (gathers are clipped,
+    scatters dropped via an out-of-bounds sentinel index).
+
+    Parameters
+    ----------
+    state : WearState
+    cfg : WearConfig | WearDyn
+        Durability knobs (static or traced).
+    supersets : (K,) int32
+        Target superset per lane; active lanes must be pairwise distinct.
+    cycles : (K,) int32
+        Cycle stamp per lane.
+    active : (K,) bool
+        Lane mask; an inactive lane changes nothing.
+    makes_dirty : (K,) bool, optional
+        Defaults to all-dirty (the serving install path).
+
+    Returns
+    -------
+    WearState
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> cfg = WearConfig(n_supersets=4, t_mww_cycles=100,
+    ...                  blocks_per_superset=2, wr_shift=32)
+    >>> st = record_write_rows(
+    ...     init_state(cfg), cfg, np.array([0, 2, 1], np.int32),
+    ...     np.array([5, 6, 7], np.int32), np.array([True, True, False]))
+    >>> np.asarray(st.window_writes).tolist(), int(st.write_counter)
+    ([1, 0, 1, 0], 2)
+    """
+    s = jnp.asarray(supersets, jnp.int32)
+    cycle = jnp.asarray(cycles, jnp.int32)
+    act = jnp.asarray(active, bool)
+    dirty = (jnp.ones(s.shape, bool) if makes_dirty is None
+             else jnp.asarray(makes_dirty, bool))
+    n = state.swt_w.shape[0]
+    sc = jnp.clip(s, 0, n - 1)          # gather-safe row index
+    ii = jnp.where(act, sc, n)          # scatter index: OOB drop when inactive
+
+    # t_MWW window accounting — the same _window_now rollover arithmetic,
+    # one lane per (distinct) superset row.
+    win, expired, w_writes = _window_now(state, cfg, sc, cycle)
+    w_start = jnp.where(expired, cycle, state.window_start[sc])
+    w_writes = w_writes + 1
+    over = w_writes > cfg.window_write_budget
+    locked_until = jnp.where(over, w_start + win, state.locked_until[sc])
+
+    window_writes = state.window_writes.at[ii].set(w_writes, mode="drop")
+    window_start = state.window_start.at[ii].set(w_start, mode="drop")
+    locked = state.locked_until.at[ii].set(locked_until, mode="drop")
+
+    # SWT + counters: per-row flags scatter (disjoint rows), scalar
+    # counters as sums over the lanes (order-free because each lane's
+    # first_write/newly_dirty depends only on its own pre-batch row).
+    first_write = (state.swt_w[sc] == 0) & act
+    superset_counter = (state.superset_counter
+                        + jnp.sum(first_write.astype(jnp.int32)))
+    swt_w = state.swt_w.at[ii].set(jnp.int8(1), mode="drop")
+    newly_dirty = (state.swt_d[sc] == 0) & dirty & act
+    dirty_counter = (state.dirty_counter
+                     + jnp.sum(newly_dirty.astype(jnp.int32)))
+    swt_d = state.swt_d.at[ii].max(dirty.astype(jnp.int8), mode="drop")
+    write_counter = state.write_counter + jnp.sum(act.astype(jnp.int32))
+
+    return WearState(
+        swt_w=swt_w, swt_d=swt_d,
+        write_counter=write_counter, superset_counter=superset_counter,
+        dirty_counter=dirty_counter, offsets=state.offsets,
+        window_writes=window_writes, window_start=window_start,
+        locked_until=locked,
+        total_rotates=state.total_rotates, total_flushed=state.total_flushed,
+    )
+
+
 #: Serving clock re-base threshold.  The cycle domain is int32 (JAX's
 #: default integer width); a long-lived op-counter clock must be folded
 #: back before it wraps.  Every window comparison is difference-based, so

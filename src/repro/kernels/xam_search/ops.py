@@ -31,6 +31,13 @@ _ON_TPU = jax.default_backend() == "tpu"
 #: stacked path).  The dispatch-count tests read and reset it.
 LAUNCH_COUNT = 0
 
+#: Host-side ADMISSION launches since import — the write-path twin of
+#: ``LAUNCH_COUNT``.  ``MonarchKVIndex`` bumps it once per device admission
+#: dispatch: exactly once per batch on the stacked single-dispatch path
+#: (``admit_dispatch="auto"``), once per partition holding candidates on
+#: the kept per-partition fan-out oracle (``admit_dispatch="fanout"``).
+ADMIT_LAUNCH_COUNT = 0
+
 #: Adaptive query-block policy: batches at/above this many queries use the
 #: wide block (fewer grid steps — the per-step overhead, not the matmul,
 #: dominates small tiles), smaller ones keep MULTISET_BLOCK_Q.  Search
@@ -188,6 +195,76 @@ def group_queries_by_set_stacked(set_ids: np.ndarray, n_sets: int,
         block_sets[p, :tb] = bs
         n_blocks[p] = tb
     return part_of, slot, block_sets, n_blocks, n_qb * block_q
+
+
+def group_admits_stacked(set_ids: np.ndarray, n_sets: int, n_parts: int,
+                         lo: int = 8):
+    """Round-grid stacked layout for the single-dispatch admission.
+
+    The admission scan couples candidates ONLY through per-set state
+    (residency, window budget, the per-set replacement counter), so two
+    candidates targeting different sets commute — only intra-set
+    collisions need the sequential tie-break.  This grouping turns that
+    into a dense grid: candidate i gets
+
+    * ``part_of[i]`` — its owning storage partition (contiguous-block
+      ownership, ``geometry.shard_of_set``);
+    * ``row[i]`` — its PER-SET PREFIX RANK (how many earlier candidates
+      in the batch target the same set), and
+    * ``col[i]`` — its batch-order position among partition
+      ``part_of[i]``'s rank-``row[i]`` candidates.
+
+    Packed as a ``(n_parts, n_rounds, round_width)`` operand this is the
+    segmented-parallel schedule: round r of a partition holds only
+    rank-r candidates, whose sets are pairwise DISTINCT by construction
+    (two same-set candidates differ in rank), so a whole round admits
+    vectorized while a ``lax.scan`` over rounds replays intra-set
+    collisions in exact batch order — bit-equal to the sequential scan.
+    Both grid axes are pow2-bucketed (``n_rounds`` from 1, ``round_width``
+    from ``lo``) so ragged batches reuse a handful of compiled shapes,
+    mirroring :func:`group_queries_by_set_stacked`'s Qmax bucketing.
+
+    Returns ``(part_of, row, col, n_rounds, round_width)``.
+
+    Examples
+    --------
+    8 global sets over 2 partitions: two set-5 candidates split across
+    rounds 0 and 1, the set-4 candidate shares round 0 (distinct set),
+    and the set-1 candidate opens partition 0's round 0:
+
+    >>> part_of, row, col, n_rounds, round_width = group_admits_stacked(
+    ...     [5, 5, 4, 1], 8, 2)
+    >>> part_of.tolist(), row.tolist(), col.tolist()
+    ([1, 1, 1, 0], [0, 1, 0, 0], [0, 0, 1, 0])
+    >>> n_rounds, round_width
+    (2, 8)
+    """
+    set_ids = np.asarray(set_ids, np.int64)
+    if n_sets % n_parts != 0:
+        raise ValueError(f"n_parts={n_parts} must divide n_sets={n_sets}")
+    s_part = n_sets // n_parts
+    part_of = set_ids // s_part
+    b = set_ids.shape[0]
+    if b == 0:
+        return part_of, set_ids.copy(), set_ids.copy(), 1, max(lo, 1)
+    # Per-set prefix rank: batch position among same-set candidates.
+    set_start = np.zeros(n_sets + 1, np.int64)
+    np.cumsum(np.bincount(set_ids, minlength=n_sets), out=set_start[1:])
+    order = np.argsort(set_ids, kind="stable")
+    row = np.empty(b, np.int64)
+    row[order] = np.arange(b) - set_start[set_ids[order]]
+    # Column: batch position among the (partition, rank) group's members.
+    n_rounds_real = int(row.max()) + 1
+    gid = part_of * n_rounds_real + row
+    g_start = np.zeros(n_parts * n_rounds_real + 1, np.int64)
+    np.cumsum(np.bincount(gid, minlength=n_parts * n_rounds_real),
+              out=g_start[1:])
+    gorder = np.argsort(gid, kind="stable")
+    col = np.empty(b, np.int64)
+    col[gorder] = np.arange(b) - g_start[gid[gorder]]
+    n_rounds = bucket_pow2(n_rounds_real, lo=1)
+    round_width = bucket_pow2(int(col.max()) + 1, lo=lo)
+    return part_of, row, col, n_rounds, round_width
 
 
 def _multiset_dispatch(key_bits: np.ndarray, set_ids: np.ndarray,

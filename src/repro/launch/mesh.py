@@ -114,6 +114,15 @@ def set_axis_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P("sets"))
 
 
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement over ``mesh`` — for small operands every
+    shard reads whole (the admission path's traced wear knobs and the
+    no-allocate threshold).  Placing them ONCE at index construction keeps
+    the per-batch dispatch free of implicit host transfers (the
+    ``transfer_guard`` admission pin relies on it)."""
+    return NamedSharding(mesh, P())
+
+
 @functools.lru_cache(maxsize=None)
 def make_sharded_roll(mesh: Mesh, n_rows: int, shift: int):
     """Donated on-device cyclic roll of set-sharded plane arrays.

@@ -10,14 +10,26 @@ scans additionally overlap each other via jax async dispatch.
 
 Semantics (all pinned by tests/test_kv_index_sharded.py):
 
-* One ``submit`` == one ``admit_fps`` call, in submission order.  Batches
-  are never merged, because ``admit_fps`` latches no-allocate touch
-  counts per call — merging two offers of the same fingerprint into one
-  uniqued batch would count one touch where inline admission counts two.
-  After ``flush()`` the index state is therefore EXACTLY what the same
-  ``admit_fps`` calls issued inline would produce (the op-counter clock
-  may differ when lookups interleave, which only shifts t_MWW cycle
-  stamps — the documented async relaxation).
+* Submission order is preserved, and pending batches are COALESCED into
+  one ``admit_fps`` call only while they stay mutually DISJOINT (and
+  under ``COALESCE_MAX_FPS``).  Disjointness is what makes the merge
+  exact: ``admit_fps`` latches no-allocate touch counts per call, so
+  merging two offers of the SAME fingerprint would count one touch where
+  inline admission counts two — the worker therefore stops merging at
+  the first batch sharing a fingerprint with the unit it is building.
+  For disjoint batches the concatenation is bit-exact with the separate
+  calls: per-candidate cycle stamps are the global batch positions, which
+  concatenate to the same sequence, and the device scan admits in the
+  same order.  After ``flush()`` the index state is therefore EXACTLY
+  what the same ``admit_fps`` calls issued inline would produce, with
+  two documented async relaxations: the op-counter clock may differ when
+  lookups interleave (shifting t_MWW cycle stamps), and an auto-rotation
+  landing INSIDE a coalesced unit happens at the unit's end rather than
+  between the merged batches (serving configs rotate via the explicit
+  drain-barrier :meth:`rotate`, where no such window exists).  A failed
+  merged unit drops ALL its batches (surfaced at the next barrier, same
+  as an unmerged failure).  ``coalesce=False`` restores strict
+  one-submit-one-call draining.
 * The queue owns an index lock: the worker holds it across each
   ``admit_fps`` (whose donated device calls rebind the shard planes), and
   :meth:`lookup` / :meth:`rotate` take it too, so the serving loop never
@@ -46,11 +58,16 @@ import numpy as np
 from repro.data.pipeline import fingerprint_blocks
 from repro.serve.kv_index import CHUNK_TOKENS, MonarchKVIndex
 
+#: Coalesced-unit size cap: bounds the single device dispatch a drained
+#: unit turns into (and the work lost if a merged unit fails).
+COALESCE_MAX_FPS = 8192
+
 
 @dataclasses.dataclass
 class AdmitQueueStats:
     submitted: int = 0        # fingerprints handed to submit()
-    batches: int = 0          # admit_fps calls drained
+    batches: int = 0          # submitted batches drained
+    coalesced: int = 0        # admit_fps dispatches saved by merging
     flushes: int = 0          # explicit/barrier flushes
     rww_flushes: int = 0      # flushes forced by read-your-writes lookups
 
@@ -68,6 +85,11 @@ class AdmitQueue:
         synchronously inside :meth:`submit` — same semantics, no overlap.
     read_your_writes : bool
         Flush before a lookup that touches a pending fingerprint.
+    coalesce : bool
+        Merge consecutive pending batches into one ``admit_fps`` call
+        while they stay mutually disjoint (default; see module
+        docstring for why disjointness keeps the merge exact).
+        ``False`` = one submit, one call.
 
     Examples
     --------
@@ -84,9 +106,10 @@ class AdmitQueue:
     """
 
     def __init__(self, index: MonarchKVIndex, *, background: bool = True,
-                 read_your_writes: bool = True):
+                 read_your_writes: bool = True, coalesce: bool = True):
         self.index = index
         self.read_your_writes = read_your_writes
+        self._coalesce = coalesce
         self.stats = AdmitQueueStats()
         self._background = background
         self._idx_lock = threading.Lock()    # serializes index access
@@ -193,12 +216,37 @@ class AdmitQueue:
         self.close()
 
     # ------------------------------------------------------------------
-    def _admit_one_batch(self, fps: np.ndarray) -> None:
+    def _pop_unit_locked(self) -> tuple[np.ndarray, int]:
+        """Pop the next drain unit (``_cv`` held): the head batch plus any
+        immediately following batches that stay mutually disjoint with it,
+        concatenated in submission order (exactness argument in the module
+        docstring), capped at ``COALESCE_MAX_FPS`` fingerprints.  Returns
+        the unit and how many submitted batches it merges."""
+        fps = self._queue.popleft()
+        n_batches = 1
+        if self._coalesce:
+            seen = {int(f) for f in fps}
+            parts = [fps]
+            while (self._queue
+                   and len(seen) + self._queue[0].size <= COALESCE_MAX_FPS):
+                head = {int(f) for f in self._queue[0]}
+                if seen & head:
+                    break            # shared fp: touch counts need 2 calls
+                parts.append(self._queue.popleft())
+                seen |= head
+                n_batches += 1
+            if n_batches > 1:
+                fps = np.concatenate(parts)
+        self._inflight += 1
+        return fps, n_batches
+
+    def _admit_one_batch(self, fps: np.ndarray, n_batches: int = 1) -> None:
         err = None
         try:
             with self._idx_lock:
                 self.index.admit_fps(fps)
-            self.stats.batches += 1
+            self.stats.batches += n_batches
+            self.stats.coalesced += n_batches - 1
         except BaseException as e:           # noqa: BLE001 — must not kill
             err = e                          # the drain loop; surfaced at
         finally:                             # the next flush()
@@ -216,9 +264,8 @@ class AdmitQueue:
             with self._cv:
                 if not self._queue:
                     return
-                fps = self._queue.popleft()
-                self._inflight += 1
-            self._admit_one_batch(fps)
+                fps, n_batches = self._pop_unit_locked()
+            self._admit_one_batch(fps, n_batches)
 
     def _drain_loop(self) -> None:
         while True:
@@ -226,6 +273,5 @@ class AdmitQueue:
                 self._cv.wait_for(lambda: self._queue or self._stop)
                 if self._stop and not self._queue:
                     return
-                fps = self._queue.popleft()
-                self._inflight += 1
-            self._admit_one_batch(fps)
+                fps, n_batches = self._pop_unit_locked()
+            self._admit_one_batch(fps, n_batches)

@@ -25,18 +25,28 @@ Data flow per batch:
   the path IS the unsharded fused kernel, bit for bit.  The PR-4 host
   fan-out (one ``pallas_call`` per shard) survives as the differential
   reference behind ``dispatch="fanout"``.
-* ADMISSION: candidate fingerprints are grouped per shard (original batch
-  order preserved inside each group, cycle stamps keep their GLOBAL batch
-  position) and each shard runs ONE jitted, donated-state ``_admit_batch``
-  scan fusing residency probe, no-allocate gate, t_MWW throttle
-  (``core/wear.py`` — the same machinery the Fig. 11 simulator scans,
-  enforced against the shard's own per-set window counters), cold-victim
-  way selection, column install and wear recording.  Decisions couple
-  only through per-set state (residency, window budget, the per-set
-  replacement counter), so the per-shard scans are bit-equivalent to one
-  global sequential scan — the shard-invariance tests replay randomized
-  schedules at ``n_shards in {1, 2, 4}`` and require identical hits,
-  installs and wear reports.
+* ADMISSION: like lookup, ONE device dispatch per batch at every shard
+  count.  The host packs candidates into the ROUND GRID of
+  ``xam_ops.group_admits_stacked`` — a ``(n_parts, n_rounds,
+  round_width)`` stacked layout where round r holds each set's rank-r
+  candidate (per-set prefix ranks; both axes pow2-bucketed) — and one
+  jitted, donated-state dispatch (``shard_map`` over the ``("sets",)``
+  mesh when partitions span devices, the plain jitted scan otherwise)
+  runs ``_admit_rounds_body``: a ``lax.scan`` over rounds whose step
+  admits a whole round VECTORIZED — residency probe, no-allocate gate,
+  t_MWW throttle (``core/wear.py`` — the same machinery the Fig. 11
+  simulator scans), cold-victim way selection, column install and
+  vectorized wear recording (``wear.record_write_rows``).  Decisions
+  couple only through per-set state (residency, window budget, the
+  per-set replacement counter) and a round's sets are pairwise distinct
+  by construction (same-set candidates differ in rank), so the
+  round-parallel schedule is bit-equivalent to one global sequential
+  scan — the shard-invariance tests replay randomized schedules at
+  ``n_shards in {1, 2, 4}`` and require identical hits, installs and
+  wear reports.  The PR-5 per-partition ``_admit_batch`` scan survives
+  as the differential oracle behind ``admit_dispatch="fanout"``
+  (``tests/test_kv_index_differential.py`` pins both paths bit-identical
+  after every op).
 * ROTATION: the rotary remap is the GLOBAL permutation ``set -> set + 7``
   applied to every shard's planes in lockstep with the ``_set_of`` offset
   bump, so resident entries stay searchable after the remap (pinned since
@@ -85,6 +95,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import geometry
 from repro.core import lifetime as lifetime_mod
@@ -190,8 +202,9 @@ class KVIndexStats:
     searches: int = 0             # lookup dispatches (1 per batch on the
                                   # single-dispatch paths; 1 per occupied
                                   # shard on the "fanout" reference)
-    admit_calls: int = 0          # jitted admit launches (1 per partition
-                                  # holding candidates)
+    admit_calls: int = 0          # jitted admit launches (1 per batch on
+                                  # the stacked path; 1 per partition
+                                  # holding candidates on "fanout")
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -298,6 +311,144 @@ def _admit_batch(bits, valid, fp_of, read_after, set_writes, counter,
     return carry, outs
 
 
+def _admit_rounds_body(bits, valid, fp_of, read_after, set_writes, counter,
+                       wstate, wdyn, admit_after, sets, fps, bitcols, cycles,
+                       touches, active):
+    """Segmented-parallel admission over the round grid (ONE partition).
+
+    The candidate operands are ``(n_rounds, round_width)`` grids from
+    ``xam_ops.group_admits_stacked``: round r holds each set's rank-r
+    candidate, so within a round every active lane targets a DISTINCT
+    set.  The ``lax.scan`` over rounds replays intra-set collisions in
+    exact batch order (rank order IS batch order within a set) while each
+    round's step runs the full per-fingerprint pipeline of
+    ``_admit_batch`` vectorized over the lanes — gathers row-clipped,
+    installs scattered with an out-of-bounds sentinel so inactive /
+    non-installing lanes write nothing, wear recorded via
+    ``wear.record_write_rows`` (distinct rows per round is exactly its
+    contract).  Because every decision couples only through per-set state,
+    the result is bit-identical to the sequential scan — pinned against
+    the ``admit_dispatch="fanout"`` oracle after every op.
+    """
+    n_ways = valid.shape[1]
+    s_all = valid.shape[0]
+    iota = jnp.arange(n_ways, dtype=jnp.int32)
+
+    def round_step(carry, x):
+        bits, valid, fp_of, read_after, set_writes, counter, ws = carry
+        s, fp, bitcol, cycle, touch, act = x        # (K,) lanes, one round
+        sc = jnp.clip(s, 0, s_all - 1)              # gather-safe row index
+
+        vrow = valid[sc]                            # (K, W)
+        frow = fp_of[sc]
+        hitv = (vrow == 1) & (frow == fp[:, None])
+        is_res = jnp.any(hitv, axis=1) & act
+        res_w = jnp.argmax(hitv, axis=1).astype(jnp.int32)
+        # resident re-offer: D/R metadata only (marks the way re-read).
+        read_after = read_after.at[
+            jnp.where(is_res, sc, s_all), res_w].add(1, mode="drop")
+
+        # no-allocate gate (D̄&R̄ "never accessed" filter).
+        skipped = act & ~is_res & (touch < admit_after)
+
+        # t_MWW lifetime throttle — same shared wear machinery as the
+        # sequential scan (reject-before-write, per-set window).
+        locked = wear.is_locked(ws, sc, cycle)
+        over = wear.window_would_exceed(ws, wdyn, sc, cycle)
+        throttled = act & ~is_res & ~skipped & (locked | over)
+        do_install = act & ~is_res & ~skipped & ~throttled
+
+        # Way selection: first free way, else counter-ordered cold victim.
+        free = vrow == 0
+        has_free = jnp.any(free, axis=1)
+        free_w = jnp.argmax(free, axis=1).astype(jnp.int32)
+        order = ((iota[None, :] + counter[sc][:, None]) % n_ways
+                 ).astype(jnp.int32)
+        cold = jnp.take_along_axis(read_after[sc], order, axis=1) == 0
+        victim = jnp.where(
+            jnp.any(cold, axis=1),
+            jnp.take_along_axis(
+                order, jnp.argmax(cold, axis=1)[:, None], axis=1)[:, 0],
+            order[:, 0])
+        way = jnp.where(has_free, free_w, victim).astype(jnp.int32)
+        evict = do_install & ~has_free
+        old_fp = jnp.take_along_axis(frow, way[:, None], axis=1)[:, 0]
+        counter = counter.at[
+            jnp.where(evict, sc, s_all)].add(1, mode="drop")
+
+        # Column install: scatter only the installing lanes (sentinel
+        # index drops the rest) — rows are distinct within a round, so
+        # the scatters never collide.
+        ii = jnp.where(do_install, sc, s_all)
+        bits = bits.at[ii, :, way].set(bitcol.astype(jnp.int8), mode="drop")
+        valid = valid.at[ii, way].set(jnp.int8(1), mode="drop")
+        fp_of = fp_of.at[ii, way].set(fp, mode="drop")
+        read_after = read_after.at[ii, way].set(0, mode="drop")
+        set_writes = set_writes.at[ii].add(1, mode="drop")
+
+        # Wear recording fused with the install — §8's record_write
+        # semantics, vectorized over the round's distinct rows.
+        ws = wear.record_write_rows(ws, wdyn, sc, cycle, do_install)
+
+        out = (is_res, skipped, throttled, do_install, way, evict, old_fp)
+        return (bits, valid, fp_of, read_after, set_writes, counter, ws), out
+
+    carry = (bits, valid, fp_of, read_after, set_writes, counter, wstate)
+    carry, outs = jax.lax.scan(round_step, carry,
+                               (sets, fps, bitcols, cycles, touches, active))
+    return carry, outs
+
+
+#: Single-partition entry point for the round-grid admission (donated
+#: planes/counters/wear, exactly like ``_admit_batch``).
+_admit_rounds = functools.partial(
+    jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))(_admit_rounds_body)
+
+
+@functools.lru_cache(maxsize=None)
+def _admit_shardmap_fn(mesh):
+    """Jitted ``shard_map`` wrapper admitting EVERY partition's round grid
+    from ONE dispatch — the write-path twin of
+    ``xam_ops._stacked_shardmap_fn``.  Each mesh device receives its
+    ``P("sets")`` slices: plane/counter blocks, the per-set wear rows, its
+    ``(1,)`` block of the stacked wear scalars and its ``(1, n_rounds,
+    round_width)`` candidate slice; the traced wear knobs and the
+    no-allocate threshold arrive replicated.  The §8 wear state is passed
+    DECOMPOSED (per-set rows shard, scalar counters stack) because the
+    rotary offsets and rotate totals are invariants of the admission path
+    (the serving config disables every rotate signal) and stay outside the
+    dispatch entirely.  All state operands are donated."""
+    def per_shard(bits, valid, fp_of, read_after, set_writes, counter,
+                  swt_w, swt_d, window_writes, window_start, locked_until,
+                  wc, ssc, dc, wdyn, admit_after,
+                  sets, fps, bitcols, cycles, touches, active):
+        ws = wear.WearState(
+            swt_w=swt_w, swt_d=swt_d,
+            write_counter=wc[0], superset_counter=ssc[0],
+            dirty_counter=dc[0],
+            offsets=geometry.zero_offsets(),      # invariant; discarded
+            window_writes=window_writes, window_start=window_start,
+            locked_until=locked_until,
+            total_rotates=jnp.zeros((), jnp.int32),
+            total_flushed=jnp.zeros((), jnp.int32))
+        carry, outs = _admit_rounds_body(
+            bits, valid, fp_of, read_after, set_writes, counter, ws, wdyn,
+            admit_after, sets[0], fps[0], bitcols[0], cycles[0], touches[0],
+            active[0])
+        bits, valid, fp_of, read_after, set_writes, counter, ws = carry
+        return ((bits, valid, fp_of, read_after, set_writes, counter,
+                 ws.swt_w, ws.swt_d, ws.window_writes, ws.window_start,
+                 ws.locked_until, ws.write_counter[None],
+                 ws.superset_counter[None], ws.dirty_counter[None])
+                + tuple(o[None] for o in outs))
+
+    spec = (P("sets"),) * 14 + (P(), P()) + (P("sets"),) * 6
+    return jax.jit(
+        shard_map(per_shard, mesh=mesh, in_specs=spec,
+                  out_specs=P("sets"), check_rep=False),
+        donate_argnums=tuple(range(14)))
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
                    static_argnames=("shift",))
 def _rotate_planes(bits, valid, fp_of, read_after, shift: int):
@@ -350,6 +501,14 @@ class MonarchKVIndex:
         gathered through the host.  Kept as the differential oracle
         (``tests/test_kv_index_differential.py`` pins both paths
         bit-identical after every op); results never depend on it.
+    admit_dispatch : {"auto", "fanout"} or None
+        Admission dispatch policy; ``None`` (default) follows
+        ``dispatch``.  ``"auto"``: the stacked round-grid path — ONE
+        donated device dispatch admits the whole batch at every shard
+        count.  ``"fanout"``: the PR-5 per-partition ``_admit_batch``
+        scan loop, kept as the admission differential oracle (requires
+        no mesh layout, so it is also forced whenever
+        ``dispatch="fanout"``).  Results never depend on the choice.
 
     Attributes
     ----------
@@ -382,13 +541,21 @@ class MonarchKVIndex:
     """
 
     def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0,
-                 dispatch: str = "auto"):
+                 dispatch: str = "auto", admit_dispatch: str | None = None):
         # cfg default constructed per instance: a shared KVIndexConfig()
         # default would alias mutable config across indexes.
         assert dispatch in ("auto", "fanout"), dispatch
+        if admit_dispatch is None:
+            admit_dispatch = dispatch
+        assert admit_dispatch in ("auto", "fanout"), admit_dispatch
+        # "fanout" storage keeps one block per LOGICAL shard (no mesh
+        # layout to stack over) — its admission is the per-partition loop.
+        assert not (dispatch == "fanout" and admit_dispatch == "auto"), (
+            "dispatch='fanout' storage only supports fanout admission")
         self.cfg = KVIndexConfig() if cfg is None else cfg
         c = self.cfg
         self.dispatch = dispatch
+        self.admit_dispatch = admit_dispatch
         self.n_shards = c.n_shards
         self.sets_per_shard = geometry.sets_per_shard(c.n_sets, c.n_shards)
         # ("sets",) mesh placement: partition k's planes/wear live on mesh
@@ -441,10 +608,15 @@ class MonarchKVIndex:
         # machinery with serving knobs: window length = window_ops (op-count
         # cycle proxy), budget = set_ways * m_writes, WR/WC/DC rotation
         # signals disabled (serving rotates on the rotate_every cadence).
+        # wr_shift=32 actually disables WR — int32 MSB distances never
+        # reach 32, so ``rotate_signal`` provably never fires (the default
+        # shift of 9 left WR armed despite the stated intent).  That
+        # invariance is also what makes the vectorized wear recording of
+        # the stacked admission exact (``wear.record_write_rows``).
         # One state per partition, over that partition's sets.
         self.wear_cfg = wear.WearConfig(
             n_supersets=c.n_sets, m_writes=c.m_writes,
-            dc_limit=1 << 30, wc_limit=1 << 30,
+            dc_limit=1 << 30, wc_limit=1 << 30, wr_shift=32,
             t_mww_cycles=c.window_ops, blocks_per_superset=c.set_ways)
         self.wear_dyn = wear.dyn_of(self.wear_cfg)
         self._wear_states = [
@@ -456,6 +628,13 @@ class MonarchKVIndex:
         self._admit_after = [
             self._put(np.asarray(c.admit_after_reads, np.int32), k)
             for k in range(self.n_parts)]
+        if self._use_shard_map and self.n_parts > 1:
+            # Replicated once at construction so the per-batch stacked
+            # admission dispatch performs no implicit host transfers.
+            repl = mesh_mod.replicated_sharding(self.set_mesh)
+            self._wdyn_repl = jax.device_put(self.wear_dyn, repl)
+            self._admit_after_repl = jax.device_put(
+                np.asarray(c.admit_after_reads, np.int32), repl)
         # Host-side policy shadow (map + mirrors): keeps assertions and
         # eviction bookkeeping off the device sync path.
         self.valid_np = np.zeros((c.n_sets, c.set_ways), bool)
@@ -478,6 +657,17 @@ class MonarchKVIndex:
         if self._devices is None:
             return tree
         return jax.device_put(tree, self._devices[k])
+
+    def _put_admit(self, x):
+        """EXPLICIT single-device placement for stacked-admission grids.
+
+        Unlike :meth:`_put`, which falls back to an implicit
+        ``jnp.asarray`` transfer on one-device hosts, this always issues
+        an explicit ``jax.device_put`` — so the stacked admission path
+        stays legal under ``jax.transfer_guard("disallow")``, which
+        blocks only IMPLICIT transfers (the no-host-transfer pin)."""
+        dev = self._devices[0] if self._devices is not None else jax.devices()[0]
+        return jax.device_put(x, dev)
 
     def _slice(self, k: int) -> slice:
         """Global-set slice owned by storage partition k."""
@@ -623,15 +813,17 @@ class MonarchKVIndex:
 
         Notes
         -----
-        Candidates are grouped by owning storage partition (original
-        order preserved within each group; cycle stamps keep their global
-        batch position) and every partition with candidates runs ONE
-        donated ``_admit_batch`` scan — dispatched back-to-back, synced
-        together, then folded into the host shadow map in one pass.
-        Because every decision couples only through per-set state, the
-        per-partition scans are bit-equivalent to admitting the same
-        fingerprints one at a time in batch order, at any shard count
-        (and any partitioning of the shards onto devices).
+        With ``admit_dispatch="auto"`` (the default) the whole batch is
+        admitted by ONE donated device dispatch at every shard count: the
+        host packs candidates into the round grid of
+        ``xam_ops.group_admits_stacked`` (cycle stamps keep their global
+        batch position) and ``_admit_rounds_body`` admits round after
+        round, each round vectorized over its (pairwise-distinct-set)
+        lanes.  ``admit_dispatch="fanout"`` keeps the per-partition
+        ``_admit_batch`` scan loop as the oracle.  Because every decision
+        couples only through per-set state, both are bit-equivalent to
+        admitting the same fingerprints one at a time in batch order, at
+        any shard count (and any partitioning of shards onto devices).
         """
         fps = np.asarray(fps, np.uint32)
         b = int(fps.size)
@@ -639,13 +831,189 @@ class MonarchKVIndex:
             return
         self._maybe_rebase_clock()
         sets = self._set_of(fps)
-        shard_ids = sets // self.sets_per_part
         touches = np.asarray(
             [self.first_touch.get(int(fp), 0) for fp in fps], np.int32)
         bitcols = xam_ops.words_to_bits_np(fps, self.cfg.key_bits)
+        if self.admit_dispatch == "auto":
+            skip, thr, inst, way, evict, old_fp = self._admit_stacked(
+                fps, sets, touches, bitcols)
+        else:
+            skip, thr, inst, way, evict, old_fp = self._admit_fanout(
+                fps, sets, touches, bitcols)
+        self.ops_total += b
 
-        # Dispatch one donated scan per partition holding candidates;
-        # sync nothing until every partition's call is in flight.
+        # Host shadow-map fold, in GLOBAL batch order.  (Every shadow-map
+        # operation on a given fingerprint — install, touch bump, evict of
+        # its slot — happens inside its one owning partition, so batch
+        # order and the fanout path's partition-major order produce the
+        # same shadow state.)
+        for i in range(b):
+            if evict[i]:
+                self.slot_of.pop(int(old_fp[i]), None)
+            fp = int(fps[i])
+            if skip[i]:
+                self.first_touch[fp] = self.first_touch.get(fp, 0) + 1
+            if inst[i]:
+                s, w = int(sets[i]), int(way[i])
+                self.slot_of[fp] = (s, w)
+                self.first_touch.pop(fp, None)
+                self.valid_np[s, w] = True
+                self.fp_of_np[s, w] = fps[i]
+        batch_installs = int(inst.sum())
+        self.stats.admissions += batch_installs
+        self.stats.admission_skips += int(skip.sum())
+        self.stats.evictions += int(evict.sum())
+        self.stats.throttled += int(thr.sum())
+
+        # Rotate when the admission count crosses a rotate_every multiple
+        # (a plain modulo check would skip the boundary whenever a batch
+        # jumps over it).  At most one remap per admit call — batched
+        # rotation lands at the batch boundary rather than mid-sequence;
+        # the equivalence test pins auto-rotation off for that reason.
+        prev = self.stats.admissions - batch_installs
+        if (self.stats.admissions // self.cfg.rotate_every
+                > prev // self.cfg.rotate_every):
+            self._rotate()
+
+    def _admit_stacked(self, fps, sets, touches, bitcols):
+        """ONE-dispatch admission over the stacked round grid.
+
+        Packs the batch into the ``(n_parts, n_rounds, round_width)``
+        grid of ``xam_ops.group_admits_stacked`` (pow2-bucketed on both
+        candidate axes so repeated batch sizes reuse compilations), then
+        launches a single donated device call: the jitted
+        ``_admit_rounds`` scan when one partition holds everything, else
+        the ``_admit_shardmap_fn`` shard_map over the set mesh.  Returns
+        the per-candidate decision arrays in GLOBAL batch order."""
+        c = self.cfg
+        b = int(fps.size)
+        part_of, row, col, n_rounds, round_width = (
+            xam_ops.group_admits_stacked(
+                sets, c.n_sets, self.n_parts, lo=ADMIT_BUCKET_LO))
+        idx = (part_of, row, col)
+        g = (self.n_parts, n_rounds, round_width)
+        sets_g = np.zeros(g, np.int32)
+        sets_g[idx] = sets - part_of * self.sets_per_part  # partition-local
+        fps_g = np.zeros(g, np.uint32)
+        fps_g[idx] = fps
+        bit_g = np.zeros(g + (c.key_bits,), np.int8)
+        bit_g[idx] = bitcols
+        cyc_g = np.full(g, self.ops_total, np.int32)
+        cyc_g[idx] = self.ops_total + np.arange(b)   # GLOBAL batch position
+        tch_g = np.zeros(g, np.int32)
+        tch_g[idx] = touches
+        act_g = np.zeros(g, bool)
+        act_g[idx] = True
+
+        xam_ops.ADMIT_LAUNCH_COUNT += 1
+        self.stats.admit_calls += 1
+        if self._use_shard_map and self.n_parts > 1:
+            outs = self._dispatch_stacked_shardmap(
+                sets_g, fps_g, bit_g, cyc_g, tch_g, act_g)
+        else:
+            put = self._put_admit
+            carry, outs = _admit_rounds(
+                self._bits[0], self._valid[0], self._fp_of[0],
+                self._read_after[0], self._set_writes[0], self._counters[0],
+                self._wear_states[0], self._wear_dyns[0],
+                self._admit_after[0],
+                put(sets_g[0]), put(fps_g[0]), put(bit_g[0]), put(cyc_g[0]),
+                put(tch_g[0]), put(act_g[0]))
+            (self._bits[0], self._valid[0], self._fp_of[0],
+             self._read_after[0], self._set_writes[0], self._counters[0],
+             self._wear_states[0]) = carry
+
+        # One sync for the whole batch; un-grid back to batch order.
+        outs_np = [np.asarray(o) for o in jax.device_get(outs)]
+        sel = idx if outs_np[0].ndim == 3 else (row, col)
+        _res, skip, thr, inst, way, evict, old_fp = (
+            o[sel] for o in outs_np)
+        return skip, thr, inst, way, evict, old_fp
+
+    def _dispatch_stacked_shardmap(self, sets_g, fps_g, bit_g, cyc_g,
+                                   tch_g, act_g):
+        """Run the stacked admission grid as ONE ``shard_map`` dispatch.
+
+        Assembles the per-partition planes/counters into zero-copy
+        ``P("sets")`` global views, decomposes the §8 wear states (per-set
+        rows assemble like planes; scalar counters stack to an
+        ``(n_parts,)`` array from fresh per-device ``(1,)`` reshapes, so
+        donation never invalidates live state), places the candidate
+        grids sharded on their leading partition axis, and calls the
+        cached ``_admit_shardmap_fn``.  Every transfer here is an
+        EXPLICIT ``device_put`` (the wear knobs and no-allocate threshold
+        were replicated once at construction), keeping the per-batch path
+        legal under ``jax.transfer_guard("disallow")``.  Rebinds all
+        donated state from the outputs and returns the stacked decision
+        grids."""
+        mesh = self.set_mesh
+        shd = mesh_mod.set_axis_sharding(mesh)
+        ws = self._wear_states
+
+        def stack_scalar(field):
+            # jnp.reshape emits a FRESH (1,) buffer on each scalar's
+            # resident device — the assembled stack can be donated
+            # without invalidating the live wear states.
+            return jax.make_array_from_single_device_arrays(
+                (self.n_parts,), shd,
+                [jnp.reshape(getattr(w, field), (1,)) for w in ws])
+
+        fn = _admit_shardmap_fn(mesh)
+        out = fn(
+            self._assemble(self._bits), self._assemble(self._valid),
+            self._assemble(self._fp_of), self._assemble(self._read_after),
+            self._assemble(self._set_writes), self._assemble(self._counters),
+            self._assemble([w.swt_w for w in ws]),
+            self._assemble([w.swt_d for w in ws]),
+            self._assemble([w.window_writes for w in ws]),
+            self._assemble([w.window_start for w in ws]),
+            self._assemble([w.locked_until for w in ws]),
+            stack_scalar("write_counter"), stack_scalar("superset_counter"),
+            stack_scalar("dirty_counter"),
+            self._wdyn_repl, self._admit_after_repl,
+            jax.device_put(sets_g, shd), jax.device_put(fps_g, shd),
+            jax.device_put(bit_g, shd), jax.device_put(cyc_g, shd),
+            jax.device_put(tch_g, shd), jax.device_put(act_g, shd))
+
+        parts = [self._split_global(o) for o in out[:14]]
+        (self._bits, self._valid, self._fp_of, self._read_after,
+         self._set_writes, self._counters) = parts[:6]
+        sww_p, swd_p, wwr_p, wst_p, lck_p, wc_p, ssc_p, dc_p = parts[6:]
+        # Rotary offsets / rotate totals never entered the dispatch (the
+        # serving config disables every rotate signal), so the old
+        # buffers are still live — reattach them.
+        self._wear_states = [
+            wear.WearState(
+                swt_w=sww_p[k], swt_d=swd_p[k],
+                write_counter=jnp.reshape(wc_p[k], ()),
+                superset_counter=jnp.reshape(ssc_p[k], ()),
+                dirty_counter=jnp.reshape(dc_p[k], ()),
+                offsets=old.offsets,
+                window_writes=wwr_p[k], window_start=wst_p[k],
+                locked_until=lck_p[k],
+                total_rotates=old.total_rotates,
+                total_flushed=old.total_flushed)
+            for k, old in enumerate(self._wear_states)]
+        return out[14:]
+
+    def _admit_fanout(self, fps, sets, touches, bitcols):
+        """PR-5 per-partition admission oracle (``admit_dispatch="fanout"``).
+
+        Groups candidates by owning storage partition (original order
+        preserved within each group; cycle stamps keep their global batch
+        position) and runs ONE donated ``_admit_batch`` scan per
+        partition holding candidates — dispatched back-to-back, synced
+        together.  Returns the decision arrays scattered back to GLOBAL
+        batch order, so the shared shadow-map fold in ``admit_fps`` is
+        identical for both dispatch modes."""
+        b = int(fps.size)
+        shard_ids = sets // self.sets_per_part
+        skip = np.zeros(b, bool)
+        thr = np.zeros(b, bool)
+        inst = np.zeros(b, bool)
+        evict = np.zeros(b, bool)
+        way = np.zeros(b, np.int32)
+        old_fp = np.zeros(b, np.uint32)
         launches = []
         for k in np.unique(shard_ids):
             k = int(k)
@@ -655,7 +1023,7 @@ class MonarchKVIndex:
             fps_p = np.zeros(bb, np.uint32)
             fps_p[:bk] = fps[sel]
             sets_p = np.zeros(bb, np.int32)
-            sets_p[:bk] = sets[sel] - k * self.sets_per_part  # partition-local
+            sets_p[:bk] = sets[sel] - k * self.sets_per_part  # local rows
             bit_p = np.zeros((bb, self.cfg.key_bits), np.int8)
             bit_p[:bk] = bitcols[sel]
             cycles = np.full(bb, self.ops_total, np.int32)
@@ -676,43 +1044,21 @@ class MonarchKVIndex:
             (self._bits[k], self._valid[k], self._fp_of[k],
              self._read_after[k], self._set_writes[k], self._counters[k],
              self._wear_states[k]) = carry
+            xam_ops.ADMIT_LAUNCH_COUNT += 1
             self.stats.admit_calls += 1
-            launches.append((k, sel, fps_p, sets[sel], outs))
-        self.ops_total += b
+            launches.append((sel, outs))
 
-        # Host shadow-map pass (one device->host transfer per shard).
-        batch_installs = 0
-        for k, sel, fps_p, sets_glob, outs in launches:
+        for sel, outs in launches:
             bk = sel.size
-            _res, skip, thr, inst, way, evict, old_fp = (
+            _res, sk, th, in_, wy, ev, of = (
                 np.asarray(o)[:bk] for o in outs)
-            for i in range(bk):
-                if evict[i]:
-                    self.slot_of.pop(int(old_fp[i]), None)
-                fp = int(fps_p[i])
-                if skip[i]:
-                    self.first_touch[fp] = self.first_touch.get(fp, 0) + 1
-                if inst[i]:
-                    s, w = int(sets_glob[i]), int(way[i])
-                    self.slot_of[fp] = (s, w)
-                    self.first_touch.pop(fp, None)
-                    self.valid_np[s, w] = True
-                    self.fp_of_np[s, w] = fps_p[i]
-            batch_installs += int(inst.sum())
-            self.stats.admissions += int(inst.sum())
-            self.stats.admission_skips += int(skip.sum())
-            self.stats.evictions += int(evict.sum())
-            self.stats.throttled += int(thr.sum())
-
-        # Rotate when the admission count crosses a rotate_every multiple
-        # (a plain modulo check would skip the boundary whenever a batch
-        # jumps over it).  At most one remap per admit call — batched
-        # rotation lands at the batch boundary rather than mid-sequence;
-        # the equivalence test pins auto-rotation off for that reason.
-        prev = self.stats.admissions - batch_installs
-        if (self.stats.admissions // self.cfg.rotate_every
-                > prev // self.cfg.rotate_every):
-            self._rotate()
+            skip[sel] = sk
+            thr[sel] = th
+            inst[sel] = in_
+            way[sel] = wy
+            evict[sel] = ev
+            old_fp[sel] = of
+        return skip, thr, inst, way, evict, old_fp
 
     def _rotate(self):
         """Rotary remap (prime stride 7): shift the set planes by the

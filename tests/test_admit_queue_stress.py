@@ -147,7 +147,9 @@ def test_worker_exception_mid_schedule_surfaces_at_next_barrier():
     poison = np.asarray([0xDEAD], np.uint32)
 
     def flaky_admit(fps):
-        if fps.size == 1 and fps[0] == poison[0]:
+        # membership, not exact-batch identity: the worker may legally
+        # coalesce the poison batch with disjoint neighbors
+        if poison[0] in fps:
             raise ValueError("injected mid-schedule failure")
         real_admit(fps)
 
@@ -186,6 +188,55 @@ def test_worker_exception_mid_schedule_surfaces_at_next_barrier():
     q.submit(np.asarray([1, 2, 3], np.uint32))
     q.flush()
     assert {1, 2, 3} <= set(idx.slot_of)
+    q.close()
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_coalesced_drain_matches_inline_and_saves_dispatches(n_shards):
+    """Disjoint pending batches drain as ONE admit_fps call with state
+    bit-identical to the same calls inline (touch counts included: the
+    re-offered batch shares fps, so it must NOT merge into its unit)."""
+    cfg = dict(n_sets=8, set_ways=64, admit_after_reads=1, m_writes=1 << 20,
+               window_ops=1 << 30, rotate_every=1 << 30, n_shards=n_shards)
+    inline = MonarchKVIndex(KVIndexConfig(**cfg))
+    queued = MonarchKVIndex(KVIndexConfig(**cfg))
+    # background=False: submits pile up only because we enqueue under the
+    # worker-less path below — use the queue internals to stage a backlog
+    # deterministically, then drain once.
+    q = AdmitQueue(queued, background=False, coalesce=True)
+    rng = np.random.default_rng(3)
+    disjoint = [np.asarray(block, np.uint32) for block in
+                np.split(rng.choice(np.arange(1, 100_000, dtype=np.uint32),
+                                    size=96, replace=False), 6)]
+    batches = disjoint + [disjoint[2]]          # re-offer: shared fps
+    for fps in batches:
+        inline.admit_fps(fps)
+        with q._cv:                              # stage without draining
+            q._queue.append(fps)
+            q._pending.update(int(f) for f in fps)
+    q.stats.submitted += sum(int(b.size) for b in batches)
+    calls = [0]
+    real_admit = queued.admit_fps
+
+    def counting_admit(fps):
+        calls[0] += 1
+        real_admit(fps)
+
+    queued.admit_fps = counting_admit
+    q.flush()
+    # 6 disjoint batches merged into one call; the re-offer needed its own
+    assert calls[0] == 2
+    assert q.stats.batches == len(batches)
+    assert q.stats.coalesced == len(disjoint) - 1
+    assert q.pending() == 0
+    # bit-identical to inline: shadow map, touch counts, install stats
+    assert queued.slot_of == inline.slot_of
+    assert queued.first_touch == inline.first_touch
+    assert np.array_equal(queued.valid_np, inline.valid_np)
+    assert np.array_equal(queued.fp_of_np, inline.fp_of_np)
+    assert queued.stats.admissions == inline.stats.admissions
+    assert queued.stats.admission_skips == inline.stats.admission_skips
+    assert queued.wear_report() == inline.wear_report()
     q.close()
 
 

@@ -1,0 +1,136 @@
+"""Device-vs-host hopscotch backend differential.
+
+``HopscotchTable(backend="device")`` replaces the numpy bucket store with
+device-resident uint32 planes whose ``insert``/``delete`` run as single
+donated device calls (``kernels.hopscotch.ops.hopscotch_insert_device``:
+windowed scatter, hop-chain displacement as a bounded while-loop).  The
+contract is BIT-IDENTITY with the host reference — same bucket contents,
+same operation counts (probes/swaps/writes feed the §10.4 timing model),
+same §8 wear trace — which this module pins over:
+
+* randomized insert/delete/lookup schedules (duplicate-key value updates
+  included), state compared after EVERY mutation;
+* hop-chain saturation: tiny windows at high load force long forward
+  walks and multi-hop displacement chains;
+* table-full / failed-chain paths: both backends must rehash at the same
+  op with the same partially-moved pre-rehash state folded in.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.apps.hashtable import HopscotchTable
+from repro.core import wear
+
+
+def _pair(log2_size: int, window: int, wear_on: bool = True):
+    def mk(backend):
+        wc = wear.WearConfig(n_supersets=8, t_mww_cycles=64,
+                             blocks_per_superset=4) if wear_on else None
+        return HopscotchTable(log2_size, window=window, wear_cfg=wc,
+                              backend=backend)
+    return mk("host"), mk("device")
+
+
+def _assert_same(host: HopscotchTable, dev: HopscotchTable, msg: str):
+    dev._sync_host()
+    np.testing.assert_array_equal(host.keys, dev.keys, err_msg=f"{msg} keys")
+    np.testing.assert_array_equal(host.vals, dev.vals, err_msg=f"{msg} vals")
+    assert (dataclasses.astuple(host.stats)
+            == dataclasses.astuple(dev.stats)), (msg, host.stats, dev.stats)
+    assert host.n == dev.n, msg
+    if host.wear_cfg is not None:
+        assert host.wear_report() == dev.wear_report(), msg
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("window", [4, 8])
+def test_randomized_schedule_bit_identical(seed, window):
+    rng = np.random.default_rng(seed)
+    host, dev = _pair(log2_size=6, window=window)
+    universe = rng.choice(np.arange(1, 1 << 20, dtype=np.uint64),
+                          size=90, replace=False)
+    live: list[int] = []
+    for step in range(140):
+        op = rng.random()
+        if op < 0.6 or not live:
+            k = int(universe[rng.integers(0, universe.size)])
+            v = int(rng.integers(1, 1 << 60))    # 64-bit value halves both
+            assert host.insert(k, v) == dev.insert(k, v)
+            if k not in live:
+                live.append(k)
+        elif op < 0.8:
+            k = live.pop(rng.integers(0, len(live)))
+            assert host.delete(k) == dev.delete(k), (step, k)
+            # double delete: a clean miss on both backends
+            assert host.delete(k) == dev.delete(k) is False
+        else:
+            q = rng.choice(universe, size=13)
+            vh, hh = host.lookup_monarch(q)
+            vd, hd = dev.lookup_monarch(q)
+            np.testing.assert_array_equal(vh, vd, err_msg=str(step))
+            np.testing.assert_array_equal(hh, hd)
+        _assert_same(host, dev, f"seed={seed} step={step}")
+    assert host.stats.inserts > 0 and host.stats.deletes > 0
+    assert abs(host.load - dev.load) < 1e-12
+
+
+def test_hop_chain_saturation_and_duplicate_updates():
+    """window=4 at near-full load: inserts must displace multi-hop chains
+    (swaps > 0) identically, and re-inserting a resident key must update
+    the value in place on both backends without moving buckets."""
+    host, dev = _pair(log2_size=5, window=4)
+    keys = np.arange(1, 27, dtype=np.uint64) * np.uint64(0x9E3779B9)
+    for k in keys:
+        assert host.insert(int(k), int(k) ^ 0xFF) == \
+            dev.insert(int(k), int(k) ^ 0xFF)
+        _assert_same(host, dev, f"saturate k={k}")
+    assert host.stats.swaps > 0            # chains actually exercised
+    before = dataclasses.astuple(host.stats)
+    for k in keys[:9]:                      # duplicate re-offers
+        host.insert(int(k), 7)
+        dev.insert(int(k), 7)
+    _assert_same(host, dev, "dup updates")
+    assert host.stats.swaps == before[6]    # value updates never displace
+    va, ha = host.lookup_monarch(keys[:9])
+    vb, hb = dev.lookup_monarch(keys[:9])
+    assert ha.all() and hb.all()
+    np.testing.assert_array_equal(va, np.full(9, 7, np.uint64))
+    np.testing.assert_array_equal(vb, va)
+
+
+def test_table_full_rehashes_identically():
+    """Overfill a tiny table: both backends must take the rehash path at
+    the same inserts (same grown size, same reinsert order -> identical
+    final layout) including failed hop chains that leave partial moves."""
+    host, dev = _pair(log2_size=3, window=2)   # n=8: fills immediately
+    rng = np.random.default_rng(9)
+    keys = np.unique(rng.integers(1, 1 << 30, size=60,
+                                  dtype=np.uint64))[:40]
+    for i, k in enumerate(keys):
+        assert host.insert(int(k), i + 1) == dev.insert(int(k), i + 1)
+        _assert_same(host, dev, f"fill i={i}")
+    assert host.stats.rehashes >= 2
+    assert host.n == dev.n > 8
+    vh, hh = host.lookup_monarch(keys)
+    vd, hd = dev.lookup_monarch(keys)
+    assert hh.all() and hd.all()
+    np.testing.assert_array_equal(vh, vd)
+
+
+def test_device_backend_without_wear_tracking():
+    """wear_cfg=None path: the insert op's write log is simply dropped."""
+    host, dev = _pair(log2_size=5, window=8, wear_on=False)
+    for k in range(1, 40):
+        host.insert(k, k * 2)
+        dev.insert(k, k * 2)
+    _assert_same(host, dev, "no-wear")
+    with pytest.raises(ValueError, match="wear"):
+        dev.wear_report()
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

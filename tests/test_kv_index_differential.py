@@ -151,6 +151,48 @@ def test_differential_boundary_straddle_after_rotation(n_shards):
     assert auto.stats.rotations == 3
 
 
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_admission_is_single_dispatch_at_every_shard_count(n_shards):
+    """Acceptance pin: with ``admit_dispatch="auto"`` one admit_fps batch
+    is ONE device dispatch no matter how many shards (and partitions)
+    the index spans, while the fanout oracle pays one dispatch per
+    partition holding candidates."""
+    auto, ref = _pair(n_shards, admit_after_reads=0)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        fps = np.unique(rng.integers(1, 3000, 24).astype(np.uint32))
+        before = xam_ops.ADMIT_LAUNCH_COUNT
+        auto.admit_fps(fps)
+        assert xam_ops.ADMIT_LAUNCH_COUNT == before + 1
+        before = xam_ops.ADMIT_LAUNCH_COUNT
+        ref.admit_fps(fps)
+        want = len(np.unique(ref._set_of(fps) // ref.sets_per_part))
+        assert xam_ops.ADMIT_LAUNCH_COUNT == before + want
+    assert auto.stats.admit_calls == 4
+    _assert_same(_state(auto), _state(ref), f"n_shards={n_shards}")
+
+
+def test_admission_moves_no_plane_data_through_host():
+    """Acceptance pin: the stacked admission path performs NO implicit
+    host transfer — candidate grids enter via explicit device_put, the
+    wear knobs were replicated at construction, and only the decision
+    grids come back (one explicit device_get per batch).  A scratch index
+    with the identical config compiles the exact R/K bucket shapes first,
+    so the guarded run measures steady-state dispatch, not tracing."""
+    fps = np.arange(1, 49, dtype=np.uint32)
+    warm, _ = _pair(4, admit_after_reads=0)
+    warm.admit_fps(fps)                   # same cfg + batch -> same shapes
+    idx, _ = _pair(4, admit_after_reads=0)
+    with jax.transfer_guard("disallow"):
+        idx.admit_fps(fps)
+    # bit-identical to the unguarded twin, installs included
+    _assert_same(_state(idx), _state(warm), "guarded admission")
+    assert idx.stats.admissions > 0
+    # residents = installs minus the same-batch evictions (table was empty)
+    assert (idx._shadow_hits(fps).sum()
+            == idx.stats.admissions - idx.stats.evictions)
+
+
 def test_rotation_moves_no_plane_data_through_host():
     """Acceptance pin: the rotate path performs NO host transfer of plane
     data (device_get/device_put both trip the guard).  Runs on every

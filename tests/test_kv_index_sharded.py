@@ -223,8 +223,9 @@ def _same_index_state(a: MonarchKVIndex, b: MonarchKVIndex):
 @pytest.mark.parametrize("n_shards", [1, 2])
 def test_queue_flush_matches_inline_admission(rng, background, n_shards):
     """submit*; flush == the same admit_fps calls inline: same shadow
-    map, planes, install counts — batches are never merged (touch-count
-    semantics) and order is preserved."""
+    map, planes, install counts — order is preserved and batches merge
+    only while mutually disjoint (touch-count semantics), which keeps
+    the drained state bit-identical."""
     cfg = dict(n_sets=4, set_ways=16, admit_after_reads=1, m_writes=1 << 20,
                window_ops=1 << 30)
     inline = MonarchKVIndex(KVIndexConfig(n_shards=n_shards, **cfg))
