@@ -16,6 +16,15 @@ Two kinds of coverage:
   (default 1.05x), so an unintended durability-model change fails CI even
   when no kernel slowed down.
 
+Two extra ``kernels`` gates beyond the per-entry thresholds:
+
+* packed planes must pay off: the fresh ``xam_multiset_packed`` median
+  must beat the COMMITTED ``xam_multiset`` baseline (the perf claim the
+  packing PR makes; downgradable via ``BENCH_WARN_ONLY`` like any timing).
+* the artifact must carry the roofline section (per-kernel ``hbm_bytes`` /
+  ``achieved_bytes_per_s`` / positive ``roofline_fraction``) — structural,
+  always fatal: losing it silently would unpin the bandwidth claims.
+
 Artifacts present in only one file are reported but never fatal (new
 benches land before their baseline is refreshed; a missing figure baseline
 is skipped).  Set ``BENCH_WARN_ONLY=1`` to downgrade failures to warnings
@@ -78,6 +87,50 @@ def compare(baseline: dict[str, float], current: dict[str, float],
     return regressions, notes
 
 
+def packed_gate(baseline: dict[str, float],
+                current: dict[str, float]) -> list[str]:
+    """The packing claim: the packed-plane multiset median beats int8.
+
+    Two legs, both required: the SAME-RUN comparison (fresh packed vs
+    fresh int8 — the bench times the pair interleaved, so this leg is
+    robust to slow phases of a shared rig) and the cross-run comparison
+    against the committed int8 baseline.  Empty list when both hold, or
+    when a side is missing — new baselines land after the bench does."""
+    cur = current.get("xam_multiset_packed")
+    if cur is None:
+        return []
+    out = []
+    peer = current.get("xam_multiset")
+    if peer is not None and cur >= peer:
+        out.append(f"  xam_multiset_packed: {cur:.4g} us does NOT beat "
+                   f"the same-run xam_multiset {peer:.4g} us "
+                   f"({cur / peer:.2f}x)")
+    base = baseline.get("xam_multiset")
+    if base is not None and cur >= base:
+        out.append(f"  xam_multiset_packed: {cur:.4g} us does NOT beat "
+                   f"the committed xam_multiset baseline {base:.4g} us "
+                   f"({cur / base:.2f}x)")
+    return out
+
+
+def roofline_gate(path: str) -> list[str]:
+    """Structural check on the roofline section of the current artifact."""
+    with open(path) as f:
+        doc = json.load(f)
+    roof = doc.get("roofline")
+    if not isinstance(roof, dict) or not roof.get("kernels"):
+        return [f"  {os.path.basename(path)}: roofline section missing"]
+    bad = []
+    for name, entry in roof["kernels"].items():
+        for field in ("hbm_bytes", "achieved_bytes_per_s",
+                      "roofline_fraction"):
+            v = entry.get(field)
+            if not isinstance(v, (int, float)) or v <= 0:
+                bad.append(f"  roofline.{name}.{field}: {v!r} "
+                           "(expected a positive number)")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
@@ -89,8 +142,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     warn_only = os.environ.get("BENCH_WARN_ONLY", "") not in ("", "0")
-    regressions, notes = compare(load_medians(args.baseline),
-                                 load_medians(args.current), args.threshold)
+    base_medians = load_medians(args.baseline)
+    cur_medians = load_medians(args.current)
+    regressions, notes = compare(base_medians, cur_medians, args.threshold)
+    regressions += packed_gate(base_medians, cur_medians)
     print(f"[perf-smoke] baseline: {args.baseline}")
     print(f"[perf-smoke] current:  {args.current}")
 
@@ -108,6 +163,11 @@ def main(argv=None) -> int:
                        args.fig_threshold, two_sided=True, unit="")
         fig_regressions += [f"  [{fig}]{x.rstrip()}" for x in r]
         notes += [f"  [{fig}]{x.rstrip()}" for x in n]
+
+    # Roofline structure is deterministic bench output — always fatal,
+    # grouped with the claim checks.
+    if os.path.exists(args.current):
+        fig_regressions += roofline_gate(args.current)
 
     for line in notes:
         print(line)

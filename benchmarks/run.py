@@ -1,6 +1,7 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --autotune   # block-shape cache
 
 Modules (paper artifact -> bench):
     Table 1        -> table1_tech        (32KB block technology study, §5)
@@ -40,7 +41,23 @@ def main(argv=None) -> None:
                     help="smaller sweeps (CI-sized)")
     ap.add_argument("--only", default=None,
                     help="run a single module by name")
+    ap.add_argument("--autotune", action="store_true",
+                    help="regenerate the kernel block-shape cache "
+                         "(src/repro/kernels/autotune_cache.json) instead "
+                         "of running the benches")
     args = ap.parse_args(argv)
+    if args.autotune:
+        from repro.kernels import autotune
+        payload = autotune.autotune(quick=args.quick)
+        for key in sorted(payload["families"]):
+            fam = payload["families"][key]
+            shape = f"block_q={fam['block_q']}"
+            if "block_c" in fam:
+                shape += f" block_c={fam['block_c']}"
+            print(f"[autotune] {key}: {shape} ({fam['median_us']} us)")
+        print(f"[autotune] wrote {autotune.DEFAULT_CACHE_PATH} "
+              f"(fingerprint {autotune.cache_fingerprint()})")
+        return
     sizes = BenchSizes(quick=args.quick)
 
     benches = [

@@ -63,7 +63,7 @@ class HashStats:
 class HopscotchTable:
     def __init__(self, log2_size: int, window: int = 32, seed: int = 0,
                  wear_cfg: wear.WearConfig | None = None,
-                 backend: str = "host"):
+                 backend: str = "host", plane_format: str | None = None):
         """``wear_cfg``: optional §8 wear accounting over the table's
         backing store (a flat-CAM in the paper's deployment).  Bucket
         writes are charged to ``n_supersets`` equal superset stripes via
@@ -74,8 +74,21 @@ class HopscotchTable:
         ``backend``: ``"host"`` (numpy bucket store, the reference) or
         ``"device"`` (device-resident planes; insert/delete are single
         donated device calls, bit-identical results — see module
-        docstring)."""
-        assert backend in ("host", "device"), backend
+        docstring).
+
+        ``plane_format``: accepted for serving-stack symmetry (``None`` =
+        the ``REPRO_PLANE_FORMAT`` env knob) and VALIDATED, but both
+        values store the same planes here: the hopscotch lo/hi tile
+        planes are uint32 key words — already 8 logical bits per byte —
+        so ``"packed8"`` is the documented identity for this kernel.
+        The XAM planes (1 logical bit per byte at ``"int8"``) are where
+        packing changes the stored layout."""
+        if backend not in ("host", "device"):
+            raise ValueError(
+                f"backend must be one of ('host', 'device'), got "
+                f"{backend!r}")
+        from repro.kernels.common import resolve_plane_format
+        self.plane_format = resolve_plane_format(plane_format)
         self.backend = backend
         self.window = window
         self.wear_cfg = wear_cfg

@@ -7,9 +7,9 @@ stable interface CI uploads and downstream tooling diffs.
 """
 from repro.bench.emit import bench_out_dir, emit_json
 from repro.bench.harness import (BenchSizes, Timing, stopwatch,
-                                 time_callable)
+                                 time_callable, time_interleaved)
 
 __all__ = [
     "BenchSizes", "Timing", "bench_out_dir", "emit_json", "stopwatch",
-    "time_callable",
+    "time_callable", "time_interleaved",
 ]

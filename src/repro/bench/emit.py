@@ -3,7 +3,11 @@
 Each figure benchmark emits one JSON file next to ``benchmarks/results.csv``
 (override with ``BENCH_OUT_DIR``).  The envelope carries enough metadata to
 interpret a number months later: which backend produced it, whether it was
-a quick (CI-sized) or full sweep, and when.
+a quick (CI-sized) or full sweep, when — and the knobs that steer kernel
+speed without changing results: the resolved plane format, the autotune
+cache fingerprint, and the machine profile the rooflines are drawn
+against.  Cross-run comparisons that mix envelopes with different values
+for those three fields are comparing different configurations.
 """
 from __future__ import annotations
 
@@ -28,11 +32,18 @@ def bench_out_dir() -> str:
 
 def emit_json(name: str, payload: dict, *, quick: bool | None = None) -> str:
     """Write ``BENCH_<name>.json`` and return its path."""
+    from repro.kernels import autotune
+    from repro.kernels.common import resolve_plane_format
+    from repro.roofline.analysis import current_machine
+
     doc = {
         "bench": name,
         "created_unix": round(time.time(), 3),
         "jax_backend": jax.default_backend(),
         "n_devices": jax.device_count(),
+        "plane_format": resolve_plane_format(),
+        "autotune_cache": autotune.cache_fingerprint(),
+        "machine": current_machine().name,
     }
     if quick is not None:
         doc["quick"] = bool(quick)

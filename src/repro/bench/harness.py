@@ -61,6 +61,33 @@ def time_callable(fn, *, warmup: int = 1, reps: int = 5) -> Timing:
     )
 
 
+def time_interleaved(fns, *, warmup: int = 1,
+                     reps: int = 5) -> list[Timing]:
+    """Round-robin single-call timing of several callables: rep ``k``
+    times each ``fn`` in turn instead of finishing one before starting
+    the next.  On a shared rig a slow phase then lands on EVERY callable
+    rather than whichever one happened to be mid-phase, so the RELATIVE
+    ordering of the returned medians is trustworthy even when the
+    absolute numbers are inflated.  Use for gated A/B comparisons where
+    cross-phase noise exceeds the effect size."""
+    for fn in fns:
+        for _ in range(warmup):
+            _block(fn())
+    samples: list[list[float]] = [[] for _ in fns]
+    for _ in range(max(reps, 1)):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            _block(fn())
+            samples[i].append((time.perf_counter() - t0) * 1e6)
+    return [Timing(
+        median_us=statistics.median(s),
+        best_us=min(s),
+        mean_us=statistics.fmean(s),
+        reps=len(s),
+        warmup=warmup,
+    ) for s in samples]
+
+
 @contextlib.contextmanager
 def stopwatch(record: dict, key: str):
     """One-shot wall timing for sweeps too big to repeat: stores elapsed

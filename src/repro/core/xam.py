@@ -195,3 +195,43 @@ def pack_block_rowwise(arr: XamArray, row: jnp.ndarray, block_bits: jnp.ndarray)
 def store_key_colwise(arr: XamArray, col: jnp.ndarray, key_bits: jnp.ndarray) -> XamArray:
     """Store a key/tag down a column (ColumnIn CAM mode)."""
     return write_col(arr, col, key_bits)
+
+
+# ---------------------------------------------------------------------------
+# Packed plane views.  The functional model keeps one logical bit per int8
+# cell (the physical picture: one differential 2R cell per bit), but the
+# serving kernels may STORE a plane packed 8 bits per uint8 word along the
+# row axis (``plane_format="packed8"`` — kernels/common.py).  The search is
+# bit-serial in the paper's sense, so the packed view is a pure re-layout:
+# these twins pin the layout contract at the model level.
+# ---------------------------------------------------------------------------
+
+def packed_view(bits: jnp.ndarray) -> jnp.ndarray:
+    """Row-packed view of a {0,1} bit plane: logical row ``r`` lands in
+    packed word ``r // 8`` at bit position ``r % 8`` (LSB-first — the
+    same convention as ``words_to_bits``).  Rows must be a multiple of 8.
+
+    >>> import numpy as np
+    >>> plane = jnp.zeros((8, 2), jnp.int8).at[0, 0].set(1).at[2, 0].set(1)
+    >>> np.asarray(packed_view(plane)).tolist()   # bit0 + bit2 = 5
+    [[5, 0]]
+    >>> bool((unpacked_view(packed_view(plane)) == plane).all())
+    True
+    """
+    r, c = bits.shape
+    if r % 8 != 0:
+        raise ValueError(
+            f"row count {r} is not a multiple of 8; pad with zero rows "
+            "before packing")
+    words = bits.astype(jnp.uint8).reshape(r // 8, 8, c)
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
+    return jnp.sum(words << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpacked_view(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`packed_view`: (R//8, C) uint8 words back to the
+    (R, C) int8 bit plane the functional model operates on."""
+    rp, c = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & 1
+    return bits.reshape(rp * 8, c).astype(jnp.int8)

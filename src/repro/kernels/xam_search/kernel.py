@@ -51,6 +51,29 @@ DEFAULT_BLOCK_C = 512
 MULTISET_BLOCK_Q = 16  # queries per grid step in the fused multi-set kernel
 
 
+def _unpack_rows(packed):
+    """(rp, c) uint8 packed words -> (rp*8, c) int8 {0,1} bits, LSB-first.
+
+    The VMEM-side inverse of ``common.pack_bits_np(..., axis=-2)``:
+    logical row ``r`` comes from packed word ``r // 8`` at bit position
+    ``r % 8``, so the unpacked plane drops into the existing ±1 encoding
+    and the MXU matmul / first-match reduce run unchanged.  Pure VPU
+    shift-and-mask — the 8x narrower packed operand is what crossed
+    HBM->VMEM."""
+    rp, c = packed.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 8, 1), 1)
+    bits = (packed.astype(jnp.int32)[:, None, :] >> shifts) & 1
+    return bits.reshape(rp * 8, c).astype(jnp.int8)
+
+
+def _check_scoring(scoring: str):
+    if scoring not in ("int8", "f32"):
+        raise ValueError(
+            f"scoring must be one of ('int8', 'f32'), got {scoring!r} "
+            "(set via the REPRO_XAM_SCORING env knob or the scoring "
+            "argument)")
+
+
 def _match_bitmap(keys, masks, data, scoring: str):
     """±1-encoded XNOR-current matmul -> (bq, bc) int8 match bitmap."""
     if scoring == "int8":
@@ -82,9 +105,12 @@ def _match_bitmap(keys, masks, data, scoring: str):
 
 def _xam_search_kernel(keys_ref, data_ref, masks_ref, out_ref, *,
                        scoring: str):
-    """keys/masks: (bq, R) int8; data: (R, bc) int8; out: (bq, bc) int8."""
-    out_ref[...] = _match_bitmap(
-        keys_ref[...], masks_ref[...], data_ref[...], scoring)
+    """keys/masks: (bq, R) int8; data: (R, bc) int8 — or (R//8, bc) uint8
+    packed words, unpacked here in VMEM; out: (bq, bc) int8."""
+    data = data_ref[...]
+    if data.dtype == jnp.uint8:
+        data = _unpack_rows(data)
+    out_ref[...] = _match_bitmap(keys_ref[...], masks_ref[...], data, scoring)
 
 
 @functools.partial(
@@ -99,31 +125,47 @@ def xam_search_pallas(
     scoring: str = "int8",
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Batched masked CAM search.  keys/masks (Q, R), data (R, C) ->
-    match bitmap (Q, C) int8.  Q and C are padded to block multiples here;
-    callers see exact shapes."""
+    """Batched masked CAM search.  keys/masks (Q, R), data (R, C) int8 —
+    or (ceil(R/8), C) uint8 packed words (``plane_format="packed8"``; the
+    kernel unpacks in VMEM) -> match bitmap (Q, C) int8.  Q and C are
+    padded to block multiples here; callers see exact shapes."""
     q, r = keys.shape
-    r2, c = data.shape
-    assert r == r2 and masks.shape == keys.shape
-    assert scoring in ("int8", "f32"), scoring
+    _check_scoring(scoring)
+    packed = data.dtype == jnp.uint8
+    if packed:
+        rp, c = data.shape
+        r_eff = rp * 8
+        if r > r_eff:
+            raise ValueError(
+                f"packed data holds {r_eff} bit rows but keys have {r}")
+    else:
+        r2, c = data.shape
+        assert r == r2
+        rp, r_eff = r, r
+    assert masks.shape == keys.shape
 
     bq = min(block_q, _round_up(q, 8))
     bc = min(block_c, _round_up(c, 128))
     qp, cp = _round_up(q, bq), _round_up(c, bc)
 
-    keys_p = jnp.zeros((qp, r), jnp.int8).at[:q].set(keys.astype(jnp.int8))
+    # Keys/masks padded to the unpacked row count: the pad rows carry
+    # mask 0, so they never select a bit.
+    keys_p = jnp.zeros((qp, r_eff), jnp.int8).at[:q, :r].set(
+        keys.astype(jnp.int8))
     # Padded queries: mask all-zero -> they match everything; sliced off.
-    masks_p = jnp.zeros((qp, r), jnp.int8).at[:q].set(masks.astype(jnp.int8))
+    masks_p = jnp.zeros((qp, r_eff), jnp.int8).at[:q, :r].set(
+        masks.astype(jnp.int8))
     # Padded columns: stored bits 0; harmless, sliced off.
-    data_p = jnp.zeros((r, cp), jnp.int8).at[:, :c].set(data.astype(jnp.int8))
+    ddt = jnp.uint8 if packed else jnp.int8
+    data_p = jnp.zeros((rp, cp), ddt).at[:, :c].set(data.astype(ddt))
 
     out = pl.pallas_call(
         functools.partial(_xam_search_kernel, scoring=scoring),
         grid=(qp // bq, cp // bc),
         in_specs=[
-            pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
-            pl.BlockSpec((r, bc), lambda i, j: (0, j)),
-            pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, r_eff), lambda i, j: (i, 0)),
+            pl.BlockSpec((rp, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((bq, r_eff), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.int8),
@@ -159,8 +201,11 @@ def _xam_multiset_kernel(block_sets_ref,       # (n_qb,) int32 in SMEM
 
     @pl.when(blk_live)
     def _live_block():
+        plane = plane_ref[0]
+        if plane.dtype == jnp.uint8:          # packed8: unpack in VMEM
+            plane = _unpack_rows(plane)
         match = _match_bitmap(
-            keys_ref[...], masks_ref[...], plane_ref[0], scoring)  # (bq, C)
+            keys_ref[...], masks_ref[...], plane, scoring)      # (bq, C)
         live = match * valid_ref[...]                       # fused validity
         bq, c = live.shape
         pos = jax.lax.broadcasted_iota(jnp.int32, (bq, c), 1)
@@ -198,13 +243,28 @@ def xam_search_multiset_pallas(
     blocks), so both the flat pow2 bucket tail and the stacked sharded
     layout — per-shard prefixes of real blocks, interleaved with pad runs
     when flattened — get a deterministic result at no compute cost for
-    the padding.  None = every block live."""
+    the padding.  None = every block live.
+
+    ``planes`` may instead be ``(n_sets, R // 8, C)`` uint8 packed words
+    (``plane_format="packed8"``, R a multiple of 8): the kernel unpacks
+    each set's plane tile in VMEM, so the HBM->VMEM traffic of the
+    dominant plane operand is ~8x lower and the result is bit-identical.
+    """
     q, r = keys.shape
-    n_sets, r2, c = planes.shape
-    assert r == r2 and masks.shape == keys.shape
+    _check_scoring(scoring)
+    packed = planes.dtype == jnp.uint8
+    n_sets, rp, c = planes.shape
+    if packed:
+        if r != rp * 8:
+            raise ValueError(
+                f"packed planes hold {rp * 8} bit rows but keys have {r}; "
+                "plane_format='packed8' needs key bits padded to a "
+                "multiple of 8")
+    else:
+        assert r == rp
+    assert masks.shape == keys.shape
     assert valid.shape == (n_sets, c)
     assert q % block_q == 0 and block_sets.shape == (q // block_q,)
-    assert scoring in ("int8", "f32"), scoring
     if live_blocks is None:
         live_blocks = jnp.ones(q // block_q, jnp.int32)
     assert live_blocks.shape == (q // block_q,)
@@ -215,11 +275,12 @@ def xam_search_multiset_pallas(
         in_specs=[
             pl.BlockSpec((block_q, r), lambda i, s, nb: (i, 0)),
             pl.BlockSpec((block_q, r), lambda i, s, nb: (i, 0)),
-            pl.BlockSpec((1, r, c), lambda i, s, nb: (s[i], 0, 0)),
+            pl.BlockSpec((1, rp, c), lambda i, s, nb: (s[i], 0, 0)),
             pl.BlockSpec((1, c), lambda i, s, nb: (s[i], 0)),
         ],
         out_specs=pl.BlockSpec((block_q, 1), lambda i, s, nb: (i, 0)),
     )
+    pdt = jnp.uint8 if packed else jnp.int8
     out = pl.pallas_call(
         functools.partial(_xam_multiset_kernel, scoring=scoring),
         grid_spec=grid_spec,
@@ -227,7 +288,7 @@ def xam_search_multiset_pallas(
         interpret=interpret,
     )(block_sets.astype(jnp.int32), live_blocks.astype(jnp.int32),
       keys.astype(jnp.int8), masks.astype(jnp.int8),
-      planes.astype(jnp.int8), valid.astype(jnp.int8))
+      planes.astype(pdt), valid.astype(jnp.int8))
     return out[:, 0]
 
 

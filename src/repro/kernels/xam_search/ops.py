@@ -18,7 +18,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.kernels.common import bucket_pow2
+from repro.kernels import autotune
+from repro.kernels.common import (
+    bucket_pow2, pack_bits_np, plane_format_of, resolve_plane_format)
 from repro.kernels.xam_search.kernel import (
     MULTISET_BLOCK_Q, xam_search_multiset_pallas, xam_search_pallas)
 from repro.kernels.xam_search.ref import xam_search_ref
@@ -38,32 +40,47 @@ LAUNCH_COUNT = 0
 #: the kept per-partition fan-out oracle (``admit_dispatch="fanout"``).
 ADMIT_LAUNCH_COUNT = 0
 
-#: Adaptive query-block policy: batches at/above this many queries use the
-#: wide block (fewer grid steps — the per-step overhead, not the matmul,
-#: dominates small tiles), smaller ones keep MULTISET_BLOCK_Q.  Search
-#: results are layout-independent (first-valid-way per query), so the
-#: width never changes an answer — pinned by the parity matrix.
-WIDE_BLOCK_AT = 256
-WIDE_BLOCK_Q = 64
+#: Adaptive query-block policy, now MEASURED: ``kernels/autotune.py``
+#: answers with the committed per-(shape-bucket, backend, plane-format)
+#: winner, falling back deterministically to the original two-point
+#: heuristic (16 below 256 queries, 64 at/above) when a family is
+#: uncached.  Search results are layout-independent (first-valid-way per
+#: query), so the width never changes an answer — pinned by the parity
+#: matrix and the cold-cache test.
+WIDE_BLOCK_AT = autotune.WIDE_BLOCK_AT
+WIDE_BLOCK_Q = autotune.WIDE_BLOCK_Q
 
 
-def _pick_block_q(n_queries: int, block_q: int | None) -> int:
+def _pick_block_q(n_queries: int, block_q: int | None,
+                  plane_format: str = "int8") -> int:
     if block_q is not None:
         return block_q
-    return MULTISET_BLOCK_Q if n_queries < WIDE_BLOCK_AT else WIDE_BLOCK_Q
+    return autotune.multiset_block_q(n_queries, plane_format)
 
 
 def _resolve_scoring(scoring: str | None) -> str:
     if scoring is None:
         scoring = os.environ.get("REPRO_XAM_SCORING", "int8")
-    assert scoring in ("int8", "f32"), scoring
+    if scoring not in ("int8", "f32"):
+        raise ValueError(
+            f"scoring must be one of ('int8', 'f32'), got {scoring!r} "
+            "(set via the REPRO_XAM_SCORING env knob or the scoring "
+            "argument)")
     return scoring
 
 
 def xam_search(keys, data, masks=None, *, use_kernel: bool = True,
                scoring: str | None = None,
+               plane_format: str | None = None,
                interpret: bool | None = None) -> jnp.ndarray:
-    """Masked CAM search: (Q,R) keys x (R,C) stored bits -> (Q,C) matches."""
+    """Masked CAM search: (Q,R) keys x (R,C) stored bits -> (Q,C) matches.
+
+    ``plane_format`` (None = the ``REPRO_PLANE_FORMAT`` env knob,
+    default ``"int8"``) selects the stored-bit layout: ``"packed8"``
+    packs ``data`` 8 bits per uint8 word along R on the host (R padded
+    to a multiple of 8 with zero bits) and the kernel unpacks in VMEM —
+    bit-identical results, ~8x less plane traffic.  Block shapes come
+    from the autotune cache (``kernels/autotune.py``)."""
     keys = jnp.asarray(keys, jnp.int8)
     data = jnp.asarray(data, jnp.int8)
     if masks is None:
@@ -71,9 +88,20 @@ def xam_search(keys, data, masks=None, *, use_kernel: bool = True,
     masks = jnp.asarray(masks, jnp.int8)
     if not use_kernel:
         return xam_search_ref(keys, data, masks)
+    plane_format = resolve_plane_format(plane_format)
+    if plane_format == "packed8":
+        bits = np.asarray(data, np.int8)
+        r, c = bits.shape
+        rp8 = -(-r // 8) * 8
+        if rp8 != r:
+            bits = np.concatenate(
+                [bits, np.zeros((rp8 - r, c), np.int8)], axis=0)
+        data = jnp.asarray(pack_bits_np(bits, axis=0))
     if interpret is None:
         interpret = not _ON_TPU
+    block_q, block_c = autotune.search_blocks(plane_format)
     return xam_search_pallas(keys, data, masks,
+                             block_q=block_q, block_c=block_c,
                              scoring=_resolve_scoring(scoring),
                              interpret=interpret)
 
@@ -312,17 +340,19 @@ def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
     set_ids : np.ndarray, shape (Q,), int
         Which of the device-resident stored-bit planes each query
         searches; values in ``[0, n_sets)``.
-    planes : jnp.ndarray, shape (n_sets, R, C), int8
-        Device-resident stored bits, one (R, C) plane per CAM set.
+    planes : jnp.ndarray, shape (n_sets, R, C) int8 — or (n_sets, R//8,
+        C) uint8 packed words (``plane_format="packed8"``; the kernel
+        unpacks per tile in VMEM, bit-identical results).  The dtype IS
+        the format tag.
     valid : jnp.ndarray, shape (n_sets, C), int8
         Per-way validity; dead ways are masked inside the kernel so they
         never produce hits.
     block_q, scoring, interpret
-        Kernel tile width (None = adaptive: ``WIDE_BLOCK_Q`` at/above
-        ``WIDE_BLOCK_AT`` queries, else ``MULTISET_BLOCK_Q`` — the
-        answer is width-independent), MXU arithmetic ("int8" default /
-        "f32"), and Pallas interpret-mode flag (defaults to True
-        off-TPU).
+        Kernel tile width (None = the autotune-cache winner for this
+        batch's shape bucket and plane format, falling back to the
+        16/64 two-point heuristic — the answer is width-independent),
+        MXU arithmetic ("int8" default / "f32"), and Pallas
+        interpret-mode flag (defaults to True off-TPU).
 
     Returns
     -------
@@ -333,7 +363,8 @@ def xam_search_multiset(key_bits: np.ndarray, set_ids: np.ndarray,
         interpret = not _ON_TPU
     out, slot = _multiset_dispatch(
         key_bits, set_ids, planes, valid,
-        block_q=_pick_block_q(len(set_ids), block_q),
+        block_q=_pick_block_q(len(set_ids), block_q,
+                              plane_format_of(planes)),
         scoring=_resolve_scoring(scoring), interpret=interpret)
     return np.asarray(out)[slot]
 
@@ -384,7 +415,8 @@ def xam_search_multiset_stacked(key_bits: np.ndarray, set_ids: np.ndarray,
         Host-side query bit rows.
     set_ids : np.ndarray, shape (Q,), int
         GLOBAL physical set ids in ``[0, n_sets)``.
-    planes : jnp.ndarray, shape (n_sets, R, C), int8
+    planes : jnp.ndarray, shape (n_sets, R, C) int8 (or packed uint8 —
+        see :func:`xam_search_multiset`)
         Stored bits for ALL sets.  With ``mesh`` this must be sharded
         ``P("sets")`` over it (contiguous blocks, shard k's sets on mesh
         device k — the layout ``MonarchKVIndex`` assembles zero-copy from
@@ -422,7 +454,7 @@ def xam_search_multiset_stacked(key_bits: np.ndarray, set_ids: np.ndarray,
     if interpret is None:
         interpret = not _ON_TPU
     scoring = _resolve_scoring(scoring)
-    block_q = _pick_block_q(len(set_ids), block_q)
+    block_q = _pick_block_q(len(set_ids), block_q, plane_format_of(planes))
     key_bits = np.asarray(key_bits, np.int8)
     n_sets = planes.shape[0]
     r = key_bits.shape[1]
@@ -530,7 +562,8 @@ def xam_search_multiset_sharded(key_bits: np.ndarray, set_ids: np.ndarray,
         out, slot = _multiset_dispatch(
             key_bits[sel], set_ids[sel] - int(k) * s_local,
             planes_by_shard[int(k)], valid_by_shard[int(k)],
-            block_q=_pick_block_q(sel.size, block_q),
+            block_q=_pick_block_q(sel.size, block_q,
+                                  plane_format_of(planes_by_shard[0])),
             scoring=scoring, interpret=interpret)
         pending.append((sel, slot, out))
     ways = np.empty(set_ids.shape[0], np.int32)

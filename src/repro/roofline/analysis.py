@@ -14,12 +14,55 @@ reduce-scatter / all-to-all / collective-permute.
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 
 # v5e hardware constants (per chip), per the assignment.
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s/link (~45GB/s eff; assignment: ~50)
+
+#: Env knob selecting the machine profile by name (``MACHINES`` keys).
+MACHINE_ENV = "REPRO_MACHINE"
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Per-chip peak rates a roofline is drawn against.
+
+    The v5e numbers are the assignment's constants above; ``cpu-interpret``
+    is a deliberately coarse host profile (one modern server core's DRAM
+    stream + vector peak, order-of-magnitude only) so interpret-mode bench
+    runs report an achieved-bandwidth *fraction* against a ceiling that is
+    at least the right power of ten — CI uses it to sanity-bound the
+    packed-kernel traffic numbers, never to compare against TPU rooflines.
+    """
+
+    name: str
+    peak_flops: float        # FLOP/s
+    hbm_bw: float            # bytes/s (main-memory stream bandwidth)
+    ici_bw: float            # bytes/s/link (interconnect; 0 = none)
+
+
+MACHINES: dict[str, Machine] = {
+    "v5e": Machine("v5e", PEAK_FLOPS, HBM_BW, ICI_BW),
+    "cpu-interpret": Machine("cpu-interpret", 5e10, 2e10, 1e10),
+}
+
+
+def current_machine() -> Machine:
+    """Active machine profile: ``REPRO_MACHINE`` if set (ValueError on an
+    unknown name), else ``v5e`` on TPU and ``cpu-interpret`` elsewhere."""
+    name = os.environ.get(MACHINE_ENV)
+    if name is not None:
+        if name not in MACHINES:
+            raise ValueError(
+                f"{MACHINE_ENV}={name!r} is not a known machine profile; "
+                f"valid values: {sorted(MACHINES)}")
+        return MACHINES[name]
+    import jax
+    return MACHINES["v5e" if jax.default_backend() == "tpu"
+                    else "cpu-interpret"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1,
@@ -170,12 +213,17 @@ class Roofline:
 
 
 def analyze(cost: dict, coll: dict, *, model_flops_per_device: float,
-            jaxpr_flops_per_device: float | None = None) -> Roofline:
+            jaxpr_flops_per_device: float | None = None,
+            machine: Machine | None = None) -> Roofline:
     """Derive the three terms.  ``cost_analysis`` counts while/scan bodies
     ONCE (verified; see jaxpr_cost.py), so when a jaxpr-derived count is
     supplied we use it for the compute term and scale the compiled byte
     count by the same body-repeat factor (the scanned layer groups dominate
-    both flops and HBM traffic)."""
+    both flops and HBM traffic).  ``machine`` defaults to the v5e profile
+    (the dry-run artifacts target that part); pass ``current_machine()``
+    to roofline against the active backend instead."""
+    if machine is None:
+        machine = MACHINES["v5e"]
     raw_flops = float(cost.get("flops", 0.0))
     raw_bytes = float(cost.get("bytes accessed", 0.0))
     if jaxpr_flops_per_device and raw_flops > 0:
@@ -188,9 +236,9 @@ def analyze(cost: dict, coll: dict, *, model_flops_per_device: float,
     hbm = raw_bytes * factor
     cb = float(coll.get("total", 0))
     terms = {
-        "compute": flops / PEAK_FLOPS,
-        "memory": hbm / HBM_BW,
-        "collective": cb / ICI_BW,
+        "compute": flops / machine.peak_flops,
+        "memory": hbm / machine.hbm_bw,
+        "collective": cb / machine.ici_bw if machine.ici_bw else 0.0,
     }
     bottleneck = max(terms, key=terms.get)
     return Roofline(

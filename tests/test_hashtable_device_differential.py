@@ -132,5 +132,42 @@ def test_device_backend_without_wear_tracking():
         dev.wear_report()
 
 
+def test_plane_format_knob_is_validated_identity():
+    """The serving stack's ``plane_format`` knob is accepted here for
+    symmetry, but the hopscotch device planes ALREADY store 8 bits per
+    byte (split uint32 words), so ``packed8`` must be a validated no-op:
+    a packed8 device table replays a schedule bit-identically to the
+    default — same buckets, same stats, same §8 wear trace."""
+    wc = wear.WearConfig(n_supersets=8, t_mww_cycles=64,
+                         blocks_per_superset=4)
+    dev = HopscotchTable(6, window=8, wear_cfg=wc, backend="device")
+    dev_p = HopscotchTable(6, window=8, wear_cfg=wc, backend="device",
+                           plane_format="packed8")
+    assert dev_p.plane_format == "packed8"
+    rng = np.random.default_rng(3)
+    keys = rng.choice(np.arange(1, 1 << 16, dtype=np.uint64), size=40,
+                      replace=False)
+    for i, k in enumerate(keys):
+        assert dev.insert(int(k), i) == dev_p.insert(int(k), i)
+    for k in keys[::3]:
+        assert dev.delete(int(k)) == dev_p.delete(int(k))
+    dev._sync_host()
+    dev_p._sync_host()
+    np.testing.assert_array_equal(dev.keys, dev_p.keys)
+    np.testing.assert_array_equal(dev.vals, dev_p.vals)
+    assert (dataclasses.astuple(dev.stats)
+            == dataclasses.astuple(dev_p.stats))
+    assert dev.wear_report() == dev_p.wear_report()
+
+
+def test_constructor_knobs_raise_value_error():
+    """Bad knob values raise ValueError naming the knob and the valid
+    values — never a bare assert (``python -O`` elides those)."""
+    with pytest.raises(ValueError, match="backend"):
+        HopscotchTable(5, backend="gpu")
+    with pytest.raises(ValueError, match="plane_format"):
+        HopscotchTable(5, plane_format="packed16")
+
+
 if __name__ == "__main__":
     raise SystemExit(pytest.main([__file__, "-q"]))

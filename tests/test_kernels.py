@@ -437,6 +437,157 @@ def test_batched_block_sizes_meet_floor():
 
 
 # ---------------------------------------------------------------------------
+# Packed bit-planes (plane_format="packed8"): planes stored 8 logical bits
+# per uint8 word along R, unpacked in VMEM per tile.  The contract is
+# BIT-IDENTITY with the int8 planes across the whole parity envelope —
+# packing is a storage re-layout, never a semantic change.
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip(rng):
+    from repro.kernels.common import pack_bits_np, unpack_bits_np
+    bits = rng.integers(0, 2, (40, 96)).astype(np.int8)
+    packed = pack_bits_np(bits, axis=0)
+    assert packed.dtype == np.uint8 and packed.shape == (5, 96)
+    np.testing.assert_array_equal(unpack_bits_np(packed, axis=0), bits)
+    # LSB-first: logical row r -> word r//8, bit r%8 (words_to_bits order)
+    col = np.zeros((8, 1), np.int8)
+    col[0, 0] = 1
+    col[2, 0] = 1
+    assert pack_bits_np(col, axis=0)[0, 0] == 5
+
+
+def test_pack_bits_rejects_ragged_axis():
+    from repro.kernels.common import pack_bits_np
+    with pytest.raises(ValueError, match="multiple of 8"):
+        pack_bits_np(np.zeros((7, 4), np.int8), axis=0)
+
+
+def test_plane_format_knob_validation():
+    from repro.kernels.common import (PLANE_FORMAT_ENV, plane_format_of,
+                                      resolve_plane_format)
+    with pytest.raises(ValueError, match=PLANE_FORMAT_ENV):
+        resolve_plane_format("packed16")
+    with pytest.raises(ValueError, match="dtype"):
+        plane_format_of(jnp.zeros((1, 8, 8), jnp.float32))
+    assert plane_format_of(jnp.zeros((1, 8, 8), jnp.int8)) == "int8"
+    assert plane_format_of(jnp.zeros((1, 1, 8), jnp.uint8)) == "packed8"
+
+
+def test_plane_format_env_knob_validation(monkeypatch):
+    from repro.kernels.common import PLANE_FORMAT_ENV, resolve_plane_format
+    monkeypatch.setenv(PLANE_FORMAT_ENV, "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        resolve_plane_format(None)
+    monkeypatch.setenv(PLANE_FORMAT_ENV, "packed8")
+    assert resolve_plane_format(None) == "packed8"
+
+
+def _packed_planes(planes):
+    from repro.kernels.common import pack_bits_np
+    return jnp.asarray(pack_bits_np(planes, axis=1))
+
+
+@pytest.mark.parametrize("scoring", ["int8", "f32"])
+@pytest.mark.parametrize("r", [16, 24, 32])
+@pytest.mark.parametrize("n_q,n_sets", [
+    (1, 1), (5, 3), (13, 8), (31, 5), (100, 6),
+])
+def test_xam_multiset_packed_parity_matrix(n_q, n_sets, r, scoring, rng):
+    """PR-3's parity matrix rerun with packed planes: ragged/non-pow2
+    batches, empty sets, a query-less set, both scorings, three key
+    widths — packed == int8 == per-set reference, bit for bit."""
+    c = 96
+    planes, valid, bits, sets = _random_multiset(rng, n_sets, r, c, n_q)
+    valid[::2] = 0
+    if n_sets > 1:
+        sets[sets == n_sets - 1] = 0
+    got_p = np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, _packed_planes(planes), jnp.asarray(valid),
+        scoring=scoring))
+    got_i = np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, jnp.asarray(planes), jnp.asarray(valid),
+        scoring=scoring))
+    np.testing.assert_array_equal(got_p, got_i)
+    np.testing.assert_array_equal(
+        got_p, _per_set_reference(bits, sets, planes, valid))
+
+
+@pytest.mark.parametrize("scoring", ["int8", "f32"])
+def test_xam_multiset_packed_all_sets_empty(scoring, rng):
+    n_sets, r, c = 4, 16, 128
+    planes = np.zeros((n_sets, r, c), np.int8)
+    valid = np.zeros((n_sets, c), np.int8)
+    bits = xam_ops.words_to_bits_np(
+        rng.integers(0, 2 ** 32, 11, dtype=np.uint32), r)
+    sets = rng.integers(0, n_sets, 11).astype(np.int32)
+    got = np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, _packed_planes(planes), jnp.asarray(valid),
+        scoring=scoring))
+    assert (got == -1).all()
+
+
+def test_xam_multiset_packed_rejects_ragged_rows(rng):
+    """Packed planes carry no row count of their own, so R must be
+    exactly 8x the packed rows — a 20-bit key can't ride a packed plane."""
+    planes = np.zeros((2, 3, 64), np.uint8)      # 24 packed rows
+    bits = np.zeros((4, 20), np.int8)            # but 20-bit keys
+    with pytest.raises(ValueError, match="multiple of 8|packed"):
+        xam_ops.xam_search_multiset(
+            bits, np.zeros(4, np.int32), jnp.asarray(planes),
+            jnp.asarray(np.zeros((2, 64), np.int8)))
+
+
+@pytest.mark.parametrize("q,r,c", [(3, 64, 512), (16, 32, 100), (130, 64, 513),
+                                   (5, 33, 64)])
+def test_xam_search_packed_matches_int8(q, r, c, rng):
+    """Flat search with packed data planes (host pads ragged R to x8 with
+    zero bits; mask-0 pad rows are inert) == the int8 path."""
+    keys = rng.integers(0, 2, (q, r)).astype(np.int8)
+    data = rng.integers(0, 2, (r, c)).astype(np.int8)
+    masks = rng.integers(0, 2, (q, r)).astype(np.int8)
+    got_p = np.asarray(xam_ops.xam_search(
+        keys, data, masks, plane_format="packed8"))
+    got_i = np.asarray(xam_ops.xam_search(
+        keys, data, masks, plane_format="int8"))
+    np.testing.assert_array_equal(got_p, got_i)
+
+
+@pytest.mark.parametrize("n_parts", [1, 2, 4])
+@pytest.mark.parametrize("case", ["mixed", "one_shard_skew", "empty_shards"])
+def test_xam_stacked_packed_parity(case, n_parts, rng):
+    """The stacked single-dispatch layout with packed planes, over the
+    shard-edge shapes, == per-set reference == flat packed kernel."""
+    n_sets, r, c, n_q = 8, 24, 96, 33
+    planes, valid, bits, sets = _random_multiset(rng, n_sets, r, c, n_q)
+    s_part = n_sets // n_parts
+    if case == "one_shard_skew":
+        sets = (sets % s_part) + (n_parts - 1) * s_part
+    elif case == "empty_shards":
+        sets = np.where(sets % 2 == 0, 0, n_sets - 1).astype(sets.dtype)
+    got = np.asarray(xam_ops.xam_search_multiset_stacked(
+        bits, sets, _packed_planes(planes), jnp.asarray(valid),
+        n_parts=n_parts))
+    np.testing.assert_array_equal(
+        got, _per_set_reference(bits, sets, planes, valid))
+    np.testing.assert_array_equal(got, np.asarray(xam_ops.xam_search_multiset(
+        bits, sets, _packed_planes(planes), jnp.asarray(valid))))
+
+
+def test_packed_view_matches_kernel_packing(rng):
+    """The functional-model layout twins (core.xam.packed_view) agree with
+    the kernel-side numpy packer — ONE packing contract, two layers."""
+    from repro.core import xam as xam_model
+    from repro.kernels.common import pack_bits_np
+    bits = rng.integers(0, 2, (32, 64)).astype(np.int8)
+    np.testing.assert_array_equal(
+        np.asarray(xam_model.packed_view(jnp.asarray(bits))),
+        pack_bits_np(bits, axis=0))
+    np.testing.assert_array_equal(
+        np.asarray(xam_model.unpacked_view(
+            xam_model.packed_view(jnp.asarray(bits)))), bits)
+
+
+# ---------------------------------------------------------------------------
 # hopscotch
 # ---------------------------------------------------------------------------
 

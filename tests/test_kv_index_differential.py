@@ -276,5 +276,114 @@ def test_stacked_layout_caps_jit_cache_growth():
     assert xam_search_multiset_pallas._cache_size() <= n_buckets + 1
 
 
+# ---------------------------------------------------------------------------
+# Packed planes (plane_format="packed8") vs the int8 layout: the SAME
+# randomized schedules replayed through both formats must agree on every
+# lookup result and every piece of state — with the stored planes compared
+# through the unpack (the only field whose raw bytes legitimately differ).
+# ---------------------------------------------------------------------------
+
+def _format_pair(n_shards: int, **kw):
+    base = dict(n_sets=8, set_ways=8, admit_after_reads=1, m_writes=2,
+                window_ops=256, rotate_every=1 << 30)
+    base.update(kw)
+    return (MonarchKVIndex(KVIndexConfig(
+                n_shards=n_shards, plane_format="packed8", **base)),
+            MonarchKVIndex(KVIndexConfig(
+                n_shards=n_shards, plane_format="int8", **base)))
+
+
+def _state_unpacked(idx: MonarchKVIndex) -> dict:
+    from repro.kernels.common import unpack_bits_np
+    s = _state(idx)
+    if s["bits"].dtype == np.uint8:
+        s["bits"] = unpack_bits_np(s["bits"], idx.cfg.key_bits, axis=1)
+    return s
+
+
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_differential_packed_vs_int8_step_trace(seed, n_shards):
+    """Randomized admit / re-offer / lookup / rotate schedule through a
+    packed8 index and an int8 index side by side: identical hits, shadow
+    maps, wear, stats, and (unpacked) stored planes after EVERY op."""
+    rng = np.random.default_rng(seed)
+    packed, plain = _format_pair(n_shards)
+    assert packed.bits.dtype == np.uint8 and plain.bits.dtype == np.int8
+    for step in range(10):
+        toks = rng.integers(1, 600, (2, 6 * CHUNK_TOKENS)).astype(np.int32)
+        op = rng.random()
+        if op < 0.55:
+            fps = np.unique(
+                fingerprint_blocks(toks, CHUNK_TOKENS).reshape(-1))
+            packed.admit_fps(fps)
+            plain.admit_fps(fps)
+            if op < 0.35:
+                packed.admit_fps(fps)
+                plain.admit_fps(fps)
+        elif op < 0.85:
+            np.testing.assert_array_equal(packed.lookup(toks),
+                                          plain.lookup(toks))
+        else:
+            packed._rotate()
+            plain._rotate()
+        _assert_same(_state_unpacked(packed), _state_unpacked(plain),
+                     f"seed={seed} step={step} n_shards={n_shards}")
+        assert packed.wear_report() == plain.wear_report(), (seed, step)
+    assert packed.stats.admissions > 0
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_differential_packed_rotation_boundary_exchange(n_shards):
+    """Rotation-heavy packed differential: repeated set+7 remaps push
+    residents across shard edges; the ppermute boundary exchange carries
+    uint8 words instead of int8 bit rows and must land bit-identically."""
+    packed, plain = _format_pair(n_shards, admit_after_reads=0, set_ways=16)
+    fps = np.arange(1, 257, dtype=np.uint32)
+    packed.admit_fps(fps)
+    plain.admit_fps(fps)
+    for rot in range(3):
+        packed._rotate()
+        plain._rotate()
+        _assert_same(_state_unpacked(packed), _state_unpacked(plain),
+                     f"n_shards={n_shards} rot={rot}")
+        # every resident must still be found by the packed device search
+        key_bits = xam_ops.words_to_bits_np(fps, packed.cfg.key_bits)
+        sets = packed._set_of(fps)
+        if packed._use_shard_map and packed.n_parts > 1:
+            ways = xam_ops.xam_search_multiset_stacked(
+                key_bits, sets, packed._assemble(packed._bits),
+                packed._assemble(packed._valid), mesh=packed.set_mesh)
+        else:
+            ways = xam_ops.xam_search_multiset(
+                key_bits, sets, packed._bits[0], packed._valid[0])
+        np.testing.assert_array_equal(
+            np.asarray(ways) >= 0, packed._shadow_hits(fps))
+    assert packed.stats.rotations == 3
+
+
+def test_packed_requires_byte_aligned_keys():
+    """key_bits not divisible by 8 cannot ride packed planes — the config
+    must say so up front, naming the knob."""
+    with pytest.raises(ValueError, match="key_bits"):
+        MonarchKVIndex(KVIndexConfig(n_sets=8, key_bits=20,
+                                     plane_format="packed8"))
+
+
+def test_packed_install_column_is_fingerprint_bytes():
+    """Layout pin: with 32-bit keys a packed stored column IS the
+    fingerprint's little-endian bytes (LSB-first packing == LSB-first
+    words_to_bits) — the on-disk-obvious identity ARCHITECTURE.md
+    documents."""
+    idx = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=0,
+                                       plane_format="packed8"))
+    fp = np.uint32(0xDEADBEEF)
+    idx.admit_fps(np.asarray([fp], np.uint32))
+    (s, w), = [idx.slot_of[int(fp)]]
+    col = np.asarray(idx.bits)[s, :, w]
+    np.testing.assert_array_equal(
+        col, np.frombuffer(np.uint32(fp).tobytes(), np.uint8))
+
+
 if __name__ == "__main__":
     raise SystemExit(pytest.main([__file__, "-q"]))

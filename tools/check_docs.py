@@ -34,6 +34,8 @@ DOC_FILES = ["README.md", *sorted(
 DOCTEST_MODULES = [
     "repro.core.geometry",
     "repro.core.wear",
+    "repro.core.xam",
+    "repro.kernels.common",
     "repro.kernels.xam_search.ops",
     "repro.serve.kv_index",
     "repro.serve.admit_queue",
