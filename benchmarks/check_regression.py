@@ -25,6 +25,12 @@ Two extra ``kernels`` gates beyond the per-entry thresholds:
   ``achieved_bytes_per_s`` / positive ``roofline_fraction``) — structural,
   always fatal: losing it silently would unpin the bandwidth claims.
 
+A third coverage leg, ``serve`` (``BENCH_serve.json`` from
+``serve_bench``): the Poisson p50/p99 latencies are timings (threshold
+plus ``BENCH_WARN_ONLY``, like the kernel medians), but the artifact's
+SHAPE — >=2 offered-rate legs, each with latency/goodput/shed/hit fields
+— is structural and always fatal, exactly like the roofline section.
+
 Artifacts present in only one file are reported but never fatal (new
 benches land before their baseline is refreshed; a missing figure baseline
 is skipped).  Set ``BENCH_WARN_ONLY=1`` to downgrade failures to warnings
@@ -113,6 +119,58 @@ def packed_gate(baseline: dict[str, float],
     return out
 
 
+SERVE_REQUIRED = ("offered_rps", "n_requests", "p50_ms", "p99_ms",
+                  "goodput_rps", "shed_rate", "hit_rate")
+
+
+def serve_structural_gate(doc: dict) -> list[str]:
+    """Structural check on ``BENCH_serve.json`` — always fatal.
+
+    The serving-front-end acceptance bar: Poisson legs at >= 2 distinct
+    offered rates, each carrying the full latency/goodput/shed/hit field
+    set with sane values.  Losing a field (or a rate point) silently
+    would unpin the request-level SLO story."""
+    legs = doc.get("poisson")
+    if not isinstance(legs, list) or len(legs) < 2:
+        return ["  serve.poisson: expected >=2 offered-rate legs, got "
+                f"{legs if legs is None else len(legs)!r}"]
+    bad = []
+    for i, leg in enumerate(legs):
+        for field in SERVE_REQUIRED:
+            v = leg.get(field)
+            if not isinstance(v, (int, float)):
+                bad.append(f"  serve.poisson[{i}].{field}: {v!r} "
+                           "(expected a number)")
+        for field in ("shed_rate", "hit_rate"):
+            v = leg.get(field)
+            if isinstance(v, (int, float)) and not 0.0 <= v <= 1.0:
+                bad.append(f"  serve.poisson[{i}].{field}: {v} "
+                           "(expected a fraction in [0, 1])")
+        p50, p99 = leg.get("p50_ms"), leg.get("p99_ms")
+        if (isinstance(p50, (int, float)) and isinstance(p99, (int, float))
+                and p50 > p99):
+            bad.append(f"  serve.poisson[{i}]: p50 {p50} > p99 {p99}")
+    rates = [leg.get("offered_rps") for leg in legs]
+    if len(set(rates)) < 2:
+        bad.append(f"  serve.poisson: offered rates {rates} are not "
+                   ">=2 distinct points")
+    return bad
+
+
+def serve_latencies(doc: dict) -> dict[str, float]:
+    """p50/p99 per Poisson leg, keyed for :func:`compare` (timing gate:
+    threshold-based, downgradable via ``BENCH_WARN_ONLY``)."""
+    out = {}
+    for leg in doc.get("poisson", []):
+        rate = leg.get("offered_rps")
+        for field in ("p50_ms", "p99_ms"):
+            v = leg.get(field)
+            if isinstance(v, (int, float)) and isinstance(rate, (int, float)):
+                key = f"serve.{rate:g}rps.{field.removesuffix('_ms')}"
+                out[key] = float(v) * 1e3            # ms -> us for compare
+    return out
+
+
 def roofline_gate(path: str) -> list[str]:
     """Structural check on the roofline section of the current artifact."""
     with open(path) as f:
@@ -142,8 +200,22 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     warn_only = os.environ.get("BENCH_WARN_ONLY", "") not in ("", "0")
-    base_medians = load_medians(args.baseline)
-    cur_medians = load_medians(args.current)
+    try:
+        base_medians = load_medians(args.baseline)
+        cur_medians = load_medians(args.current)
+    except FileNotFoundError as e:
+        # A missing artifact is an operator error (benches not run /
+        # wrong path), not a crash: say which file, what to do, and what
+        # IS there, then fail the gate.
+        found = sorted(
+            f for d in {os.path.dirname(os.path.abspath(e.filename)), HERE}
+            if os.path.isdir(d)
+            for f in os.listdir(d) if f.startswith("BENCH_"))
+        print(f"[perf-smoke] ERROR: artifact not found: {e.filename} — "
+              "run `PYTHONPATH=src python -m benchmarks.run --quick --only "
+              "kernels_bench` first (artifacts found: "
+              f"{', '.join(found) if found else 'none'})")
+        return 1
     regressions, notes = compare(base_medians, cur_medians, args.threshold)
     regressions += packed_gate(base_medians, cur_medians)
     print(f"[perf-smoke] baseline: {args.baseline}")
@@ -168,6 +240,30 @@ def main(argv=None) -> int:
     # grouped with the claim checks.
     if os.path.exists(args.current):
         fig_regressions += roofline_gate(args.current)
+
+    # Serving front end: structural gate on the fresh artifact (always
+    # fatal), latency thresholds against the committed baseline (timing
+    # — warn-only downgradable like the kernel medians).
+    serve_cur = os.path.join(os.path.dirname(os.path.abspath(args.current))
+                             if args.current != DEFAULT_CURRENT else HERE,
+                             "BENCH_serve.json")
+    serve_base = os.path.join(HERE, "baselines", "BENCH_serve.json")
+    if os.path.exists(serve_cur):
+        with open(serve_cur) as f:
+            serve_doc = json.load(f)
+        fig_regressions += serve_structural_gate(serve_doc)
+        if os.path.exists(serve_base):
+            with open(serve_base) as f:
+                base_doc = json.load(f)
+            r, n = compare(serve_latencies(base_doc),
+                           serve_latencies(serve_doc), args.threshold)
+            regressions += r
+            notes += n
+        else:
+            notes.append("  serve: no committed baseline, latency "
+                         "thresholds skipped")
+    else:
+        notes.append("  serve: artifact missing, skipped")
 
     for line in notes:
         print(line)

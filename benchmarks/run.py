@@ -11,6 +11,9 @@ Modules (paper artifact -> bench):
     §10.5          -> string_match       (Phoenix String-Match, C6)
     kernels        -> kernels_bench      (Pallas kernels us/call + KV index
                                           lookup/admit + wear-op microbench)
+    front end      -> serve_bench        (open-loop request latency: Poisson
+                                          + burst-trace arrivals, p50/p99,
+                                          goodput, shed rate)
     §Roofline      -> roofline_summary   (dry-run three-term table)
 
 Each module appends ``name,us_per_call,derived`` CSV rows; the combined CSV
@@ -29,8 +32,8 @@ import time
 from repro.bench import BenchSizes
 
 from benchmarks import (fig9_cache, fig11_lifetime, fig12_14_hashing,
-                        kernels_bench, roofline_summary, string_match,
-                        table1_tech)
+                        kernels_bench, roofline_summary, serve_bench,
+                        string_match, table1_tech)
 
 CSV_PATH = os.path.join(os.path.dirname(__file__), "results.csv")
 
@@ -71,6 +74,7 @@ def main(argv=None) -> None:
             rows, n_requests=sizes.fig_requests, quick=args.quick)),
         ("fig12_14_hashing", lambda rows: fig12_14_hashing.run(
             rows, quick=args.quick)),
+        ("serve_bench", lambda rows: serve_bench.run(rows, quick=args.quick)),
         ("string_match", lambda rows: string_match.run(rows)),
         ("roofline_summary", lambda rows: roofline_summary.run(rows)),
     ]

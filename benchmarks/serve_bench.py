@@ -1,0 +1,205 @@
+"""Open-loop serving front-end benchmark: request latency under load.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only serve_bench
+
+Drives :func:`repro.launch.serve.run_request_loop` — the SAME loop the
+production launcher runs — with synthetic request batches and OPEN-LOOP
+arrival schedules: Poisson arrivals at two offered rates (underload and
+overload relative to this rig's measured service time) plus a replayed
+bursty trace.  Open-loop means a request's latency is charged from its
+SCHEDULED arrival, so backlog shows up as queueing delay in p99 instead
+of being hidden by the loop slowing its own arrival process
+(coordinated omission).
+
+Per leg the bench reports, into ``BENCH_serve.json``:
+
+* ``offered_rps`` / ``goodput_rps`` — scheduled vs completed throughput
+  (goodput counts requests whose admission was not dropped).
+* ``p50_ms`` / ``p99_ms`` / ``mean_ms`` — front-end latency (lookup +
+  service proxy + admission submit, queueing included).
+* ``shed_rate`` — fingerprints shed at the ``max_pending`` bound over
+  fingerprints accepted (``policy="shed"`` back-pressure).
+* ``hit_rate`` — index prefix-chunk hit rate for the leg.
+
+The index runs ``clock="wall"`` (the t_MWW admission window is a real
+time budget — this is the latency-era serving configuration) behind a
+bounded ``AdmitQueue``.  The service proxy is a small jitted matmul
+standing in for prefill/decode compute: it releases the GIL inside XLA
+exactly like the real model steps, so the admission worker overlaps it
+the same way.  Model quality is irrelevant here — the bench measures
+the FRONT END (index + queue), not the transformer.
+
+Latency thresholds against the committed baseline honor
+``BENCH_WARN_ONLY`` like every timing; the structural gate on the
+artifact (required fields, >=2 Poisson rates) is always fatal — see
+``check_regression.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.emit import emit_json
+from repro.launch.serve import run_request_loop
+from repro.serve.admit_queue import AdmitQueue
+from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+
+#: Offered Poisson rates (requests/s): an underload point and a point
+#: chosen to overrun interpret-mode service times, so p99 shows queueing.
+OFFERED_RATES = (50.0, 400.0)
+#: Admission back-pressure for every leg: shed-oldest at this bound.
+MAX_PENDING = 64
+#: Prompt shape: ``PREFIX_CHUNKS`` chunks shared across all requests (the
+#: hit traffic) + ``TAIL_CHUNKS`` fresh chunks per request (the working
+#: set that ages the index).
+PREFIX_CHUNKS = 4
+TAIL_CHUNKS = 2
+
+
+def _requests(n: int, seed: int) -> list[np.ndarray]:
+    """One (1, S) token batch per request: shared prefix + fresh tail."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, 1 << 15, (1, PREFIX_CHUNKS * CHUNK_TOKENS))
+    out = []
+    for _ in range(n):
+        tail = rng.integers(1, 1 << 15, (1, TAIL_CHUNKS * CHUNK_TOKENS))
+        out.append(np.concatenate([prefix, tail], axis=1).astype(np.int32))
+    return out
+
+
+def _poisson_arrivals(n: int, rate_rps: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, n))
+
+
+def _trace_arrivals(n: int) -> np.ndarray:
+    """Replayed bursty trace: ``REPRO_SERVE_TRACE`` (a JSON list of
+    arrival offsets in seconds) when set, else the built-in burst
+    pattern — groups of 8 back-to-back requests (2 ms spacing) separated
+    by 60 ms idle gaps, the on/off shape Poisson cannot produce."""
+    path = os.environ.get("REPRO_SERVE_TRACE")
+    if path:
+        with open(path) as f:
+            arr = np.asarray(json.load(f), dtype=float)[:n]
+        return arr
+    burst, gap_s, step_s = 8, 0.060, 0.002
+    t, out = 0.0, []
+    while len(out) < n:
+        out.extend(t + i * step_s for i in range(burst))
+        t += gap_s
+    return np.asarray(out[:n])
+
+
+def _mk_frontend() -> AdmitQueue:
+    """Fresh wall-clock index behind a bounded shed-policy queue."""
+    idx = MonarchKVIndex(KVIndexConfig.with_lifetime(
+        t_life_years=10.0, clock="wall", n_sets=8, set_ways=64,
+        admit_after_reads=0, rotate_every=1 << 30))
+    return AdmitQueue(idx, max_pending=MAX_PENDING, policy="shed")
+
+
+def _service_proxy():
+    """Jitted stand-in for prefill/decode compute (releases the GIL)."""
+    w = jnp.ones((192, 192), jnp.float32)
+
+    @jax.jit
+    def step(x):
+        return (x @ w).sum()
+
+    step(w).block_until_ready()              # compile outside the timing
+
+    def prefill(toks, hits):
+        return step(w)
+
+    def decode(toks, state):
+        jax.block_until_ready(state)
+
+    return prefill, decode
+
+
+def _run_leg(requests, arrivals_s, *, label: str) -> dict:
+    q = _mk_frontend()
+    prefill, decode = _service_proxy()
+    try:
+        recs = run_request_loop(q, requests, prefill_fn=prefill,
+                                decode_fn=decode, arrivals_s=arrivals_s)
+        q.flush()                            # all admissions accounted
+    finally:
+        q.close()
+    lat_ms = np.asarray([r.latency_s for r in recs]) * 1e3
+    makespan = max(recs[-1].done_s - recs[0].arrival_s, 1e-9)
+    s = q.stats
+    leg = {
+        "n_requests": len(recs),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "mean_ms": round(float(lat_ms.mean()), 3),
+        "goodput_rps": round(
+            sum(1 for r in recs if not r.dropped) / makespan, 2),
+        "shed_rate": round(s.shed_fps / max(s.submitted, 1), 4),
+        "hit_rate": round(float(q.index.hit_rate), 4),
+    }
+    print(f"[serve_bench] {label}: p50 {leg['p50_ms']:.1f} ms, "
+          f"p99 {leg['p99_ms']:.1f} ms, goodput {leg['goodput_rps']:.0f} "
+          f"req/s, shed {leg['shed_rate']:.1%}, hit {leg['hit_rate']:.0%}")
+    return leg
+
+
+def _warmup(n: int) -> None:
+    """Compile the index lookup/admit kernels and the service proxy on a
+    throwaway front end, so no timed leg pays jit compilation (the jit
+    cache is global and every leg uses identical shapes).  Runs the SAME
+    request count as the timed legs: a fuller index reaches admission
+    paths (e.g. the first hopscotch displacement) that only compile once
+    enough distinct fingerprints have been installed — a short warmup
+    leaves a one-time ~0.5 s stall inside the first timed leg."""
+    q = _mk_frontend()
+    prefill, decode = _service_proxy()
+    try:
+        run_request_loop(q, _requests(n, seed=7), prefill_fn=prefill,
+                         decode_fn=decode)
+        q.flush()
+    finally:
+        q.close()
+
+
+def run(csv_rows: list[str], quick: bool = False) -> dict:
+    n = 32 if quick else 128
+    _warmup(n)
+    poisson = []
+    for rate in OFFERED_RATES:
+        leg = _run_leg(_requests(n, seed=7),
+                       _poisson_arrivals(n, rate, seed=11),
+                       label=f"poisson {rate:g} req/s")
+        leg["offered_rps"] = rate
+        poisson.append(leg)
+        csv_rows.append(f"serve_poisson_{rate:g}rps,{leg['p50_ms'] * 1e3:.1f}"
+                        f",p99_ms={leg['p99_ms']}")
+    trace = _run_leg(_requests(n, seed=7), _trace_arrivals(n),
+                     label="burst trace")
+    trace["offered_rps"] = round(
+        len(_trace_arrivals(n)) / max(_trace_arrivals(n)[-1], 1e-9), 2)
+    csv_rows.append(f"serve_trace,{trace['p50_ms'] * 1e3:.1f}"
+                    f",p99_ms={trace['p99_ms']}")
+    payload = {
+        "poisson": poisson,
+        "trace": trace,
+        "config": {
+            "max_pending": MAX_PENDING, "policy": "shed", "clock": "wall",
+            "prefix_chunks": PREFIX_CHUNKS, "tail_chunks": TAIL_CHUNKS,
+            "chunk_tokens": CHUNK_TOKENS,
+        },
+    }
+    path = emit_json("serve", payload, quick=quick)
+    print(f"[serve_bench] wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows, quick=True)

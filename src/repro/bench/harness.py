@@ -34,10 +34,17 @@ class Timing:
 
 
 def _block(out) -> None:
-    """Wait out JAX async dispatch; harmless on non-JAX results."""
+    """Wait out JAX async dispatch; harmless on non-JAX results.
+
+    Only the "this isn't a JAX result" complaints (``TypeError`` /
+    ``ValueError`` from pytree flattening over host objects) are
+    swallowed.  Runtime failures surfaced by ``block_until_ready`` —
+    a poisoned buffer, a device error raised at sync — MUST propagate:
+    a bench that swallowed them would happily report the launch time of
+    a computation that never produced its result."""
     try:
         jax.block_until_ready(out)
-    except Exception:
+    except (TypeError, ValueError):
         pass
 
 

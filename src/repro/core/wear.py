@@ -34,6 +34,17 @@ from repro.core import geometry
 from repro.core.timing import CPU_HZ, t_mww_seconds
 
 
+#: Cycle resolution of the ``clock="wall"`` domain: one cycle per
+#: microsecond of host wall time.  Chosen so realistic t_MWW windows fit
+#: the int32 cycle domain the predicates operate in — the serving rebase
+#: (``CLOCK_REBASE_AT``) folds the clock every ~17.9 wall-minutes, which
+#: also bounds the longest expressible window.
+WALL_HZ = 1_000_000
+
+#: Legal values of the ``clock`` knob.
+CLOCKS = ("ops", "wall")
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class WearConfig:
@@ -44,6 +55,21 @@ class WearConfig:
     wr_shift: int = dataclasses.field(metadata=dict(static=True), default=9)
     t_mww_cycles: int = dataclasses.field(metadata=dict(static=True), default=0)
     blocks_per_superset: int = dataclasses.field(metadata=dict(static=True), default=512)
+    #: Cycle DOMAIN of every stamp fed to the window predicates:
+    #: ``"ops"`` — the caller's op/request counter stands in for cycles
+    #: (the simulator and the serving default; PRE-EXISTING semantics,
+    #: bit-identical); ``"wall"`` — stamps are host wall-clock
+    #: microseconds (``WALL_HZ``), so ``t_mww_cycles`` expresses a
+    #: LATENCY-ERA time budget.  The predicates themselves are
+    #: clock-agnostic (pure int32 difference arithmetic, see
+    #: ``_window_now``); this field records which domain the caller must
+    #: stamp in and steers ``make_config``'s window derivation.
+    clock: str = dataclasses.field(metadata=dict(static=True), default="ops")
+
+    def __post_init__(self):
+        if self.clock not in CLOCKS:
+            raise ValueError(
+                f"WearConfig.clock={self.clock!r}: expected one of {CLOCKS}")
 
     @property
     def window_write_budget(self) -> int:
@@ -54,11 +80,18 @@ class WearConfig:
 
 def make_config(n_supersets: int, m_writes: int = 3,
                 t_life_years: float = 10.0, endurance: float = 1e8,
-                **kw) -> WearConfig:
+                clock: str = "ops", **kw) -> WearConfig:
+    """WearConfig with the t_MWW window derived from a lifetime target.
+
+    ``clock="ops"`` (default) keeps the historic CPU-cycle proxy:
+    ``t_mww_cycles = t_MWW_seconds * CPU_HZ``.  ``clock="wall"`` expresses
+    the window in wall microseconds (``t_MWW_seconds * WALL_HZ``) so
+    callers stamping wall time get a true latency-era window."""
     t_mww_s = t_mww_seconds(m_writes, t_life_years * 365.25 * 24 * 3600, endurance)
+    hz = CPU_HZ if clock == "ops" else WALL_HZ
     return WearConfig(
         n_supersets=n_supersets, m_writes=m_writes,
-        t_mww_cycles=int(t_mww_s * CPU_HZ), **kw,
+        t_mww_cycles=int(t_mww_s * hz), clock=clock, **kw,
     )
 
 
@@ -223,7 +256,13 @@ def record_write(state: WearState, cfg: WearConfig, superset: jnp.ndarray,
 def _window_now(state: WearState, cfg, superset, cycle):
     """THE t_MWW window-rollover arithmetic (one implementation, shared by
     ``record_write`` and ``window_would_exceed``): returns
-    ``(win, expired, writes_now)`` for ``superset`` at ``cycle``."""
+    ``(win, expired, writes_now)`` for ``superset`` at ``cycle``.
+
+    Clock-agnostic by construction: only int32 DIFFERENCES of ``cycle``
+    against stored stamps are compared, so the same predicate serves the
+    op-counter proxy (``clock="ops"``) and wall-microsecond stamps
+    (``clock="wall"``) — the caller just has to stamp consistently in
+    one domain (``WearConfig.clock`` records which)."""
     win = jnp.maximum(jnp.asarray(cfg.t_mww_cycles, jnp.int32), 1)
     expired = (cycle - state.window_start[superset]) >= win
     writes_now = jnp.where(expired, 0, state.window_writes[superset])
@@ -244,7 +283,9 @@ def window_would_exceed(state: WearState, cfg, superset: jnp.ndarray,
     superset : jnp.ndarray, int32 (scalar or (N,))
         Superset id(s) the prospective write targets.
     cycle : jnp.ndarray, int32
-        Current cycle (serving uses its op counter as the cycle proxy).
+        Current cycle in the config's clock domain (serving stamps its
+        op counter under ``clock="ops"``, wall microseconds under
+        ``clock="wall"``).
 
     Returns
     -------

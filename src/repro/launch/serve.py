@@ -7,7 +7,13 @@ MonarchKVIndex prefix cache.
 The request loop is the same flow examples/serve_prefix_cache.py
 demonstrates; this launcher adds mesh placement (params TP/FSDP-sharded,
 cache sharded per ``cache_specs`` — ``--seq-shard-kv`` enables the §Perf
-split-KV layout) and batch scheduling over a request queue.
+split-KV layout) and batch scheduling over a request queue.  The loop
+itself lives in :func:`run_request_loop` — one implementation shared by
+this launcher (closed-loop: the next batch starts when the previous
+finished) and by ``benchmarks/serve_bench.py`` (open-loop: scheduled
+Poisson/replayed-trace arrivals, latency charged from the SCHEDULED
+arrival so backlog shows up as queueing delay instead of being
+coordinated-omission'd away).
 
 Index scaling knobs (see docs/SERVING.md for the full operator guide):
 ``--n-shards`` splits the Monarch index's CAM sets across the
@@ -16,11 +22,16 @@ over the stacked layout and rotation stays device-resident (``ppermute``
 boundary exchange); on a single-device host every shard co-locates and
 the index collapses to the unsharded single-launch path.  Admissions run
 behind an async ``AdmitQueue`` by default — installs overlap the decode
-loop — with ``--sync-admit`` restoring the inline path.
+loop — with ``--sync-admit`` restoring the inline path.  Front-end SLO
+knobs: ``--wear-clock wall`` makes the §6.2 admission window a
+wall-clock time budget instead of the op-counter proxy;
+``--max-pending`` bounds the admission queue with ``--admit-policy``
+``block`` / ``shed`` / ``defer`` back-pressure.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -35,6 +46,105 @@ from repro.models import transformer
 from repro.serve import step as serve_step
 from repro.serve.admit_queue import AdmitQueue
 from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request front-end accounting from :func:`run_request_loop`.
+
+    ``latency_s`` is measured from the SCHEDULED arrival when the loop
+    runs open-loop (``arrivals_s`` given): a request that arrived while
+    the loop was still busy is charged its backlog wait, which is what
+    makes open-loop p99 honest under overload.  Closed-loop, arrival ==
+    start and latency is pure service time."""
+    arrival_s: float            # scheduled (open-loop) or actual start
+    start_s: float              # when the loop began serving it
+    done_s: float               # when service + submit finished
+    latency_s: float            # done_s - arrival_s
+    chunks: int                 # whole CHUNK_TOKENS chunks looked up
+    hit_chunks: int             # of which already cached
+    admitted: bool              # admission submit accepted
+    retried: bool               # defer policy: submit retried after decode
+    dropped: bool               # retry rejected too — admission forgone
+
+
+def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
+                     decode_fn=None, arrivals_s=None, now_fn=time.monotonic,
+                     sleep_fn=time.sleep, on_batch=None):
+    """THE serving request loop: lookup -> prefill -> submit -> decode.
+
+    Parameters
+    ----------
+    admit_q : AdmitQueue
+        Front end over the MonarchKVIndex; every index access goes
+        through it (read-your-writes lookups, bounded-queue admission).
+    requests : sequence of np.ndarray
+        Token batches, one ``(B, S)`` int array per request batch.
+    prefill_fn : callable
+        ``prefill_fn(tokens, hits) -> state``: compute the batch's KV
+        (the launcher's jitted prefill; the bench's service proxy).
+        Called BEFORE the admission submit — chunks are offered as soon
+        as their KV exists, the PR-4 submit-after-prefill hook.
+    decode_fn : callable, optional
+        ``decode_fn(tokens, state) -> None``: the decode loop, run after
+        the submit so the admission worker overlaps it.
+    arrivals_s : sequence of float, optional
+        OPEN-LOOP arrival offsets (seconds from loop start), one per
+        request, nondecreasing.  The loop sleeps until each scheduled
+        arrival; when it is running behind, the request is served
+        immediately but its latency still counts from the schedule.
+        ``None`` = closed loop (next batch starts when the previous
+        finished).
+    now_fn, sleep_fn : callables
+        Clock/sleep injection for tests.
+    on_batch : callable, optional
+        ``on_batch(i, tokens, hits, record)`` after each batch (the
+        launcher prints its per-batch report here).
+
+    Returns
+    -------
+    list[RequestRecord]
+
+    Notes
+    -----
+    Back-pressure: ``admit_q.submit_tokens`` may reject under
+    ``policy="defer"`` — the loop retries ONCE after the decode (the
+    queue usually drained meanwhile); a rejected retry forgoes the
+    admission (``dropped=True``) rather than stalling the serving path.
+    ``policy="block"``/``"shed"`` never reject, so those records always
+    carry ``admitted=True``.
+    """
+    t0 = now_fn()
+    records: list[RequestRecord] = []
+    for i, toks in enumerate(requests):
+        if arrivals_s is not None:
+            arrival = float(arrivals_s[i])
+            wait = arrival - (now_fn() - t0)
+            if wait > 0:
+                sleep_fn(wait)
+        start = now_fn() - t0
+        if arrivals_s is None:
+            arrival = start
+        hits = admit_q.lookup(toks)
+        state = prefill_fn(toks, hits)
+        accepted = admit_q.submit_tokens(toks)
+        if decode_fn is not None:
+            decode_fn(toks, state)
+        retried = dropped = False
+        if not accepted:               # defer: retry once after decode
+            retried = True
+            accepted = admit_q.submit_tokens(toks)
+            dropped = not accepted
+        done = now_fn() - t0
+        rec = RequestRecord(
+            arrival_s=arrival, start_s=start, done_s=done,
+            latency_s=done - arrival,
+            chunks=int(hits.size), hit_chunks=int(hits.sum()),
+            admitted=bool(accepted), retried=retried, dropped=dropped)
+        records.append(rec)
+        if on_batch is not None:
+            on_batch(i, toks, hits, rec)
+    return records
 
 
 def main(argv=None):
@@ -60,7 +170,12 @@ def main(argv=None):
                     help="per-way write budget per t_MWW window")
     ap.add_argument("--ops-per-sec", type=float, default=1e6,
                     help="expected index op rate (cycle proxy) for "
-                         "--lifetime-years")
+                         "--lifetime-years under --wear-clock ops")
+    ap.add_argument("--wear-clock", default="ops", choices=["ops", "wall"],
+                    help="t_MWW cycle domain: 'ops' counts index ops (the "
+                         "historic proxy), 'wall' makes the admission "
+                         "window a wall-clock time budget (no op-rate "
+                         "estimate needed)")
     # Index scaling knobs.
     ap.add_argument("--n-shards", type=int, default=1,
                     help="set-axis shards for the Monarch index (must "
@@ -70,6 +185,14 @@ def main(argv=None):
     ap.add_argument("--sync-admit", action="store_true",
                     help="admit inline on the serving loop instead of "
                          "behind the async AdmitQueue")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound on fingerprints pending admission; None "
+                         "(default) keeps the queue unbounded")
+    ap.add_argument("--admit-policy", default="block",
+                    choices=["block", "shed", "defer"],
+                    help="back-pressure when --max-pending is hit: block "
+                         "the submit, shed the oldest pending batch, or "
+                         "defer (reject; the loop retries after decode)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_arch(args.arch)
@@ -86,13 +209,14 @@ def main(argv=None):
         kv_cfg = KVIndexConfig.with_lifetime(
             t_life_years=args.lifetime_years, endurance=args.endurance,
             ops_per_second=args.ops_per_sec, m_writes=args.m_writes,
-            n_sets=8, n_shards=args.n_shards)
+            clock=args.wear_clock, n_sets=8, n_shards=args.n_shards)
+        unit = "ops" if args.wear_clock == "ops" else "us of wall time"
         print(f"[serve] lifetime target {args.lifetime_years}y @ "
               f"{args.endurance:.0e} endurance -> t_MWW window = "
-              f"{kv_cfg.window_ops} ops, M={kv_cfg.m_writes}")
+              f"{kv_cfg.window_ops} {unit}, M={kv_cfg.m_writes}")
     else:
         kv_cfg = KVIndexConfig(n_sets=8, m_writes=args.m_writes,
-                               n_shards=args.n_shards)
+                               clock=args.wear_clock, n_shards=args.n_shards)
     idx = MonarchKVIndex(kv_cfg)
     if args.n_shards > 1:
         placement = ("co-located, 1 device (collapsed to the unsharded "
@@ -101,7 +225,9 @@ def main(argv=None):
                           f"over {idx.n_parts} partitions")
         print(f"[serve] index sharded over {args.n_shards} set shards "
               f"({idx.sets_per_shard} sets each; {placement})")
-    admit_q = AdmitQueue(idx, background=not args.sync_admit)
+    admit_q = AdmitQueue(idx, background=not args.sync_admit,
+                         max_pending=args.max_pending,
+                         policy=args.admit_policy)
 
     with mesh:
         params = transformer.init_params(jax.random.PRNGKey(0), cfg)
@@ -114,32 +240,47 @@ def main(argv=None):
         # shared prefix -> index hits after the first batch
         prefix = rng.integers(1, cfg.vocab_size,
                               args.prompt_len // 2).astype(np.int32)
+        batches = []
         served = 0
-        t0 = time.time()
         while served < args.requests:
             b = min(args.batch, args.requests - served)
             tails = rng.integers(
                 1, cfg.vocab_size,
                 (b, args.prompt_len - len(prefix))).astype(np.int32)
-            toks = np.concatenate(
-                [np.tile(prefix, (b, 1)), tails], axis=1)
-            hits = admit_q.lookup(toks)   # read-your-writes via the queue
+            batches.append(np.concatenate(
+                [np.tile(prefix, (b, 1)), tails], axis=1))
+            served += b
+        # whole chunks of the shared prefix — 0 for short prompts, in
+        # which case the per-batch report has no prefix column to average
+        # (printing the empty-slice mean would be a NaN + RuntimeWarning)
+        n_prefix_chunks = len(prefix) // CHUNK_TOKENS
+
+        def model_prefill(toks, hits):
             logits, cache = prefill_fn(params, {"tokens": jnp.asarray(toks)})
-            # Submit as soon as the prefill produced this batch's KV: the
-            # worker drains the install while the decode loop runs, and
-            # the queue is (usually) empty again before the next batch's
+            # Submit happens right after this returns: the worker drains
+            # the install while the decode loop runs, and the queue is
+            # (usually) empty again before the next batch's
             # read-your-writes lookup.
-            admit_q.submit_tokens(toks)
+            return logits, cache
+
+        def model_decode(toks, state):
+            logits, cache = state
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
             outs = [np.asarray(nxt)]
             for t in range(args.decode_tokens - 1):
                 pos = jnp.asarray(toks.shape[1] + t, jnp.int32)
                 nxt, logits, cache = decode_fn(params, cache, nxt, pos)
                 outs.append(np.asarray(nxt))
-            served += b
-            print(f"[serve] batch of {b}: prefix chunks cached "
-                  f"{hits[:, :len(prefix) // CHUNK_TOKENS].mean():.0%}, "
-                  f"decoded {args.decode_tokens} tokens each")
+
+        def report(i, toks, hits, rec):
+            cached = (f"{hits[:, :n_prefix_chunks].mean():.0%}"
+                      if n_prefix_chunks else "n/a")
+            print(f"[serve] batch of {toks.shape[0]}: prefix chunks cached "
+                  f"{cached}, decoded {args.decode_tokens} tokens each")
+
+        t0 = time.time()
+        run_request_loop(admit_q, batches, prefill_fn=model_prefill,
+                         decode_fn=model_decode, on_batch=report)
         admit_q.close()                   # drain barrier before reporting
         dt = time.time() - t0
     s = idx.stats
@@ -150,7 +291,8 @@ def main(argv=None):
     aq = admit_q.stats
     print(f"[serve] admit queue: {aq.submitted} fps in {aq.batches} batches "
           f"({'inline' if args.sync_admit else 'async'}), "
-          f"{aq.rww_flushes} read-your-writes flushes")
+          f"{aq.rww_flushes} read-your-writes flushes, "
+          f"{aq.shed} batches shed, {aq.deferred} submits deferred")
     w = idx.wear_report()
     lt = idx.lifetime_estimate(endurance=args.endurance,
                                ops_per_second=args.ops_per_sec)

@@ -42,6 +42,11 @@ Semantics (all pinned by tests/test_kv_index_sharded.py):
   :meth:`lookup` flushes the queue first whenever one of the looked-up
   fingerprints is still pending/in-flight, so a request never misses on
   a chunk whose admission it (or a predecessor) already submitted.
+* Back-pressure: ``max_pending`` bounds the fingerprints awaiting
+  admission; at the bound, ``policy`` picks block / shed-oldest / defer
+  (see :class:`AdmitQueue`).  Shedding only ever drops whole QUEUED
+  batches — accepted batches still drain in submission order, so the
+  coalescing exactness argument above is unchanged.
 
 ``background=False`` degrades to a synchronous shim (submit == inline
 admit under the same lock) for deterministic tests and single-threaded
@@ -65,11 +70,14 @@ COALESCE_MAX_FPS = 8192
 
 @dataclasses.dataclass
 class AdmitQueueStats:
-    submitted: int = 0        # fingerprints handed to submit()
+    submitted: int = 0        # fingerprints ACCEPTED by submit()
     batches: int = 0          # submitted batches drained
     coalesced: int = 0        # admit_fps dispatches saved by merging
     flushes: int = 0          # explicit/barrier flushes
     rww_flushes: int = 0      # flushes forced by read-your-writes lookups
+    shed: int = 0             # pending batches dropped (policy="shed")
+    shed_fps: int = 0         # fingerprints in those shed batches
+    deferred: int = 0         # submits rejected (policy="defer")
 
 
 class AdmitQueue:
@@ -90,6 +98,28 @@ class AdmitQueue:
         while they stay mutually disjoint (default; see module
         docstring for why disjointness keeps the merge exact).
         ``False`` = one submit, one call.
+    max_pending : int, optional
+        Bound on fingerprints pending admission (queued + in flight).
+        ``None`` (default) keeps the queue unbounded.  When a submit
+        would push past the bound, ``policy`` decides what gives.  A
+        single batch larger than the bound is still accepted once the
+        queue has fully drained — the bound back-pressures, it never
+        deadlocks or permanently rejects.
+    policy : {"block", "shed", "defer"}
+        Back-pressure at the ``max_pending`` bound.  ``"block"``: the
+        submit waits until the worker drains below the bound (the
+        serving loop absorbs the stall).  ``"shed"``: drop the OLDEST
+        queued batch(es) to make room — their chunks simply stay
+        unadmitted (a cache miss later, never a correctness issue) and
+        are counted in ``stats.shed`` / ``stats.shed_fps``; in-flight
+        batches cannot be shed, so the bound may momentarily overshoot
+        by one unit.  ``"defer"``: reject the submit (``submit``
+        returns ``False``, ``stats.deferred``) and let the caller retry
+        after its decode, when the queue has usually drained.  None of
+        the policies reorder accepted batches, so the coalescing
+        bit-exactness argument and the drain-barrier semantics are
+        untouched — the policies only choose WHICH batches enter the
+        queue, not how they drain.
 
     Examples
     --------
@@ -100,16 +130,28 @@ class AdmitQueue:
     >>> q = AdmitQueue(idx)
     >>> toks = np.arange(1, 33, dtype=np.int32).reshape(1, 32)
     >>> q.submit_tokens(toks)                 # returns immediately
+    True
     >>> bool(q.lookup(toks).all())            # read-your-writes flush
     True
     >>> q.close()
     """
 
+    POLICIES = ("block", "shed", "defer")
+
     def __init__(self, index: MonarchKVIndex, *, background: bool = True,
-                 read_your_writes: bool = True, coalesce: bool = True):
+                 read_your_writes: bool = True, coalesce: bool = True,
+                 max_pending: int | None = None, policy: str = "block"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"AdmitQueue policy={policy!r}: expected one "
+                             f"of {self.POLICIES}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"AdmitQueue max_pending={max_pending}: "
+                             "expected a positive bound or None")
         self.index = index
         self.read_your_writes = read_your_writes
         self._coalesce = coalesce
+        self.max_pending = max_pending
+        self.policy = policy
         self.stats = AdmitQueueStats()
         self._background = background
         self._idx_lock = threading.Lock()    # serializes index access
@@ -118,6 +160,7 @@ class AdmitQueue:
         self._pending: collections.Counter = collections.Counter()
         self._inflight = 0                   # batches popped, not yet admitted
         self._stop = False
+        self._closed = False                 # close() called: no new work
         self._error: BaseException | None = None   # first worker failure
         self._worker = None
         if background:
@@ -126,34 +169,75 @@ class AdmitQueue:
             self._worker.start()
 
     # ------------------------------------------------------------------
-    def submit(self, fps: np.ndarray) -> None:
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                "AdmitQueue is closed: submit()/lookup() after close() "
+                "would feed a queue whose worker has exited (a later "
+                "flush() could then block forever)")
+
+    def _over_bound_locked(self, incoming: int) -> bool:
+        """Would accepting ``incoming`` fps exceed ``max_pending``?
+        (``_cv`` held.)  A fully drained queue always accepts — a single
+        oversize batch must not wedge the submitter."""
+        if self.max_pending is None:
+            return False
+        if not self._queue and self._inflight == 0:
+            return False
+        return sum(self._pending.values()) + incoming > self.max_pending
+
+    def submit(self, fps: np.ndarray) -> bool:
         """Enqueue one admission batch (one future ``admit_fps`` call).
 
         ``fps`` must be unique within the batch, exactly as ``admit_fps``
-        requires; returns immediately in background mode."""
+        requires; returns immediately in background mode.  Returns
+        ``True`` when the batch was accepted; ``False`` only under
+        ``policy="defer"`` at the ``max_pending`` bound (the caller
+        should retry after its decode).  Raises ``RuntimeError`` after
+        :meth:`close`."""
         fps = np.asarray(fps, np.uint32)
         if fps.size == 0:
-            return
-        self.stats.submitted += int(fps.size)
+            return True
         with self._cv:
+            self._check_open()
+            if self.policy == "block":
+                self._cv.wait_for(
+                    lambda: self._closed
+                    or not self._over_bound_locked(int(fps.size)))
+                self._check_open()   # close() woke us: the worker is going
+            elif self.policy == "shed":
+                while self._over_bound_locked(int(fps.size)) and self._queue:
+                    old = self._queue.popleft()
+                    self._pending.subtract(int(f) for f in old)
+                    self._pending += collections.Counter()  # drop zeros
+                    self.stats.shed += 1
+                    self.stats.shed_fps += int(old.size)
+            elif self._over_bound_locked(int(fps.size)):    # defer
+                self.stats.deferred += 1
+                return False
+            self.stats.submitted += int(fps.size)
             self._queue.append(fps)
             self._pending.update(int(f) for f in fps)
             self._cv.notify_all()
         if not self._background:
             self._drain_available()
+        return True
 
-    def submit_tokens(self, tokens: np.ndarray) -> None:
+    def submit_tokens(self, tokens: np.ndarray) -> bool:
         """Fingerprint a token batch and :meth:`submit` its unique chunks
         (the queue twin of ``MonarchKVIndex.admit``)."""
         fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
-        self.submit(fps)
+        return self.submit(fps)
 
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
         """Index lookup with optional read-your-writes consistency.
 
         When any looked-up fingerprint is still queued or in flight (and
         ``read_your_writes`` is on), the queue drains first so the search
-        sees the submitted installs."""
+        sees the submitted installs.  Raises ``RuntimeError`` after
+        :meth:`close` — go to the index directly once the queue is gone."""
+        with self._cv:
+            self._check_open()
         if self.read_your_writes:
             fps = fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1)
             with self._cv:
@@ -199,14 +283,28 @@ class AdmitQueue:
         with self._cv:
             return int(sum(self._pending.values()))
 
-    def close(self) -> None:
-        """Flush and stop the worker.  Idempotent."""
+    def close(self, timeout: float = 30.0) -> None:
+        """Flush and stop the worker.  Idempotent.
+
+        After close, :meth:`submit` and :meth:`lookup` raise
+        ``RuntimeError`` — enqueueing into a dead queue would otherwise
+        silently strand the batch and wedge the next ``flush()``.  A
+        worker that fails to stop within ``timeout`` seconds is a real
+        hang (it holds the index lock) and is surfaced as a
+        ``RuntimeError``, never swallowed."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()       # wake blocked submitters -> raise
         self.flush()
         with self._cv:
             self._stop = True
             self._cv.notify_all()
         if self._worker is not None:
-            self._worker.join(timeout=30)
+            self._worker.join(timeout=timeout)
+            if self._worker.is_alive():
+                raise RuntimeError(
+                    f"AdmitQueue worker failed to stop within {timeout}s "
+                    "(admission still in flight?)")
             self._worker = None
 
     def __enter__(self) -> "AdmitQueue":

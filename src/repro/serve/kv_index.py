@@ -90,6 +90,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import numpy as np
 
@@ -132,8 +133,19 @@ class KVIndexConfig:
         Per-way write budget per t_MWW window; the per-set window budget
         is ``set_ways * m_writes``.
     window_ops : int
-        t_MWW window length in index ops (the op counter is the serving
-        cycle proxy).
+        t_MWW window length in CLOCK CYCLES: index ops under
+        ``clock="ops"`` (the op counter is the serving cycle proxy),
+        wall-clock MICROSECONDS under ``clock="wall"``.
+    clock : str
+        t_MWW cycle domain (§6.2): ``"ops"`` (default) keeps the
+        op-counter proxy — every stamp and window length counts index
+        ops, bit-identical to the pre-wall-clock behavior.  ``"wall"``
+        expresses the admission window as a latency-era TIME budget:
+        stamps are host wall microseconds (``wear.WALL_HZ``), taken once
+        per batch on the host so the device scans stay deterministic
+        (every candidate in a batch shares the batch's stamp).  Window
+        lengths must stay below ``wear.CLOCK_REBASE_AT`` (~17.9 min) —
+        the int32 cycle domain's rebase bound.
     rotate_every : int
         Admissions between rotary remaps (prime stride 7).
     n_shards : int
@@ -152,20 +164,25 @@ class KVIndexConfig:
     key_bits: int = 32
     admit_after_reads: int = 1    # no-allocate: admit on 2nd touch
     m_writes: int = 3             # per-way write budget per t_MWW window
-    window_ops: int = 4096        # ops per t_MWW window (op-count proxy)
+    window_ops: int = 4096        # t_MWW window length in clock cycles
     rotate_every: int = 50_000    # admissions between rotary remaps
     n_shards: int = 1             # set-axis mesh shards (divides n_sets)
     plane_format: str | None = None  # None = REPRO_PLANE_FORMAT env knob
+    clock: str = "ops"            # t_MWW cycle domain: "ops" | "wall"
 
     @classmethod
     def with_lifetime(cls, *, t_life_years: float, endurance: float = 1e8,
                       ops_per_second: float = 1e6, m_writes: int = 3,
-                      **kw) -> "KVIndexConfig":
+                      clock: str = "ops", **kw) -> "KVIndexConfig":
         """Derive ``window_ops`` from a lifetime target (§6.2).
 
         The t_MWW window in seconds comes from ``core/timing``'s own
-        formula ``t_MWW = M * T_life / endurance``; the serving op counter
-        stands in for cycles at ``ops_per_second``.
+        formula ``t_MWW = M * T_life / endurance``.  Under
+        ``clock="ops"`` the serving op counter stands in for cycles at
+        ``ops_per_second``; under ``clock="wall"`` the window IS the
+        time budget, converted straight to wall microseconds
+        (``ops_per_second`` is ignored — no rate estimate needed, which
+        is the point of the wall clock).
 
         Parameters
         ----------
@@ -175,9 +192,12 @@ class KVIndexConfig:
             Cell write endurance (§8 evaluations use 1e8).
         ops_per_second : float
             Expected index op rate (lookup chunks + admission offers per
-            second) — converts the window from seconds to ops.
+            second) — converts the window from seconds to ops.  Only
+            consulted under ``clock="ops"``.
         m_writes : int
             Per-way write budget per window.
+        clock : str
+            t_MWW cycle domain, ``"ops"`` or ``"wall"``.
         **kw
             Forwarded to the constructor (``n_sets``, ``n_shards``, ...).
 
@@ -190,11 +210,16 @@ class KVIndexConfig:
         >>> cfg = KVIndexConfig.with_lifetime(t_life_years=10.0)
         >>> cfg.window_ops        # 3 * 10y / 1e8 writes * 1e6 ops/s
         9467280
+        >>> KVIndexConfig.with_lifetime(
+        ...     t_life_years=10.0, clock="wall").window_ops  # 9.467s in us
+        9467280
         """
         t_mww_s = t_mww_seconds(m_writes, t_life_years * SECONDS_PER_YEAR,
                                 endurance)
-        window_ops = max(int(t_mww_s * ops_per_second), 1)
-        return cls(m_writes=m_writes, window_ops=window_ops, **kw)
+        hz = ops_per_second if clock == "ops" else wear.WALL_HZ
+        window_ops = max(int(t_mww_s * hz), 1)
+        return cls(m_writes=m_writes, window_ops=window_ops, clock=clock,
+                   **kw)
 
 
 @dataclasses.dataclass
@@ -520,6 +545,13 @@ class MonarchKVIndex:
         scan loop, kept as the admission differential oracle (requires
         no mesh layout, so it is also forced whenever
         ``dispatch="fanout"``).  Results never depend on the choice.
+    now_fn : callable, optional
+        Wall-clock source for ``clock="wall"`` configs: a zero-arg
+        callable returning MONOTONIC seconds as a float (default
+        ``time.monotonic``).  Injectable so tests drive the latency-era
+        t_MWW window deterministically.  Never consulted under
+        ``clock="ops"`` (pinned — the op-clock path is bit-identical to
+        the pre-wall-clock implementation).
 
     Attributes
     ----------
@@ -555,7 +587,8 @@ class MonarchKVIndex:
     """
 
     def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0,
-                 dispatch: str = "auto", admit_dispatch: str | None = None):
+                 dispatch: str = "auto", admit_dispatch: str | None = None,
+                 now_fn=None):
         # cfg default constructed per instance: a shared KVIndexConfig()
         # default would alias mutable config across indexes.
         assert dispatch in ("auto", "fanout"), dispatch
@@ -568,6 +601,21 @@ class MonarchKVIndex:
             "dispatch='fanout' storage only supports fanout admission")
         self.cfg = KVIndexConfig() if cfg is None else cfg
         c = self.cfg
+        if c.clock not in wear.CLOCKS:
+            raise ValueError(
+                f"KVIndexConfig.clock={c.clock!r}: expected one of "
+                f"{wear.CLOCKS}")
+        # t_MWW clock domain.  "ops": the op counter is the cycle proxy
+        # (pre-existing semantics, now_fn never consulted).  "wall": cycle
+        # stamps are host wall microseconds relative to construction,
+        # taken ONCE per admission batch so the device scans see only
+        # host-provided constants and stay deterministic (the fanout /
+        # stacked differential oracle pins bit-identity between dispatch
+        # paths for free — both stamp from the same host read).
+        self.clock = c.clock
+        self._now_fn = time.monotonic if now_fn is None else now_fn
+        self._wall_t0 = self._now_fn() if self.clock == "wall" else 0.0
+        self._wall_folded = 0       # cycles removed by clock rebases
         self.dispatch = dispatch
         self.admit_dispatch = admit_dispatch
         self.n_shards = c.n_shards
@@ -647,7 +695,8 @@ class MonarchKVIndex:
         self.wear_cfg = wear.WearConfig(
             n_supersets=c.n_sets, m_writes=c.m_writes,
             dc_limit=1 << 30, wc_limit=1 << 30, wr_shift=32,
-            t_mww_cycles=c.window_ops, blocks_per_superset=c.set_ways)
+            t_mww_cycles=c.window_ops, blocks_per_superset=c.set_ways,
+            clock=c.clock)
         self.wear_dyn = wear.dyn_of(self.wear_cfg)
         self._wear_states = [
             self._put_tree(st, k)
@@ -764,18 +813,32 @@ class MonarchKVIndex:
             return pack_bits_np(cols, axis=-1)
         return cols
 
+    def _clock_cycles(self) -> int:
+        """Current t_MWW cycle stamp in the config's clock domain: the op
+        counter under ``clock="ops"``; elapsed wall MICROSECONDS since
+        construction (minus rebased folds) under ``clock="wall"``."""
+        if self.clock == "ops":
+            return self.ops_total
+        return (int((self._now_fn() - self._wall_t0) * wear.WALL_HZ)
+                - self._wall_folded)
+
     def _maybe_rebase_clock(self):
-        """Fold the op-counter clock before the int32 cycle domain wraps
+        """Fold the t_MWW clock before the int32 cycle domain wraps
         (timestamps shift in lockstep, so window/lock decisions are
-        unchanged — a ~2.1e9-op serving instance would otherwise see its
-        windows stop expiring and throttle forever)."""
-        if self.ops_total < wear.CLOCK_REBASE_AT:
+        unchanged).  Op clock: a ~2.1e9-op serving instance would
+        otherwise see its windows stop expiring and throttle forever.
+        Wall clock: the same fold fires every ~17.9 minutes
+        (``CLOCK_REBASE_AT`` microseconds), keeping any window below that
+        bound exact indefinitely."""
+        if self._clock_cycles() < wear.CLOCK_REBASE_AT:
             return
-        ops = self.ops_total
         for k in range(self.n_parts):
-            self._wear_states[k], folded = wear.maybe_rebase(
-                self._wear_states[k], ops)
-        self.ops_total = folded
+            self._wear_states[k] = wear.rebase_clock(
+                self._wear_states[k], wear.CLOCK_REBASE_AT)
+        if self.clock == "ops":
+            self.ops_total -= wear.CLOCK_REBASE_AT
+        else:
+            self._wall_folded += wear.CLOCK_REBASE_AT
 
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
         """Probe the index for every whole 16-token chunk of a batch.
@@ -875,12 +938,21 @@ class MonarchKVIndex:
         touches = np.asarray(
             [self.first_touch.get(int(fp), 0) for fp in fps], np.int32)
         bitcols = self._bitcols(fps)
+        # t_MWW cycle stamps, computed ONCE here so both dispatch paths
+        # stamp identically (the differential oracle pins this).  Op
+        # clock: each candidate's global batch position.  Wall clock: one
+        # host timestamp for the whole batch — the device scan sees only
+        # host constants either way, so it stays deterministic.
+        if self.clock == "ops":
+            cycles = (self.ops_total + np.arange(b)).astype(np.int32)
+        else:
+            cycles = np.full(b, self._clock_cycles(), np.int32)
         if self.admit_dispatch == "auto":
             skip, thr, inst, way, evict, old_fp = self._admit_stacked(
-                fps, sets, touches, bitcols)
+                fps, sets, touches, bitcols, cycles)
         else:
             skip, thr, inst, way, evict, old_fp = self._admit_fanout(
-                fps, sets, touches, bitcols)
+                fps, sets, touches, bitcols, cycles)
         self.ops_total += b
 
         # Host shadow-map fold, in GLOBAL batch order.  (Every shadow-map
@@ -916,7 +988,7 @@ class MonarchKVIndex:
                 > prev // self.cfg.rotate_every):
             self._rotate()
 
-    def _admit_stacked(self, fps, sets, touches, bitcols):
+    def _admit_stacked(self, fps, sets, touches, bitcols, cycles):
         """ONE-dispatch admission over the stacked round grid.
 
         Packs the batch into the ``(n_parts, n_rounds, round_width)``
@@ -939,8 +1011,8 @@ class MonarchKVIndex:
         fps_g[idx] = fps
         bit_g = np.zeros(g + (self.plane_rows,), bitcols.dtype)
         bit_g[idx] = bitcols
-        cyc_g = np.full(g, self.ops_total, np.int32)
-        cyc_g[idx] = self.ops_total + np.arange(b)   # GLOBAL batch position
+        cyc_g = np.full(g, cycles[0], np.int32)      # pad lanes: inactive
+        cyc_g[idx] = cycles                          # host-stamped, per batch
         tch_g = np.zeros(g, np.int32)
         tch_g[idx] = touches
         act_g = np.zeros(g, bool)
@@ -1037,7 +1109,7 @@ class MonarchKVIndex:
             for k, old in enumerate(self._wear_states)]
         return out[14:]
 
-    def _admit_fanout(self, fps, sets, touches, bitcols):
+    def _admit_fanout(self, fps, sets, touches, bitcols, cycles):
         """PR-5 per-partition admission oracle (``admit_dispatch="fanout"``).
 
         Groups candidates by owning storage partition (original order
@@ -1067,8 +1139,8 @@ class MonarchKVIndex:
             sets_p[:bk] = sets[sel] - k * self.sets_per_part  # local rows
             bit_p = np.zeros((bb, self.plane_rows), bitcols.dtype)
             bit_p[:bk] = bitcols[sel]
-            cycles = np.full(bb, self.ops_total, np.int32)
-            cycles[:bk] = self.ops_total + sel       # GLOBAL batch position
+            cycles_p = np.full(bb, cycles[0], np.int32)  # pad: inactive
+            cycles_p[:bk] = cycles[sel]              # host-stamped, per batch
             touch_p = np.zeros(bb, np.int32)
             touch_p[:bk] = touches[sel]
             active = np.zeros(bb, bool)
@@ -1080,7 +1152,7 @@ class MonarchKVIndex:
                 self._wear_states[k], self._wear_dyns[k],
                 self._admit_after[k],
                 self._put(sets_p, k), self._put(fps_p, k),
-                self._put(bit_p, k), self._put(cycles, k),
+                self._put(bit_p, k), self._put(cycles_p, k),
                 self._put(touch_p, k), self._put(active, k))
             (self._bits[k], self._valid[k], self._fp_of[k],
              self._read_after[k], self._set_writes[k], self._counters[k],
@@ -1185,7 +1257,7 @@ class MonarchKVIndex:
         """
         w = self.write_distribution().astype(np.float64)
         mean = float(w.mean()) if w.size else 0.0
-        cyc = jnp.asarray(min(self.ops_total, 2 ** 31 - 1), jnp.int32)
+        cyc = jnp.asarray(min(self._clock_cycles(), 2 ** 31 - 1), jnp.int32)
         throttled_now = sum(
             int(np.asarray(wear.window_would_exceed(
                 self._wear_states[k], self._wear_dyns[k],

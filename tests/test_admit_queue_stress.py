@@ -24,6 +24,7 @@ batches."""
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -269,6 +270,177 @@ def test_concurrent_flushes_do_not_deadlock_or_double_raise():
         assert not t.is_alive()
     assert sum(raises) == 1
     q.close()
+
+
+# ---------------------------------------------------------------------------
+# close() lifecycle and max_pending back-pressure
+
+
+def _wait(pred, timeout: float = 10.0) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def test_submit_and_lookup_after_close_raise():
+    """The original bug: submit() after close() silently enqueued into a
+    queue whose worker had exited, so the next flush() hung forever on
+    the drain predicate.  Now both entry points fail fast."""
+    q = AdmitQueue(_mk_index())
+    toks = np.arange(1, 1 + 2 * CHUNK_TOKENS, dtype=np.int32).reshape(1, -1)
+    q.submit_tokens(toks)
+    q.close()
+    with pytest.raises(RuntimeError, match="close"):
+        q.submit(np.asarray([5], np.uint32))
+    with pytest.raises(RuntimeError, match="close"):
+        q.lookup(toks)
+    q.close()                                  # still idempotent
+    assert q.index.lookup(toks).all()          # the index itself lives on
+
+
+def test_close_surfaces_wedged_worker_instead_of_swallowing():
+    """A worker that never stops within the join timeout is a real hang
+    (it holds the index lock) — close() must raise, not return as if the
+    shutdown succeeded."""
+    q = AdmitQueue(_mk_index())
+    q.flush()
+    hang = threading.Event()
+    dummy = threading.Thread(target=hang.wait, daemon=True)
+    dummy.start()
+    q._worker = dummy              # stand-in for a worker stuck mid-admit
+    with pytest.raises(RuntimeError, match="failed to stop"):
+        q.close(timeout=0.1)
+    hang.set()
+    dummy.join(timeout=10)
+
+
+def test_shed_policy_drops_oldest_queued_batch():
+    idx = _mk_index()
+    q = AdmitQueue(idx, max_pending=6, policy="shed")
+    first = np.asarray([1, 2, 3], np.uint32)
+    second = np.asarray([10, 11, 12], np.uint32)
+    third = np.asarray([20, 21, 22], np.uint32)
+    with q._idx_lock:                  # stall the worker mid-admission
+        assert q.submit(first)
+        assert _wait(lambda: q._inflight == 1)   # popped, blocked on lock
+        assert q.submit(second)        # queued: pending == bound
+        assert q.submit(third)         # over bound -> oldest QUEUED shed
+    assert q.stats.shed == 1 and q.stats.shed_fps == 3
+    q.flush()
+    assert {1, 2, 3, 20, 21, 22} <= set(idx.slot_of)
+    assert not {10, 11, 12} & set(idx.slot_of)
+    q.close()
+
+
+def test_defer_policy_rejects_then_accepts_after_drain():
+    idx = _mk_index()
+    q = AdmitQueue(idx, max_pending=4, policy="defer")
+    with q._idx_lock:
+        assert q.submit(np.asarray([1, 2, 3], np.uint32))
+        assert _wait(lambda: q._inflight == 1)
+        assert q.submit(np.asarray([7, 8], np.uint32)) is False
+    assert q.stats.deferred == 1
+    q.flush()                          # drained: the caller's retry lands
+    assert q.submit(np.asarray([7, 8], np.uint32))
+    q.flush()
+    assert {7, 8} <= set(idx.slot_of)
+    q.close()
+
+
+def test_block_policy_waits_for_drain_then_completes():
+    idx = _mk_index()
+    q = AdmitQueue(idx, max_pending=4, policy="block")
+    unblocked = threading.Event()
+
+    def submitter():
+        q.submit(np.asarray([7, 8], np.uint32))
+        unblocked.set()
+
+    t = threading.Thread(target=submitter)
+    with q._idx_lock:
+        assert q.submit(np.asarray([1, 2, 3], np.uint32))
+        assert _wait(lambda: q._inflight == 1)
+        t.start()
+        assert not unblocked.wait(0.2), "submit did not block at the bound"
+    assert unblocked.wait(10), "blocked submit never completed after drain"
+    t.join(timeout=10)
+    q.flush()
+    assert {7, 8} <= set(idx.slot_of)
+    q.close()
+
+
+def test_close_wakes_blocked_submitter_with_runtime_error():
+    idx = _mk_index()
+    q = AdmitQueue(idx, max_pending=4, policy="block")
+    result: list[str] = []
+
+    def submitter():
+        try:
+            q.submit(np.asarray([7, 8], np.uint32))
+            result.append("accepted")
+        except RuntimeError:
+            result.append("raised")
+
+    q._idx_lock.acquire()
+    try:
+        q.submit(np.asarray([1, 2, 3], np.uint32))
+        assert _wait(lambda: q._inflight == 1)
+        t = threading.Thread(target=submitter)
+        t.start()
+        time.sleep(0.1)                # let it park at the bound
+        closer = threading.Thread(target=q.close)
+        closer.start()
+        assert _wait(lambda: bool(result)), "submitter never woke"
+        assert result == ["raised"]
+    finally:
+        q._idx_lock.release()
+    closer.join(timeout=30)
+    t.join(timeout=10)
+    assert not closer.is_alive()
+
+
+def test_oversize_batch_accepted_once_drained():
+    """A single batch larger than max_pending must admit (after a full
+    drain), never deadlock or reject forever."""
+    q = AdmitQueue(_mk_index(), max_pending=4, policy="block")
+    assert q.submit(np.arange(1, 20, dtype=np.uint32))   # 19 fps > bound
+    q.flush()
+    assert q.pending() == 0
+    q.close()
+
+
+@pytest.mark.parametrize("policy", ["block", "shed", "defer"])
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_bounded_queue_state_matches_unbounded(policy, n_shards):
+    """Back-pressure pin: when the bound is never hit, every policy is
+    bit-identical to the unbounded queue (the pre-bound behavior) —
+    the policies gate WHICH batches enter, never how they drain."""
+    cfg = dict(n_sets=8, set_ways=64, admit_after_reads=1, m_writes=1 << 20,
+               window_ops=1 << 30, rotate_every=1 << 30, n_shards=n_shards)
+    plain = MonarchKVIndex(KVIndexConfig(**cfg))
+    bound = MonarchKVIndex(KVIndexConfig(**cfg))
+    qp = AdmitQueue(plain, background=False)
+    qb = AdmitQueue(bound, background=False, max_pending=1 << 20,
+                    policy=policy)
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        toks = rng.integers(1, 90_000,
+                            (1, 4 * CHUNK_TOKENS)).astype(np.int32)
+        qp.submit_tokens(toks)
+        assert qb.submit_tokens(toks)
+        assert np.array_equal(qp.lookup(toks), qb.lookup(toks))
+    qp.flush()
+    qb.flush()
+    assert bound.slot_of == plain.slot_of
+    assert bound.first_touch == plain.first_touch
+    assert np.array_equal(bound.valid_np, plain.valid_np)
+    assert np.array_equal(bound.fp_of_np, plain.fp_of_np)
+    assert bound.wear_report() == plain.wear_report()
+    qp.close()
+    qb.close()
 
 
 if __name__ == "__main__":

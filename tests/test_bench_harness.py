@@ -1,0 +1,57 @@
+"""Bench harness: ``_block`` error discipline.
+
+``_block`` exists to close out JAX async dispatch before a timing
+sample is taken.  It used to swallow EVERY exception, so a poisoned
+computation (device error surfaced at ``block_until_ready``) timed as a
+clean pass — the bench reported the dispatch cost of a result that was
+never produced.  Only the "this is not a JAX result" complaints
+(``TypeError`` / ``ValueError``) may be ignored."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import pytest
+
+from repro.bench.harness import _block, time_callable
+
+
+class _Result:
+    """Pytree leaf whose sync raises a chosen exception."""
+
+    def __init__(self, exc: type[BaseException] | None):
+        self._exc = exc
+
+    def block_until_ready(self):
+        if self._exc is not None:
+            raise self._exc("surfaced at sync")
+        return self
+
+
+def test_block_passes_jax_and_host_results():
+    _block(jnp.ones(4))            # real device value
+    _block(None)                   # plain host objects are fine
+    _block({"a": [1, 2.0, "s"]})
+    _block(_Result(None))
+
+
+def test_block_swallows_non_jax_result_complaints():
+    _block(_Result(TypeError))
+    _block(_Result(ValueError))
+
+
+@pytest.mark.parametrize("exc", [RuntimeError, OSError])
+def test_block_propagates_runtime_failures(exc):
+    with pytest.raises(exc, match="surfaced at sync"):
+        _block(_Result(exc))
+
+
+def test_time_callable_does_not_time_a_poisoned_computation():
+    """The end-to-end regression: a callable whose result fails at sync
+    must fail the bench, not produce a Timing."""
+    with pytest.raises(RuntimeError, match="surfaced at sync"):
+        time_callable(lambda: _Result(RuntimeError), warmup=1, reps=2)
+    t = time_callable(lambda: jnp.ones(8) * 2, warmup=1, reps=2)
+    assert t.median_us > 0 and t.reps == 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
