@@ -31,6 +31,13 @@ plus ``BENCH_WARN_ONLY``, like the kernel medians), but the artifact's
 SHAPE — >=2 offered-rate legs, each with latency/goodput/shed/hit fields
 — is structural and always fatal, exactly like the roofline section.
 
+A fourth leg, ``decode`` (``BENCH_decode.json`` from ``decode_bench``):
+the cached-vs-no-cache tokens/s are timings (threshold +
+``BENCH_WARN_ONLY``), but the artifact's claims — both legs present with
+sane throughput/hit fields, ``tokens_match`` true (resumed greedy decode
+token-identical to full prefill), the cached leg actually hitting — are
+structural and always fatal.
+
 Artifacts present in only one file are reported but never fatal (new
 benches land before their baseline is refreshed; a missing figure baseline
 is skipped).  Set ``BENCH_WARN_ONLY=1`` to downgrade failures to warnings
@@ -171,6 +178,72 @@ def serve_latencies(doc: dict) -> dict[str, float]:
     return out
 
 
+DECODE_LEG_REQUIRED = ("n_requests", "total_s", "tokens_per_s",
+                       "prompt_tokens_per_s", "hit_rate",
+                       "resumed_fraction")
+
+
+def decode_structural_gate(doc: dict) -> list[str]:
+    """Structural check on ``BENCH_decode.json`` — always fatal.
+
+    The prefix-cache decode acceptance bar: both legs present with
+    positive throughput, fractions in [0, 1], the cached leg actually
+    hitting, and ``tokens_match`` true — the resumed decode emitted the
+    SAME greedy tokens as the no-cache full prefill.  A false
+    ``tokens_match`` means the restore path corrupted the KV cache;
+    that must never be downgraded to a warning."""
+    legs = doc.get("legs")
+    if not isinstance(legs, dict):
+        return [f"  decode.legs: {legs!r} (expected a dict)"]
+    bad = []
+    for name in ("no_cache", "cached"):
+        leg = legs.get(name)
+        if not isinstance(leg, dict):
+            bad.append(f"  decode.legs.{name}: missing")
+            continue
+        for field in DECODE_LEG_REQUIRED:
+            v = leg.get(field)
+            if not isinstance(v, (int, float)):
+                bad.append(f"  decode.legs.{name}.{field}: {v!r} "
+                           "(expected a number)")
+        for field in ("hit_rate", "resumed_fraction"):
+            v = leg.get(field)
+            if isinstance(v, (int, float)) and not 0.0 <= v <= 1.0:
+                bad.append(f"  decode.legs.{name}.{field}: {v} "
+                           "(expected a fraction in [0, 1])")
+        for field in ("tokens_per_s", "total_s"):
+            v = leg.get(field)
+            if isinstance(v, (int, float)) and v <= 0:
+                bad.append(f"  decode.legs.{name}.{field}: {v} "
+                           "(expected > 0)")
+    cached = legs.get("cached")
+    if isinstance(cached, dict):
+        hr = cached.get("hit_rate")
+        if isinstance(hr, (int, float)) and hr <= 0:
+            bad.append(f"  decode.legs.cached.hit_rate: {hr} (the cached "
+                       "leg never hit — the bench is not exercising "
+                       "resume)")
+    sp = doc.get("speedup")
+    if not isinstance(sp, (int, float)) or sp <= 0:
+        bad.append(f"  decode.speedup: {sp!r} (expected a positive number)")
+    if doc.get("tokens_match") is not True:
+        bad.append(f"  decode.tokens_match: {doc.get('tokens_match')!r} "
+                   "(resumed decode must be token-identical to full "
+                   "prefill)")
+    return bad
+
+
+def decode_timings(doc: dict) -> dict[str, float]:
+    """Per-leg wall time, keyed for :func:`compare` (timing gate:
+    threshold-based, downgradable via ``BENCH_WARN_ONLY``)."""
+    out = {}
+    for name, leg in (doc.get("legs") or {}).items():
+        v = leg.get("total_s") if isinstance(leg, dict) else None
+        if isinstance(v, (int, float)):
+            out[f"decode.{name}.total"] = float(v) * 1e6   # s -> us
+    return out
+
+
 def roofline_gate(path: str) -> list[str]:
     """Structural check on the roofline section of the current artifact."""
     with open(path) as f:
@@ -264,6 +337,30 @@ def main(argv=None) -> int:
                          "thresholds skipped")
     else:
         notes.append("  serve: artifact missing, skipped")
+
+    # Prefix-cache decode path: same split — claims (token identity,
+    # legs/fields present, cached leg hitting) always fatal; leg wall
+    # times threshold-compared, warn-only downgradable.
+    decode_cur = os.path.join(
+        os.path.dirname(os.path.abspath(args.current))
+        if args.current != DEFAULT_CURRENT else HERE, "BENCH_decode.json")
+    decode_base = os.path.join(HERE, "baselines", "BENCH_decode.json")
+    if os.path.exists(decode_cur):
+        with open(decode_cur) as f:
+            decode_doc = json.load(f)
+        fig_regressions += decode_structural_gate(decode_doc)
+        if os.path.exists(decode_base):
+            with open(decode_base) as f:
+                base_doc = json.load(f)
+            r, n = compare(decode_timings(base_doc),
+                           decode_timings(decode_doc), args.threshold)
+            regressions += r
+            notes += n
+        else:
+            notes.append("  decode: no committed baseline, timing "
+                         "thresholds skipped")
+    else:
+        notes.append("  decode: artifact missing, skipped")
 
     for line in notes:
         print(line)

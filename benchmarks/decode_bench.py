@@ -1,0 +1,222 @@
+"""Prefix-cache decode benchmark: cached-resume vs no-cache serving.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only decode_bench
+
+Measures the END-TO-END payoff of the Monarch prefix index on a real
+transformer: the same zipf-shared-prefix request stream is served twice
+through :class:`repro.serve.resume.PrefixResumeEngine` —
+
+* ``no_cache``  — every request full-prefills its whole prompt (the
+  engine with resume disabled; no index, no slab store traffic).
+* ``cached``    — the production path: ``run_request_loop`` +
+  ``AdmitQueue`` + ``MonarchKVIndex(fingerprint="prefix")`` with an
+  attached :class:`KVSlabStore`; hits restore KV slabs and prefill runs
+  only over the suffix from its RoPE offset.
+
+Per leg, into ``BENCH_decode.json``:
+
+* ``tokens_per_s``        — decode tokens emitted / leg wall time (the
+  serving-throughput number the prefix cache is supposed to move).
+* ``prompt_tokens_per_s`` — prompt tokens ACCOUNTED (resumed + computed)
+  per second; the cached leg pays compute only for the computed share.
+* ``hit_rate`` / ``resumed_fraction`` — index chunk hit rate and the
+  fraction of prompt tokens whose prefill was actually skipped.
+
+Top-level claims: ``speedup`` (cached tokens/s over no-cache tokens/s)
+and ``tokens_match`` — the greedy decode output of the cached leg is
+TOKEN-IDENTICAL to the no-cache leg's, request by request.  The
+structural gate in ``check_regression.py`` fails CI (never downgraded by
+``BENCH_WARN_ONLY``) when a leg/field goes missing, ``tokens_match`` is
+false, or the cached leg stops hitting; the timing comparison against
+the committed baseline honors ``BENCH_WARN_ONLY`` like every timing.
+
+Model config: ``gemma3-27b`` reduced to CI size (d_model 128, 4 heads,
+d_head 32, vocab 512) and re-widened to 6 layers so the 5:1
+local:global pattern yields BOTH attention kinds (5 sliding-window
+w=32 + 1 global) — the two cache-write formulas the resume path must
+reproduce.  The full-size shapes this stands in for: 62 layers,
+d_model 5376, 32 heads / 16 KV heads, d_head 128, w=1024,
+vocab 262 144 (see ``configs/gemma3_27b``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+
+from repro import configs
+from repro.bench.emit import emit_json
+from repro.launch.serve import run_request_loop
+from repro.models import transformer
+from repro.serve.admit_queue import AdmitQueue
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig, KVSlabStore,
+                                  MonarchKVIndex)
+from repro.serve.resume import PrefixResumeEngine
+
+#: Prompt shape: shared prefix chunks (the hit traffic) + fresh tail
+#: chunks per request, matching serve_bench's layout.
+PREFIX_CHUNKS = 4
+TAIL_CHUNKS = 2
+#: Shared prefixes in the zipf pool (zipf(1.5) concentrates on the first).
+N_PREFIXES = 2
+
+
+def _arch():
+    """CI-sized gemma3 variant with both attention kinds (see module doc)."""
+    return dataclasses.replace(
+        configs.get_arch("gemma3-27b").reduced(), n_layers=6)
+
+
+def _requests(n: int, seed: int) -> list[np.ndarray]:
+    """(1, S) token batches: zipf-shared prefixes + unique tails."""
+    rng = np.random.default_rng(seed)
+    vocab = _arch().vocab_size
+    prefixes = [rng.integers(1, vocab, (1, PREFIX_CHUNKS * CHUNK_TOKENS))
+                for _ in range(N_PREFIXES)]
+    out = []
+    for _ in range(n):
+        p = prefixes[min(int(rng.zipf(1.5)) - 1, N_PREFIXES - 1)]
+        tail = rng.integers(1, vocab, (1, TAIL_CHUNKS * CHUNK_TOKENS))
+        out.append(np.concatenate([p, tail], axis=1).astype(np.int32))
+    return out
+
+
+def _mk_index() -> MonarchKVIndex:
+    """Prefix-fingerprint index with slab store; install on 2nd offer."""
+    return MonarchKVIndex(
+        KVIndexConfig(n_sets=8, set_ways=64, admit_after_reads=1,
+                      rotate_every=1 << 30, fingerprint="prefix"),
+        slab_store=KVSlabStore())
+
+
+def _mk_engine(index: MonarchKVIndex, decode_tokens: int):
+    cfg = _arch()
+    max_seq = (PREFIX_CHUNKS + TAIL_CHUNKS) * CHUNK_TOKENS + decode_tokens
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return PrefixResumeEngine(params, cfg, max_seq=max_seq, index=index,
+                              decode_tokens=decode_tokens)
+
+
+def _no_cache_leg(engine, requests, decode_tokens: int):
+    """Full prefill + greedy decode per request, no index in the loop."""
+    decoded = []
+    t0 = time.perf_counter()
+    for toks in requests:
+        res = engine.prefill(toks, hits=None)       # hits=None: no resume
+        decoded.append(engine.decode(res, decode_tokens))
+    total_s = time.perf_counter() - t0
+    return decoded, {
+        "n_requests": len(requests),
+        "total_s": round(total_s, 3),
+        "tokens_per_s": round(len(requests) * decode_tokens / total_s, 2),
+        "prompt_tokens_per_s": round(
+            sum(r.shape[1] for r in requests) / total_s, 1),
+        "hit_rate": 0.0,
+        "resumed_fraction": 0.0,
+    }
+
+
+def _cached_leg(engine, requests, decode_tokens: int):
+    """The production path: lookup -> restore -> partial prefill ->
+    submit-after-prefill -> decode, via ``run_request_loop``."""
+    q = AdmitQueue(engine.index)
+    prefill_fn, base_decode = engine.request_fns(decode_tokens)
+    decoded = []
+
+    def decode_fn(toks, result):
+        base_decode(toks, result)
+        decoded.append(result.state["decoded"])
+
+    t0 = time.perf_counter()
+    try:
+        recs = run_request_loop(q, requests, prefill_fn=prefill_fn,
+                                decode_fn=decode_fn)
+        q.flush()
+    finally:
+        q.close()
+    total_s = time.perf_counter() - t0
+    chunks = sum(r.chunks for r in recs)
+    resumed = sum(r.resumed_chunks for r in recs)
+    return decoded, {
+        "n_requests": len(recs),
+        "total_s": round(total_s, 3),
+        "tokens_per_s": round(len(recs) * decode_tokens / total_s, 2),
+        "prompt_tokens_per_s": round(
+            chunks * CHUNK_TOKENS / total_s, 1),
+        "hit_rate": round(float(engine.index.hit_rate), 4),
+        "resumed_fraction": round(resumed / max(chunks, 1), 4),
+    }
+
+
+def _warmup(requests, decode_tokens: int) -> None:
+    """Compile every shape the timed legs hit, on throwaway state: the
+    full-prompt prefill, the resumed suffix prefill (all hit runs the
+    zipf stream can produce), and the decode step.  The jit cache is
+    global, so the timed legs pay zero compilation."""
+    idx = _mk_index()
+    engine = _mk_engine(idx, decode_tokens)
+    decoded, _ = _cached_leg(engine, requests, decode_tokens)
+    assert len(decoded) == len(requests)
+
+
+def run(csv_rows: list[str], quick: bool = False) -> dict:
+    n = 10 if quick else 24
+    decode_tokens = 4 if quick else 8
+    requests = _requests(n, seed=3)
+    _warmup(requests, decode_tokens)
+
+    idx = _mk_index()
+    engine = _mk_engine(idx, decode_tokens)
+    base_decoded, no_cache = _no_cache_leg(engine, requests, decode_tokens)
+    print(f"[decode_bench] no_cache: {no_cache['tokens_per_s']:.1f} tok/s "
+          f"decode, {no_cache['prompt_tokens_per_s']:.0f} tok/s prompt, "
+          f"{no_cache['total_s']:.1f}s")
+
+    cached_decoded, cached = _cached_leg(engine, requests, decode_tokens)
+    print(f"[decode_bench] cached:   {cached['tokens_per_s']:.1f} tok/s "
+          f"decode, hit {cached['hit_rate']:.0%}, resumed "
+          f"{cached['resumed_fraction']:.0%} of prompt tokens, "
+          f"{cached['total_s']:.1f}s")
+
+    tokens_match = (len(base_decoded) == len(cached_decoded) and all(
+        np.array_equal(a, b)
+        for a, b in zip(base_decoded, cached_decoded)))
+    speedup = round(cached["tokens_per_s"]
+                    / max(no_cache["tokens_per_s"], 1e-9), 3)
+    print(f"[decode_bench] speedup {speedup:.2f}x, tokens_match "
+          f"{tokens_match} ({n} requests x {decode_tokens} greedy tokens)")
+
+    for name, leg in (("no_cache", no_cache), ("cached", cached)):
+        csv_rows.append(
+            f"decode_{name},{leg['total_s'] * 1e6 / n:.0f},"
+            f"tokens_per_s={leg['tokens_per_s']}")
+
+    cfg = _arch()
+    payload = {
+        "legs": {"no_cache": no_cache, "cached": cached},
+        "speedup": speedup,
+        "hit_rate": cached["hit_rate"],
+        "tokens_match": bool(tokens_match),
+        "config": {
+            "arch": cfg.name, "n_layers": cfg.n_layers,
+            "layer_pattern": cfg.layer_pattern(),
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "sliding_window": cfg.sliding_window,
+            "vocab_size": cfg.vocab_size,
+            "prefix_chunks": PREFIX_CHUNKS, "tail_chunks": TAIL_CHUNKS,
+            "chunk_tokens": CHUNK_TOKENS, "n_prefixes": N_PREFIXES,
+            "decode_tokens": decode_tokens,
+            "fingerprint": "prefix",
+        },
+    }
+    path = emit_json("decode", payload, quick=quick)
+    print(f"[decode_bench] wrote {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows, quick=True)

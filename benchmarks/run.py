@@ -14,6 +14,9 @@ Modules (paper artifact -> bench):
     front end      -> serve_bench        (open-loop request latency: Poisson
                                           + burst-trace arrivals, p50/p99,
                                           goodput, shed rate)
+    decode path    -> decode_bench       (prefix-cache resume vs no-cache:
+                                          decode tokens/s, hit rate,
+                                          token-identity)
     §Roofline      -> roofline_summary   (dry-run three-term table)
 
 Each module appends ``name,us_per_call,derived`` CSV rows; the combined CSV
@@ -31,9 +34,9 @@ import time
 
 from repro.bench import BenchSizes
 
-from benchmarks import (fig9_cache, fig11_lifetime, fig12_14_hashing,
-                        kernels_bench, roofline_summary, serve_bench,
-                        string_match, table1_tech)
+from benchmarks import (decode_bench, fig9_cache, fig11_lifetime,
+                        fig12_14_hashing, kernels_bench, roofline_summary,
+                        serve_bench, string_match, table1_tech)
 
 CSV_PATH = os.path.join(os.path.dirname(__file__), "results.csv")
 
@@ -75,6 +78,8 @@ def main(argv=None) -> None:
         ("fig12_14_hashing", lambda rows: fig12_14_hashing.run(
             rows, quick=args.quick)),
         ("serve_bench", lambda rows: serve_bench.run(rows, quick=args.quick)),
+        ("decode_bench", lambda rows: decode_bench.run(
+            rows, quick=args.quick)),
         ("string_match", lambda rows: string_match.run(rows)),
         ("roofline_summary", lambda rows: roofline_summary.run(rows)),
     ]

@@ -5,10 +5,14 @@ serving stack uses them (vLLM-style prefix caching).
     PYTHONPATH=src python examples/serve_prefix_cache.py [--requests 24]
 
 Requests share zipf-distributed prompt prefixes; the index answers "is
-this 16-token chunk's KV already resident?" with ONE fused multi-set XAM
-search per request batch, admits chunks under the no-allocate +
-t_MWW-throttled policy, and rotates placement for wear evenness.  Prefill
-skips the longest cached prefix.
+this chunk's KV already resident?" with ONE fused multi-set XAM search
+per request batch (chained PREFIX fingerprints — equal fingerprint means
+equal entire prefix), admits chunks under the no-allocate +
+t_MWW-throttled policy, and rotates placement for wear evenness.  A hit
+is not just counted: the stored KV slabs are RESTORED into the decode
+cache and prefill runs only over the suffix, from its RoPE offset —
+decode then resumes token-identical to a full prefill
+(``repro.serve.resume``; pinned by tests/test_decode_resume.py).
 """
 from __future__ import annotations
 
@@ -18,12 +22,14 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
+from repro.launch.serve import run_request_loop
 from repro.models import transformer
-from repro.serve import step as serve_step
-from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+from repro.serve.admit_queue import AdmitQueue
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig, KVSlabStore,
+                                  MonarchKVIndex)
+from repro.serve.resume import PrefixResumeEngine
 
 
 def make_requests(n, rng, vocab, n_prefixes=4, prefix_len=64, tail_len=32):
@@ -34,7 +40,7 @@ def make_requests(n, rng, vocab, n_prefixes=4, prefix_len=64, tail_len=32):
     for _ in range(n):
         p = prefixes[min(int(rng.zipf(1.5)) - 1, n_prefixes - 1)]
         tail = rng.integers(1, vocab, tail_len).astype(np.int32)
-        reqs.append(np.concatenate([p, tail]))
+        reqs.append(np.concatenate([p, tail])[None, :])   # (1, S) batches
     return reqs
 
 
@@ -47,53 +53,45 @@ def main(argv=None):
     cfg = configs.get_arch("yi-9b").reduced()
     rng = np.random.default_rng(0)
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    idx = MonarchKVIndex(KVIndexConfig(n_sets=8, admit_after_reads=1))
+    # fingerprint="prefix": slab keys must identify the whole prefix.
+    idx = MonarchKVIndex(
+        KVIndexConfig(n_sets=8, admit_after_reads=1, fingerprint="prefix"),
+        slab_store=KVSlabStore())
+    admit_q = AdmitQueue(idx)
 
     reqs = make_requests(args.requests, rng, cfg.vocab_size)
-    max_seq = len(reqs[0]) + args.decode_tokens
-    prefill_fn = jax.jit(serve_step.make_prefill_step(cfg, max_seq))
-    decode_fn = jax.jit(serve_step.make_decode_step(cfg))
+    max_seq = reqs[0].shape[1] + args.decode_tokens
+    engine = PrefixResumeEngine(params, cfg, max_seq=max_seq, index=idx,
+                                decode_tokens=args.decode_tokens)
+    prefill_fn, decode_fn = engine.request_fns()
 
-    tokens_total, tokens_skipped = 0, 0
     t0 = time.time()
-    for r, toks in enumerate(reqs):
-        tok2d = toks[None, :]
-        hits = idx.lookup(tok2d)[0]                      # per-chunk bools
-        # longest cached prefix (contiguous leading hits)
-        n_cached = 0
-        for h in hits:
-            if not h:
-                break
-            n_cached += 1
-        skip = n_cached * CHUNK_TOKENS
-        tokens_total += len(toks)
-        tokens_skipped += skip
-        # prefill the full prompt (cache-correctness) — a paged-attention
-        # serving stack would materialize the cached chunks' KV instead of
-        # recomputing them; the INDEX decision is what Monarch provides.
-        batch = {"tokens": jnp.asarray(tok2d)}
-        logits, cache = prefill_fn(params, batch)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        for t in range(args.decode_tokens - 1):
-            pos = jnp.asarray(len(toks) + t, jnp.int32)
-            nxt, logits, cache = decode_fn(params, cache, nxt, pos)
-        idx.admit(tok2d)                                 # offer for admission
+    try:
+        recs = run_request_loop(admit_q, reqs, prefill_fn=prefill_fn,
+                                decode_fn=decode_fn)
+    finally:
+        admit_q.close()
     dt = time.time() - t0
 
+    tokens_total = sum(r.chunks for r in recs) * CHUNK_TOKENS
+    tokens_resumed = sum(r.resumed_chunks for r in recs) * CHUNK_TOKENS
     s = idx.stats
     print(f"[serve] {args.requests} requests, {args.decode_tokens} decode "
           f"tokens each, {dt:.1f}s total")
     print(f"[index] chunk hit rate {idx.hit_rate:.1%} "
           f"({s.chunk_hits}/{s.chunk_hits + s.chunk_misses}); "
           f"{s.searches} CAM searches")
-    print(f"[index] prefix KV skippable: {tokens_skipped}/{tokens_total} "
-          f"prompt tokens ({tokens_skipped / max(tokens_total, 1):.1%}) — "
-          f"the prefill compute a paged serving stack avoids")
+    print(f"[index] prefix KV resumed: {tokens_resumed}/{tokens_total} "
+          f"prompt tokens ({tokens_resumed / max(tokens_total, 1):.1%}) — "
+          f"prefill compute actually skipped, decode bit-identical "
+          f"(slab store {idx.slab_store.resident_bytes / 1e6:.2f} MB)")
     print(f"[index] durability policy: {s.admissions} admissions, "
           f"{s.admission_skips} no-allocate skips, {s.throttled} t_MWW "
           f"throttles, {s.evictions} evictions, {s.rotations} rotations")
     print(f"[index] install distribution over sets: "
           f"{idx.write_distribution().tolist()}")
+    audit = idx.slab_lockstep_report()
+    assert not audit["missing_slabs"] and not audit["orphan_slabs"], audit
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ class ArchConfig:
     vocab_size: int
     # Attention details.
     rope_theta: float = 10_000.0
+    use_rope: bool = True           # False = NoPE (position-free attention)
     sliding_window: int = 1024
     local_global_pattern: int = 0   # N local layers per 1 global (0 = all global)
     causal: bool = True

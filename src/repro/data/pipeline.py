@@ -119,6 +119,25 @@ def fingerprint_blocks(tokens: np.ndarray, block: int = 16) -> np.ndarray:
     return acc
 
 
+def prefix_fingerprint_blocks(tokens: np.ndarray, block: int = 16) -> np.ndarray:
+    """(B, S) int32 -> (B, S//block) uint32 prefix-CHAINED fingerprints.
+
+    Chunk i's fingerprint folds chunk i's content hash into chunk i-1's
+    fingerprint (``fp_i = fmix(fp_{i-1} ^ h(chunk_i))``), so equal
+    fingerprints imply equal *entire prefixes*, not just equal chunks.
+    This is the identity the KV-reuse serving path needs: a transformer
+    chunk's KV depends on every preceding token, so per-chunk-independent
+    fingerprints (:func:`fingerprint_blocks`) must never key KV slabs.
+    """
+    blocks = fingerprint_blocks(tokens, block)
+    out = np.empty_like(blocks)
+    acc = np.zeros(blocks.shape[0], np.uint32)
+    for i in range(blocks.shape[1]):
+        acc = murmur3_np(acc ^ blocks[:, i])
+        out[:, i] = acc
+    return out
+
+
 def dedup_mask(fps: np.ndarray, stored_bits: jnp.ndarray) -> np.ndarray:
     """True where a fingerprint already exists in the CAM index plane
     (stored_bits: (32, C) int8).  One XAM search per fingerprint batch."""

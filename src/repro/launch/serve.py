@@ -45,7 +45,9 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer
 from repro.serve import step as serve_step
 from repro.serve.admit_queue import AdmitQueue
-from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig, KVSlabStore,
+                                  MonarchKVIndex)
+from repro.serve.resume import PrefillResult, PrefixResumeEngine
 
 
 @dataclasses.dataclass
@@ -66,6 +68,7 @@ class RequestRecord:
     admitted: bool              # admission submit accepted
     retried: bool               # defer policy: submit retried after decode
     dropped: bool               # retry rejected too — admission forgone
+    resumed_chunks: int = 0     # chunks restored from KV slabs (resume path)
 
 
 def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
@@ -127,20 +130,34 @@ def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
             arrival = start
         hits = admit_q.lookup(toks)
         state = prefill_fn(toks, hits)
-        accepted = admit_q.submit_tokens(toks)
+        # Resume-aware prefills return a PrefillResult: its freshly
+        # computed KV slabs are staged WITH the submit, so the async
+        # admission commits slab and fingerprint together (lockstep).
+        slabs = state.slabs if isinstance(state, PrefillResult) else None
+        resumed = state.resumed_chunks if isinstance(state, PrefillResult) else 0
+        # Only resume-aware prefills produce slabs; plain queues (and
+        # stand-ins) keep the slab-less submit_tokens(tokens) signature.
+        submit = (lambda: admit_q.submit_tokens(toks, slabs=slabs)) \
+            if slabs is not None else (lambda: admit_q.submit_tokens(toks))
+        accepted = submit()
         if decode_fn is not None:
             decode_fn(toks, state)
         retried = dropped = False
         if not accepted:               # defer: retry once after decode
             retried = True
-            accepted = admit_q.submit_tokens(toks)
+            accepted = submit()
             dropped = not accepted
+            if dropped and slabs:      # forgone admission: staged slabs
+                store = admit_q.index.slab_store      # are garbage
+                for fp in slabs:
+                    store.discard(fp)
         done = now_fn() - t0
         rec = RequestRecord(
             arrival_s=arrival, start_s=start, done_s=done,
             latency_s=done - arrival,
             chunks=int(hits.size), hit_chunks=int(hits.sum()),
-            admitted=bool(accepted), retried=retried, dropped=dropped)
+            admitted=bool(accepted), retried=retried, dropped=dropped,
+            resumed_chunks=resumed)
         records.append(rec)
         if on_batch is not None:
             on_batch(i, toks, hits, rec)
@@ -159,6 +176,11 @@ def main(argv=None):
     ap.add_argument("--decode-tokens", type=int, default=8)
     ap.add_argument("--seq-shard-kv", action="store_true",
                     help="§Perf: split-KV decode cache layout")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="disable the prefix-cache DECODE resume path "
+                         "(index still counts hits, but every request "
+                         "recomputes its full prefill) — the no-cache "
+                         "reference behavior")
     # §6.2 durability knobs: the index derives its t_MWW admission window
     # from the lifetime target via the same formula as core/wear.py.
     ap.add_argument("--lifetime-years", type=float, default=None,
@@ -205,19 +227,30 @@ def main(argv=None):
 
     rng = np.random.default_rng(0)
     max_seq = args.prompt_len + args.decode_tokens
+    # Prefix-cache DECODE resume: on when the arch supports it (attention
+    # only).  The resume index hashes with chained prefix fingerprints
+    # and carries the KV slab store the engine restores from.
+    resume = not args.no_resume and transformer.resume_supported(cfg)
+    fp_scheme = "prefix" if resume else "block"
     if args.lifetime_years is not None:
         kv_cfg = KVIndexConfig.with_lifetime(
             t_life_years=args.lifetime_years, endurance=args.endurance,
             ops_per_second=args.ops_per_sec, m_writes=args.m_writes,
-            clock=args.wear_clock, n_sets=8, n_shards=args.n_shards)
+            clock=args.wear_clock, n_sets=8, n_shards=args.n_shards,
+            fingerprint=fp_scheme)
         unit = "ops" if args.wear_clock == "ops" else "us of wall time"
         print(f"[serve] lifetime target {args.lifetime_years}y @ "
               f"{args.endurance:.0e} endurance -> t_MWW window = "
               f"{kv_cfg.window_ops} {unit}, M={kv_cfg.m_writes}")
     else:
         kv_cfg = KVIndexConfig(n_sets=8, m_writes=args.m_writes,
-                               clock=args.wear_clock, n_shards=args.n_shards)
-    idx = MonarchKVIndex(kv_cfg)
+                               clock=args.wear_clock, n_shards=args.n_shards,
+                               fingerprint=fp_scheme)
+    idx = MonarchKVIndex(kv_cfg,
+                         slab_store=KVSlabStore() if resume else None)
+    if not resume and not args.no_resume:
+        print(f"[serve] resume path off: {cfg.name} has recurrent layers "
+              "(prefix hits counted, prefill not skipped)")
     if args.n_shards > 1:
         placement = ("co-located, 1 device (collapsed to the unsharded "
                      "single-launch path)" if idx.set_mesh is None
@@ -234,8 +267,13 @@ def main(argv=None):
         p_named = sharding.to_named(
             sharding.param_specs(jax.eval_shape(lambda: params), mesh), mesh)
         params = jax.tree.map(jax.device_put, params, p_named)
-        prefill_fn = jax.jit(serve_step.make_prefill_step(cfg, max_seq))
-        decode_fn = jax.jit(serve_step.make_decode_step(cfg))
+        if resume:
+            engine = PrefixResumeEngine(params, cfg, max_seq=max_seq,
+                                        index=idx,
+                                        decode_tokens=args.decode_tokens)
+        else:
+            prefill_fn = jax.jit(serve_step.make_prefill_step(cfg, max_seq))
+            decode_fn = jax.jit(serve_step.make_decode_step(cfg))
 
         # shared prefix -> index hits after the first batch
         prefix = rng.integers(1, cfg.vocab_size,
@@ -255,28 +293,35 @@ def main(argv=None):
         # (printing the empty-slice mean would be a NaN + RuntimeWarning)
         n_prefix_chunks = len(prefix) // CHUNK_TOKENS
 
-        def model_prefill(toks, hits):
-            logits, cache = prefill_fn(params, {"tokens": jnp.asarray(toks)})
-            # Submit happens right after this returns: the worker drains
-            # the install while the decode loop runs, and the queue is
-            # (usually) empty again before the next batch's
+        if resume:
+            # Submit happens right after prefill returns: the worker
+            # commits the staged slabs while the decode loop runs, and
+            # the queue is (usually) empty again before the next batch's
             # read-your-writes lookup.
-            return logits, cache
+            model_prefill, model_decode = engine.request_fns()
+        else:
+            def model_prefill(toks, hits):
+                logits, cache = prefill_fn(params,
+                                           {"tokens": jnp.asarray(toks)})
+                return logits, cache
 
-        def model_decode(toks, state):
-            logits, cache = state
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-            outs = [np.asarray(nxt)]
-            for t in range(args.decode_tokens - 1):
-                pos = jnp.asarray(toks.shape[1] + t, jnp.int32)
-                nxt, logits, cache = decode_fn(params, cache, nxt, pos)
-                outs.append(np.asarray(nxt))
+            def model_decode(toks, state):
+                logits, cache = state
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                outs = [np.asarray(nxt)]
+                for t in range(args.decode_tokens - 1):
+                    pos = jnp.asarray(toks.shape[1] + t, jnp.int32)
+                    nxt, logits, cache = decode_fn(params, cache, nxt, pos)
+                    outs.append(np.asarray(nxt))
 
         def report(i, toks, hits, rec):
             cached = (f"{hits[:, :n_prefix_chunks].mean():.0%}"
                       if n_prefix_chunks else "n/a")
+            extra = (f", resumed {rec.resumed_chunks}/{rec.chunks} chunks"
+                     if resume else "")
             print(f"[serve] batch of {toks.shape[0]}: prefix chunks cached "
-                  f"{cached}, decoded {args.decode_tokens} tokens each")
+                  f"{cached}{extra}, decoded {args.decode_tokens} tokens "
+                  "each")
 
         t0 = time.time()
         run_request_loop(admit_q, batches, prefill_fn=model_prefill,
@@ -288,6 +333,11 @@ def main(argv=None):
           f"{idx.hit_rate:.1%}, {s.searches} CAM searches, "
           f"{s.admissions} admissions ({s.admit_calls} device calls), "
           f"{s.throttled} throttles")
+    if resume:
+        tot = engine.resumed_chunks + engine.computed_chunks
+        print(f"[serve] resume: {engine.resumed_chunks}/{tot} prompt chunks "
+              f"served from KV slabs "
+              f"({idx.slab_store.resident_bytes / 1e6:.2f} MB resident)")
     aq = admit_q.stats
     print(f"[serve] admit queue: {aq.submitted} fps in {aq.batches} batches "
           f"({'inline' if args.sync_admit else 'async'}), "

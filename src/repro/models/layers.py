@@ -86,8 +86,9 @@ def _qkv(params, x, cfg: ArchConfig, positions):
     q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
     k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
     v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
 
 
@@ -192,8 +193,9 @@ def decode_attention(params, x, cfg: ArchConfig, cache_k, cache_v, pos,
     q = (x @ params["wq"]).reshape(b, 1, cfg.n_heads, cfg.d_head)
     k_new = (x @ params["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
     v_new = (x @ params["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
 
@@ -230,8 +232,9 @@ def decode_attention_ring(params, x, cfg: ArchConfig, cache_k, cache_v, pos,
     q = (x @ params["wq"]).reshape(b, 1, cfg.n_heads, cfg.d_head)
     k_new = (x @ params["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
     v_new = (x @ params["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
     cache_k = jax.lax.dynamic_update_slice_in_dim(
         cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(

@@ -250,15 +250,51 @@ def decode_step(params, cfg: ArchConfig, tokens, cache, pos):
     return logits, new_cache
 
 
-def prefill(params, cfg: ArchConfig, batch, max_seq: int):
+def resume_supported(cfg: ArchConfig) -> bool:
+    """True when the prefix-cache resume path can serve this arch: every
+    layer's decode state must be reconstructible from per-position KV
+    (attention only).  SSM/hybrid recurrent states fold the whole prefix
+    into one vector and cannot be restored from chunk slabs."""
+    return all(k in (ATTN_GLOBAL, ATTN_LOCAL) for k in cfg.layer_pattern())
+
+
+def prefix_length(prefix_kv) -> int:
+    """Token length P of a ``prefix_kv`` pytree (as returned by
+    ``prefill(..., return_kv=True)``: the sequence axis is always the
+    third-from-last — (..., S, KV_heads, d_head))."""
+    leaf = jax.tree.leaves(prefix_kv)[0]
+    return leaf.shape[leaf.ndim - 3]
+
+
+def prefill(params, cfg: ArchConfig, batch, max_seq: int, *,
+            prefix_kv=None, return_kv: bool = False):
     """Run the trunk over a prompt and build the decode cache.
-    Returns (last-token logits (B, V), cache)."""
+    Returns (last-token logits (B, V), cache) — plus a per-layer KV
+    pytree for the tokens of THIS call when ``return_kv=True``.
+
+    ``prefix_kv`` resumes from a cached prefix: a pytree mirroring the
+    cache layout with post-RoPE k/v of the first P prompt tokens (seq
+    axis third-from-last).  ``batch`` then holds only the suffix; its
+    positions start at P (RoPE offset contract: resumed tokens attend at
+    their original absolute positions), attention runs over
+    concat(prefix, suffix) with ``q_offset=P``, and the cache is built
+    over the combined sequence — bit-identical to a full prefill of the
+    whole prompt, since the slabs hold exactly the k/v a full prefill
+    would compute."""
+    if prefix_kv is not None and not resume_supported(cfg):
+        raise NotImplementedError(
+            f"prefix resume needs attention-only layers; {cfg.name} "
+            "has recurrent (SSM) state that chunk slabs cannot restore")
     x, positions = _input_embeds(params, cfg, batch)
     b, s, _ = x.shape
+    p_len = 0
+    if prefix_kv is not None:
+        p_len = prefix_length(prefix_kv)
+        positions = positions + jnp.int32(p_len)
     group, n_groups, rem = cfg.scan_groups()
     shared = params.get("shared")
 
-    def fill_block(p, kind, xc, bcache):
+    def fill_block(p, kind, xc, bcache, pk):
         h = layers.rms_norm(xc, p["ln1"])
         if _is_attn(kind):
             local = kind == ATTN_LOCAL
@@ -266,52 +302,72 @@ def prefill(params, cfg: ArchConfig, batch, max_seq: int):
             q = layers._seq_shard(q, cfg)
             k = layers._seq_shard(k, cfg)
             v = layers._seq_shard(v, cfg)
+            if pk is not None:
+                # k/v over the COMBINED sequence: cached prefix ++ new.
+                k_all = jnp.concatenate([pk["k"].astype(k.dtype), k], axis=1)
+                v_all = jnp.concatenate([pk["v"].astype(v.dtype), v], axis=1)
+            else:
+                k_all, v_all = k, v
+            s_tot = k_all.shape[1]
             out = layers.chunked_attention(
-                q, k, v, causal=cfg.causal and not cfg.encoder_only,
+                q, k_all, v_all, causal=cfg.causal and not cfg.encoder_only,
                 window=cfg.sliding_window if local else 0,
-                softcap=cfg.logit_softcap, q_offset=0)
+                softcap=cfg.logit_softcap, q_offset=p_len)
             out = out.reshape(b, s, -1) @ p["attn"]["wo"]
             xc = xc + out
             h2 = layers.rms_norm(xc, p["ln2"])
             h2 = (moe.moe_block(p["moe"], h2, cfg) if "moe" in p
                   else layers.mlp_block(p["mlp"], h2, cfg))
             xc = xc + h2
-            # write cache (ring layout for local, plain for global).
+            # write cache (ring layout for local, plain for global) over
+            # the combined sequence — same formulas as a full prefill of
+            # s_tot tokens.
             cw = bcache["k"].shape[1]
             if local:
-                take = min(cw, s)
-                ks, vs = k[:, -take:], v[:, -take:]
-                slots = (jnp.arange(s - take, s) % cw).astype(jnp.int32)
+                take = min(cw, s_tot)
+                ks, vs = k_all[:, -take:], v_all[:, -take:]
+                slots = (jnp.arange(s_tot - take, s_tot) % cw).astype(jnp.int32)
                 ck = bcache["k"].at[:, slots].set(ks.astype(DTYPE))
                 cv = bcache["v"].at[:, slots].set(vs.astype(DTYPE))
             else:
                 ck = jax.lax.dynamic_update_slice_in_dim(
-                    bcache["k"], k.astype(DTYPE), 0, axis=1)
+                    bcache["k"], k_all.astype(DTYPE), 0, axis=1)
                 cv = jax.lax.dynamic_update_slice_in_dim(
-                    bcache["v"], v.astype(DTYPE), 0, axis=1)
-            return xc, {"k": ck, "v": cv}
+                    bcache["v"], v_all.astype(DTYPE), 0, axis=1)
+            kv = {"k": k.astype(DTYPE), "v": v.astype(DTYPE)}
+            return xc, {"k": ck, "v": cv}, kv
         # SSM prefill: the chunked block already carries the recurrent state
         # across chunks; return_state hands back (h_final, conv tail) to
         # seed decode exactly.
         fn = ssm.mamba1_block if kind == MAMBA1 else ssm.mamba2_block
         out, h_final, conv_tail = fn(p["ssm"], h, cfg, return_state=True)
-        return xc + out, {"h": h_final, "conv": conv_tail}
+        return xc + out, {"h": h_final, "conv": conv_tail}, None
 
     cache = init_cache(cfg, b, max_seq)
+    kv_out = {}
     if n_groups > 0:
-        def body(xc, gp_and_cache):
-            gp, gc = gp_and_cache
-            new_gc = {}
+        pk_groups = None if prefix_kv is None else prefix_kv["groups"]
+        def body(xc, scanned):
+            gp, gc, gpk = scanned
+            new_gc, new_kv = {}, {}
             for i, kind in enumerate(group):
                 p = shared if kind == SHARED_ATTN else gp[f"b{i}"]
-                xc, new_gc[f"b{i}"] = fill_block(p, kind, xc, gc[f"b{i}"])
-            return xc, new_gc
-        x, new_groups = jax.lax.scan(
-            jax.checkpoint(body), x, (params["groups"], cache["groups"]))
+                bpk = None if gpk is None else gpk[f"b{i}"]
+                xc, new_gc[f"b{i}"], new_kv[f"b{i}"] = fill_block(
+                    p, kind, xc, gc[f"b{i}"], bpk)
+            return xc, (new_gc, new_kv)
+        x, (new_groups, kv_groups) = jax.lax.scan(
+            jax.checkpoint(body), x,
+            (params["groups"], cache["groups"], pk_groups))
         cache = dict(cache, groups=new_groups)
+        kv_out["groups"] = kv_groups
     for i, kind in enumerate(rem):
         p = shared if kind == SHARED_ATTN else params[f"rem{i}"]
-        x, cache[f"rem{i}"] = fill_block(p, kind, x, cache[f"rem{i}"])
+        rpk = None if prefix_kv is None else prefix_kv.get(f"rem{i}")
+        x, cache[f"rem{i}"], kv_out[f"rem{i}"] = fill_block(
+            p, kind, x, cache[f"rem{i}"], rpk)
     x = layers.rms_norm(x, params["final_ln"])
     logits = layers.unembed_logits(params["embed"], x[:, -1:])[:, 0]
+    if return_kv:
+        return logits, cache, kv_out
     return logits, cache

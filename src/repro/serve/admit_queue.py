@@ -60,7 +60,6 @@ import threading
 
 import numpy as np
 
-from repro.data.pipeline import fingerprint_blocks
 from repro.serve.kv_index import CHUNK_TOKENS, MonarchKVIndex
 
 #: Coalesced-unit size cap: bounds the single device dispatch a drained
@@ -206,10 +205,17 @@ class AdmitQueue:
                     or not self._over_bound_locked(int(fps.size)))
                 self._check_open()   # close() woke us: the worker is going
             elif self.policy == "shed":
+                store = self.index.slab_store
                 while self._over_bound_locked(int(fps.size)) and self._queue:
                     old = self._queue.popleft()
                     self._pending.subtract(int(f) for f in old)
                     self._pending += collections.Counter()  # drop zeros
+                    if store is not None:
+                        # the shed batch's admission will never run, so
+                        # its staged KV slabs are garbage (a later
+                        # re-offer recomputes and re-stages them).
+                        for f in old:
+                            store.discard(int(f))
                     self.stats.shed += 1
                     self.stats.shed_fps += int(old.size)
             elif self._over_bound_locked(int(fps.size)):    # defer
@@ -223,10 +229,26 @@ class AdmitQueue:
             self._drain_available()
         return True
 
-    def submit_tokens(self, tokens: np.ndarray) -> bool:
+    def submit_tokens(self, tokens: np.ndarray, slabs=None) -> bool:
         """Fingerprint a token batch and :meth:`submit` its unique chunks
-        (the queue twin of ``MonarchKVIndex.admit``)."""
-        fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
+        (the queue twin of ``MonarchKVIndex.admit``).
+
+        Hashing goes through ``index.fingerprints`` so the scheme
+        (``"block"`` vs ``"prefix"``) always matches lookup.  ``slabs``
+        (optional ``{fp: kv-slab}``) are STAGED into the index's slab
+        store before the batch enqueues, so by the time the async worker
+        drains the batch every installing fingerprint finds its slab to
+        commit — the submit-after-prefill ordering the resume path's
+        read-your-writes guarantee builds on."""
+        if slabs:
+            store = self.index.slab_store
+            if store is None:
+                raise ValueError(
+                    "submit_tokens(slabs=...) needs an index with an "
+                    "attached KVSlabStore")
+            for fp, slab in slabs.items():
+                store.stage(int(fp), slab)
+        fps = np.unique(self.index.fingerprints(tokens).reshape(-1))
         return self.submit(fps)
 
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
@@ -239,7 +261,7 @@ class AdmitQueue:
         with self._cv:
             self._check_open()
         if self.read_your_writes:
-            fps = fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1)
+            fps = self.index.fingerprints(tokens).reshape(-1)
             with self._cv:
                 waiting = bool(self._pending) and any(
                     int(fp) in self._pending for fp in fps)

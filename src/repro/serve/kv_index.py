@@ -90,6 +90,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 
 import numpy as np
@@ -103,7 +104,8 @@ from repro.core import geometry
 from repro.core import lifetime as lifetime_mod
 from repro.core import wear
 from repro.core.timing import SECONDS_PER_YEAR, t_mww_seconds
-from repro.data.pipeline import fingerprint_blocks, murmur3_np
+from repro.data.pipeline import (fingerprint_blocks, murmur3_np,
+                                 prefix_fingerprint_blocks)
 from repro.kernels.common import (
     bucket_pow2, pack_bits_np, resolve_plane_format)
 from repro.kernels.xam_search import ops as xam_ops
@@ -158,6 +160,14 @@ class KVIndexConfig:
         key-bit axis — ~8x less HBM->VMEM plane traffic, bit-identical
         results; requires ``key_bits`` divisible by 8).  ``None``
         (default) reads the ``REPRO_PLANE_FORMAT`` env knob.
+    fingerprint : str
+        Chunk-fingerprint scheme: ``"block"`` (default) hashes each
+        16-token chunk independently — right for dedup, where equal
+        content is the identity.  ``"prefix"`` chains chunk hashes
+        (``data.pipeline.prefix_fingerprint_blocks``) so equal
+        fingerprints imply equal ENTIRE prefixes — required whenever the
+        index keys KV slabs (a chunk's KV depends on every preceding
+        token, so a mid-prompt content match must NOT hit).
     """
     n_sets: int = 32
     set_ways: int = 512           # CAM columns per set
@@ -169,6 +179,7 @@ class KVIndexConfig:
     n_shards: int = 1             # set-axis mesh shards (divides n_sets)
     plane_format: str | None = None  # None = REPRO_PLANE_FORMAT env knob
     clock: str = "ops"            # t_MWW cycle domain: "ops" | "wall"
+    fingerprint: str = "block"    # chunk hashing: "block" | "prefix"
 
     @classmethod
     def with_lifetime(cls, *, t_life_years: float, endurance: float = 1e8,
@@ -517,6 +528,83 @@ def _shard_property(name: str, doc: str, settable: bool = True):
     return property(get, set_ if settable else None, None, doc)
 
 
+class KVSlabStore:
+    """Host-side KV slab store kept in LOCKSTEP with the index.
+
+    Slabs are keyed by the same ``uint32`` fingerprints the index stores
+    in its ``fp_of`` columns, and their lifetime is slaved to the
+    admission pipeline: a slab is **staged** when its chunk's KV is
+    computed (before the async admission drains), **committed** to
+    resident exactly when the fingerprint installs (or refreshes a
+    resident entry), **discarded** when the offer is skipped or
+    throttled, and **dropped** when the fingerprint's way is evicted.
+    Set ROTATION never touches the store: rotation remaps fingerprints
+    to new physical sets but evicts nothing, and slab keys are
+    fingerprints, not (set, way) slots — so resident slabs survive any
+    number of rotations by construction.
+
+    Thread safety: all methods take the store lock; staging (serving
+    thread, right after prefill) may race commits (AdmitQueue worker).
+
+    A slab is an arbitrary pytree (per-layer k/v arrays for one chunk);
+    the store never inspects it beyond byte accounting.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._staged: dict[int, object] = {}
+        self._resident: dict[int, object] = {}
+
+    @staticmethod
+    def _nbytes(slab) -> int:
+        return sum(int(getattr(leaf, "nbytes", 0))
+                   for leaf in jax.tree.leaves(slab))
+
+    def stage(self, fp: int, slab) -> None:
+        """Hold a freshly computed slab until its admission decides."""
+        with self._lock:
+            self._staged[int(fp)] = slab
+
+    def commit(self, fp: int) -> None:
+        """Fingerprint installed (or re-offered while resident): promote
+        its staged slab.  No-op when nothing is staged (e.g. a resident
+        refresh admitted via the slab-less ``admit()`` path)."""
+        with self._lock:
+            slab = self._staged.pop(int(fp), None)
+            if slab is not None:
+                self._resident[int(fp)] = slab
+
+    def discard(self, fp: int) -> None:
+        """Offer skipped/throttled/shed: the staged slab is garbage."""
+        with self._lock:
+            self._staged.pop(int(fp), None)
+
+    def drop(self, fp: int) -> None:
+        """Fingerprint evicted from its way: the resident slab dies with
+        it (the lockstep half of the index's eviction)."""
+        with self._lock:
+            self._resident.pop(int(fp), None)
+
+    def get(self, fp: int):
+        """Resident slab for ``fp``, or None (staged slabs are NOT
+        servable — their admission has not happened yet)."""
+        with self._lock:
+            return self._resident.get(int(fp))
+
+    def resident_fps(self) -> set[int]:
+        with self._lock:
+            return set(self._resident)
+
+    def staged_fps(self) -> set[int]:
+        with self._lock:
+            return set(self._staged)
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(self._nbytes(s) for s in self._resident.values())
+
+
 class MonarchKVIndex:
     """Set-sharded Monarch flat-CAM prefix index (see module docstring).
 
@@ -588,7 +676,7 @@ class MonarchKVIndex:
 
     def __init__(self, cfg: KVIndexConfig | None = None, seed: int = 0,
                  dispatch: str = "auto", admit_dispatch: str | None = None,
-                 now_fn=None):
+                 now_fn=None, slab_store: KVSlabStore | None = None):
         # cfg default constructed per instance: a shared KVIndexConfig()
         # default would alias mutable config across indexes.
         assert dispatch in ("auto", "fanout"), dispatch
@@ -605,6 +693,14 @@ class MonarchKVIndex:
             raise ValueError(
                 f"KVIndexConfig.clock={c.clock!r}: expected one of "
                 f"{wear.CLOCKS}")
+        if c.fingerprint not in ("block", "prefix"):
+            raise ValueError(
+                f"KVIndexConfig.fingerprint={c.fingerprint!r}: expected "
+                "'block' or 'prefix'")
+        # Optional KV slab store, kept in lockstep by admit_fps's host
+        # fold (commit on install, discard on skip/throttle, drop on
+        # evict); None = tag-only index (dedup, counting).
+        self.slab_store = slab_store
         # t_MWW clock domain.  "ops": the op counter is the cycle proxy
         # (pre-existing semantics, now_fn never consulted).  "wall": cycle
         # stamps are host wall microseconds relative to construction,
@@ -840,6 +936,16 @@ class MonarchKVIndex:
         else:
             self._wall_folded += wear.CLOCK_REBASE_AT
 
+    def fingerprints(self, tokens: np.ndarray) -> np.ndarray:
+        """(B, S) tokens -> (B, S//16) uint32 chunk fingerprints under
+        this index's configured scheme (``cfg.fingerprint``).  Every
+        caller that feeds fingerprints back to this index (AdmitQueue,
+        resume engine, benches) MUST hash through here so lookup,
+        admission and slab keys agree."""
+        if self.cfg.fingerprint == "prefix":
+            return prefix_fingerprint_blocks(tokens, CHUNK_TOKENS)
+        return fingerprint_blocks(tokens, CHUNK_TOKENS)
+
     def lookup(self, tokens: np.ndarray) -> np.ndarray:
         """Probe the index for every whole 16-token chunk of a batch.
 
@@ -859,7 +965,7 @@ class MonarchKVIndex:
             reference dispatches one call per shard holding queries.
         """
         self._maybe_rebase_clock()
-        fps = fingerprint_blocks(tokens, CHUNK_TOKENS)
+        fps = self.fingerprints(tokens)
         flat = fps.reshape(-1)
         self.stats.lookups += 1
         if flat.size == 0:
@@ -898,7 +1004,7 @@ class MonarchKVIndex:
         Fingerprints are uniqued (order-preserved) and forwarded to
         :meth:`admit_fps` — O(1) jitted device calls per shard regardless
         of batch size."""
-        fps = np.unique(fingerprint_blocks(tokens, CHUNK_TOKENS).reshape(-1))
+        fps = np.unique(self.fingerprints(tokens).reshape(-1))
         self.admit_fps(fps)
 
     def _admit_one(self, fp: np.uint32):
@@ -959,11 +1065,19 @@ class MonarchKVIndex:
         # operation on a given fingerprint — install, touch bump, evict of
         # its slot — happens inside its one owning partition, so batch
         # order and the fanout path's partition-major order produce the
-        # same shadow state.)
+        # same shadow state.)  The slab store folds in lockstep: a
+        # victim's slab dies with its way, a staged slab becomes resident
+        # exactly when its fingerprint installs (or refreshes a resident
+        # way), and is discarded on skip/throttle so rejected KV never
+        # serves a hit.
+        store = self.slab_store
         for i in range(b):
             if evict[i]:
                 self.slot_of.pop(int(old_fp[i]), None)
+                if store is not None:
+                    store.drop(int(old_fp[i]))
             fp = int(fps[i])
+            was_resident = fp in self.slot_of
             if skip[i]:
                 self.first_touch[fp] = self.first_touch.get(fp, 0) + 1
             if inst[i]:
@@ -972,6 +1086,11 @@ class MonarchKVIndex:
                 self.first_touch.pop(fp, None)
                 self.valid_np[s, w] = True
                 self.fp_of_np[s, w] = fps[i]
+            if store is not None:
+                if inst[i] or was_resident:
+                    store.commit(fp)
+                else:
+                    store.discard(fp)
         batch_installs = int(inst.sum())
         self.stats.admissions += batch_installs
         self.stats.admission_skips += int(skip.sum())
@@ -1233,6 +1352,24 @@ class MonarchKVIndex:
     def hit_rate(self) -> float:
         t = self.stats.chunk_hits + self.stats.chunk_misses
         return self.stats.chunk_hits / max(t, 1)
+
+    def slab_lockstep_report(self) -> dict:
+        """Lockstep audit between the index and its attached slab store.
+
+        Returns ``{"missing_slabs": [...], "orphan_slabs": [...]}`` —
+        resident fingerprints without a slab (only possible when some
+        admissions bypassed slab staging, e.g. plain ``admit()``) and
+        slabs whose fingerprint the index no longer holds (a true
+        lockstep violation: an evicted way must drop its slab).  Both
+        empty when every admission staged a slab — tests assert exactly
+        that, across rotation/eviction/async-drain schedules.
+        """
+        if self.slab_store is None:
+            return {"missing_slabs": [], "orphan_slabs": []}
+        indexed = {int(fp) for fp in self.slot_of}
+        resident = self.slab_store.resident_fps()
+        return {"missing_slabs": sorted(indexed - resident),
+                "orphan_slabs": sorted(resident - indexed)}
 
     def write_distribution(self) -> np.ndarray:
         """Installs per PHYSICAL set — the wear-evenness metric (device

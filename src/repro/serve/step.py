@@ -14,6 +14,24 @@ def make_prefill_step(cfg: ArchConfig, max_seq: int):
     return prefill_step
 
 
+def make_resume_prefill_step(cfg: ArchConfig, max_seq: int):
+    """Prefill-from-offset for the prefix-cache resume path.
+
+    ``prefix_kv`` holds the cached prefix's post-RoPE per-layer k/v
+    (``None`` = ordinary full prefill); ``batch`` holds only the suffix
+    tokens, which attend at absolute positions starting at the prefix
+    length (the RoPE offset contract).  Always returns
+    ``(last-token logits, decode cache, kv-of-this-call)`` — the kv
+    pytree is what the caller slices into per-chunk slabs to stage for
+    admission.  jit-compatible: prefix/suffix lengths are static shapes,
+    so each distinct (P, S_suffix) pair compiles once.
+    """
+    def resume_prefill_step(params, batch, prefix_kv=None):
+        return transformer.prefill(params, cfg, batch, max_seq,
+                                   prefix_kv=prefix_kv, return_kv=True)
+    return resume_prefill_step
+
+
 def make_decode_step(cfg: ArchConfig, greedy: bool = True):
     def serve_step(params, cache, tokens, pos):
         """tokens: (B, 1) int32; pos: scalar int32.

@@ -31,7 +31,8 @@ import pytest
 
 from repro.data.pipeline import fingerprint_blocks
 from repro.serve.admit_queue import AdmitQueue
-from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig, KVSlabStore,
+                                  MonarchKVIndex)
 
 N_THREADS = 4
 BATCHES_PER_THREAD = 6
@@ -134,6 +135,74 @@ def test_concurrent_submit_lookup_rotate_flush(n_shards):
     assert idx.stats.admissions == all_fps.size
     assert set(idx.slot_of) == {int(fp) for fp in all_fps}
     assert idx._shadow_hits(all_fps).all()
+    q.close()
+
+
+def test_decode_overlap_read_your_writes_includes_slabs():
+    """The resume-path race: submit-after-prefill admissions (fingerprints
+    staged WITH their KV slabs) run on the worker while other threads'
+    decode loops are already looking up the same prefixes.  Read-your-
+    writes must cover the SLAB too: once my lookup reports a chunk hit,
+    the slab the resume engine is about to fetch must be resident —
+    a hit whose slab lags behind would silently degrade every resume to
+    a recompute (or worse, race ``store.get`` against the commit).
+
+    Threads share zipf-style prefixes, so the same fingerprints are
+    re-offered concurrently from several threads (install on one,
+    resident-refresh commits on the rest); a slowed ``admit_fps`` keeps
+    batches deterministically pending at lookup time."""
+    idx = MonarchKVIndex(
+        KVIndexConfig(n_sets=8, set_ways=256, admit_after_reads=0,
+                      m_writes=1 << 20, window_ops=1 << 30,
+                      rotate_every=1 << 30, fingerprint="prefix"),
+        slab_store=KVSlabStore())
+    q = AdmitQueue(idx, background=True, read_your_writes=True)
+    real_admit = idx.admit_fps
+    idx.admit_fps = lambda fps: (time.sleep(0.02), real_admit(fps))[-1]
+
+    shared = [np.arange(1 + p * 1000, 1 + p * 1000 + 2 * CHUNK_TOKENS,
+                        dtype=np.int32)[None] for p in range(3)]
+    errors: list[tuple] = []
+    barrier = threading.Barrier(N_THREADS)
+
+    def serving_thread(tid: int):
+        rng = np.random.default_rng(40 + tid)
+        try:
+            barrier.wait(timeout=30)
+            for i in range(BATCHES_PER_THREAD):
+                prefix = shared[rng.integers(0, len(shared))]
+                tail = rng.integers(1 + (tid + 10) * 100_000,
+                                    (tid + 11) * 100_000,
+                                    (1, 2 * CHUNK_TOKENS)).astype(np.int32)
+                toks = np.concatenate([prefix, tail], axis=1)
+                fps = idx.fingerprints(toks).reshape(-1)
+                # submit-after-prefill: slabs staged with the fingerprints
+                q.submit_tokens(toks, slabs={
+                    int(f): np.full(4, int(f) & 0xFF) for f in fps})
+                # the decode loop's next lookup: every chunk I just
+                # submitted must hit AND carry a fetchable slab
+                hits = q.lookup(toks)
+                assert hits.all(), f"tid={tid} batch={i}"
+                for f in fps:
+                    assert idx.slab_store.get(int(f)) is not None, \
+                        f"tid={tid} batch={i}: hit without resident slab"
+        except BaseException as e:  # noqa: BLE001 — surfaced in main thread
+            errors.append((tid, e))
+
+    threads = [threading.Thread(target=serving_thread, args=(t,))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "decode-overlap thread hung"
+    assert not errors, errors
+    q.flush()
+    # lockstep held under the race: no resident fp lost its slab, no
+    # slab outlived its fp
+    audit = idx.slab_lockstep_report()
+    assert not audit["missing_slabs"] and not audit["orphan_slabs"]
+    assert idx.stats.evictions == 0
     q.close()
 
 

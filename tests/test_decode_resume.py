@@ -1,0 +1,371 @@
+"""Prefix-cache decode resume: the token-identity tier.
+
+The tentpole pin: greedy decode from a RESUMED cached prefix equals the
+full-prefill decode token-for-token — the prefix cache must be a pure
+compute optimization, never a numerics change.  Pinned here at three
+levels:
+
+* ``transformer.prefill(prefix_kv=...)`` directly: logits, the whole
+  decode-cache pytree, AND the returned suffix KV are bit-identical to a
+  full prefill, swept over RoPE on/off (``ArchConfig.use_rope``),
+  attention kinds (all-global yi-9b, local+global gemma3), and prompt
+  lengths straddling ``CHUNK_TOKENS`` boundaries.
+* :class:`repro.serve.resume.PrefixResumeEngine` through the index +
+  slab store: hits restore slabs, misses recompute, rotation keeps hits
+  (slab keys are fingerprints — rotation remaps sets, evicts nothing),
+  eviction drops the slab and degrades to a full recompute, a
+  hit-without-slab truncates the resume run — in every case the decoded
+  tokens match the no-cache reference.
+* The full serving loop (``run_request_loop`` + ``AdmitQueue``): a
+  randomized zipf schedule replayed at ``n_shards in {1, 2, 4}`` and
+  against the kept ``dispatch="fanout"`` oracle produces identical
+  per-request hits/resumed counts, identical policy state (installs,
+  planes, wear), and identical decoded tokens.  Rides the CI
+  forced-4-device leg, where the shard counts get real placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.serve import run_request_loop
+from repro.models import transformer
+from repro.serve.admit_queue import AdmitQueue
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig, KVSlabStore,
+                                  MonarchKVIndex)
+from repro.serve.resume import PrefixResumeEngine
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _arch(kind: str, use_rope: bool = True):
+    """CI-sized archs by attention mix: all-global, all-local, or both."""
+    if kind == "global":
+        cfg = configs.get_arch("yi-9b").reduced()
+    elif kind == "local":
+        cfg = configs.get_arch("gemma3-27b").reduced()
+    else:                                  # 5 local + 1 global (5:1 pattern)
+        cfg = dataclasses.replace(
+            configs.get_arch("gemma3-27b").reduced(), n_layers=6)
+    return dataclasses.replace(cfg, use_rope=use_rope)
+
+
+def _greedy(params, cfg, logits, cache, pos, n=3):
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    outs = []
+    for t in range(n):
+        outs.append(np.asarray(nxt))
+        logits, cache = transformer.decode_step(
+            params, cfg, nxt, cache, jnp.int32(pos + t))
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return np.concatenate(outs, axis=1)
+
+
+# On the default single-device tier, XLA CPU executes the full-prompt
+# and suffix shapes with identical reduction order, so resume is
+# bit-for-bit equal.  Under the CI forced-4-device leg XLA splits its
+# host thread pool across the virtual devices and re-tiles the fused
+# matmuls per shape — bf16 accumulation order then differs between the
+# two prefills (~1e-2 on logits), which is numerics, not a resume bug.
+# So: bit-identity pinned at 1 device, tight allclose there-plus-token
+# -identity (the invariant the paper-level claim actually needs) always.
+_EXACT = jax.device_count() == 1
+
+
+def _arrays_match(a, b, msg):
+    if _EXACT:
+        assert jnp.array_equal(a, b), msg
+    else:
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-2, atol=5e-2, err_msg=msg)
+
+
+def _tree_match(a, b, msg):
+    for pa, (path, la) in zip(jax.tree.leaves(b),
+                              jax.tree_util.tree_leaves_with_path(a)):
+        _arrays_match(la, pa, (msg, path))
+
+
+# ---------------------------------------------------------------------------
+# Transformer-level bit identity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_rope", [True, False])
+@pytest.mark.parametrize("kind", ["global", "local", "mixed"])
+def test_resume_prefill_bit_identity(rng, kind, use_rope):
+    """Resume-from-offset prefill == full prefill: logits, every decode
+    cache leaf, the suffix KV, and 3 greedy decode tokens, for prefix
+    lengths straddling chunk boundaries (S=40 leaves a 8-token partial
+    chunk that is always recomputed)."""
+    cfg = _arch(kind, use_rope)
+    params = transformer.init_params(jax.random.PRNGKey(1), cfg)
+    for s, p_chunks in ((48, 1), (48, 2), (40, 1)):
+        toks = rng.integers(1, cfg.vocab_size, (2, s)).astype(np.int32)
+        max_seq = s + 4
+        lg_f, cache_f, kv_f = transformer.prefill(
+            params, cfg, {"tokens": toks}, max_seq, return_kv=True)
+        p_len = p_chunks * CHUNK_TOKENS
+        prefix_kv = jax.tree.map(lambda a: a[..., :p_len, :, :], kv_f)
+        lg_r, cache_r, kv_r = transformer.prefill(
+            params, cfg, {"tokens": toks[:, p_len:]}, max_seq,
+            prefix_kv=prefix_kv, return_kv=True)
+        tag = f"{kind} rope={use_rope} S={s} P={p_len}"
+        _arrays_match(lg_f, lg_r, tag)
+        _tree_match(cache_f, cache_r, tag)
+        _tree_match(jax.tree.map(lambda a: a[..., p_len:, :, :], kv_f),
+                    kv_r, tag)
+        np.testing.assert_array_equal(
+            _greedy(params, cfg, lg_f, cache_f, s),
+            _greedy(params, cfg, lg_r, cache_r, s), err_msg=tag)
+
+
+def test_resume_rejects_recurrent_arch():
+    """SSM state folds the whole prefix into one vector — the resume
+    path must refuse, not silently corrupt."""
+    ssm = configs.get_arch("falcon-mamba-7b").reduced()
+    assert not transformer.resume_supported(ssm)
+    with pytest.raises(NotImplementedError):
+        transformer.prefill({}, ssm, {"tokens": np.zeros((1, 32), np.int32)},
+                            40, prefix_kv={"dummy": np.zeros((1, 16, 1, 1))})
+    idx = MonarchKVIndex(KVIndexConfig(fingerprint="prefix"),
+                         slab_store=KVSlabStore())
+    with pytest.raises(NotImplementedError):
+        PrefixResumeEngine({}, ssm, max_seq=40, index=idx)
+
+
+def test_engine_requires_prefix_fingerprints_and_store():
+    cfg = _arch("global")
+    with pytest.raises(ValueError, match="fingerprint"):
+        PrefixResumeEngine({}, cfg, max_seq=64,
+                           index=MonarchKVIndex(KVIndexConfig(),
+                                                slab_store=KVSlabStore()))
+    with pytest.raises(ValueError, match="KVSlabStore"):
+        PrefixResumeEngine({}, cfg, max_seq=64, index=MonarchKVIndex(
+            KVIndexConfig(fingerprint="prefix")))
+
+
+# ---------------------------------------------------------------------------
+# Engine + index + slab store.
+# ---------------------------------------------------------------------------
+
+def _mk_index(n_shards=1, **kw):
+    base = dict(n_sets=8, set_ways=8, admit_after_reads=0,
+                rotate_every=1 << 30, fingerprint="prefix")
+    base.update(kw)
+    return MonarchKVIndex(KVIndexConfig(n_shards=n_shards, **base),
+                          slab_store=KVSlabStore())
+
+
+def _mk_engine(idx, cfg=None, max_seq=80, seed=1):
+    cfg = cfg or _arch("global")
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    return PrefixResumeEngine(params, cfg, max_seq=max_seq, index=idx,
+                              decode_tokens=4, jit=False)
+
+
+def _serve_once(engine, q, toks):
+    """One request through the production flow; returns (record-ish,
+    decoded)."""
+    hits = q.lookup(toks)
+    res = engine.prefill(toks, hits)
+    q.submit_tokens(toks, slabs=res.slabs)
+    return res, engine.decode(res)
+
+
+def test_engine_hit_resumes_and_decodes_identically(rng):
+    """First serving computes + admits; the second serving of the same
+    prompt resumes all but the final chunk and decodes the same tokens.
+    A fresh no-cache engine double-checks the reference."""
+    idx = _mk_index()
+    engine = _mk_engine(idx)
+    q = AdmitQueue(idx)
+    try:
+        toks = rng.integers(1, 512, (1, 64)).astype(np.int32)
+        res1, dec1 = _serve_once(engine, q, toks)
+        assert res1.resumed_chunks == 0 and res1.computed_chunks == 4
+        res2, dec2 = _serve_once(engine, q, toks)
+        assert res2.resumed_chunks == 3          # run capped at n_chunks-1
+        np.testing.assert_array_equal(dec1, dec2)
+        # straddling prompt: 4 chunks + 8 leftover tokens, same story
+        odd = rng.integers(1, 512, (1, 72)).astype(np.int32)
+        r1, d1 = _serve_once(engine, q, odd)
+        r2, d2 = _serve_once(engine, q, odd)
+        assert r2.resumed_chunks == 4 and r2.computed_chunks == 0
+        np.testing.assert_array_equal(d1, d2)
+        audit = idx.slab_lockstep_report()
+        assert not audit["missing_slabs"] and not audit["orphan_slabs"]
+    finally:
+        q.close()
+
+
+def test_engine_hit_survives_rotation(rng):
+    """Rotation remaps sets but evicts nothing: the hit AND its slabs
+    survive, and the resumed decode still matches."""
+    idx = _mk_index()
+    engine = _mk_engine(idx)
+    q = AdmitQueue(idx)
+    try:
+        toks = rng.integers(1, 512, (1, 64)).astype(np.int32)
+        _, dec_ref = _serve_once(engine, q, toks)
+        q.rotate()
+        assert idx.stats.rotations == 1
+        res, dec = _serve_once(engine, q, toks)
+        assert res.resumed_chunks == 3
+        np.testing.assert_array_equal(dec_ref, dec)
+        audit = idx.slab_lockstep_report()
+        assert not audit["missing_slabs"] and not audit["orphan_slabs"]
+    finally:
+        q.close()
+
+
+def test_engine_eviction_drops_slab_and_recomputes(rng):
+    """Pressure-evicted prefix: the slab store drops in lockstep, the
+    next serving misses cleanly and recomputes — same decoded tokens,
+    no orphan slabs."""
+    idx = _mk_index(n_sets=4, set_ways=4)
+    engine = _mk_engine(idx)
+    q = AdmitQueue(idx)
+    try:
+        toks = rng.integers(1, 512, (1, 64)).astype(np.int32)
+        _, dec_ref = _serve_once(engine, q, toks)
+        fps0 = {int(f) for f in idx.fingerprints(toks).reshape(-1)}
+        flood = rng.integers(1 << 20, 1 << 30, 4096).astype(np.uint32)
+        q.submit(np.unique(flood))
+        q.flush()
+        assert idx.stats.evictions > 0
+        evicted = fps0 - set(idx.slot_of)
+        assert evicted, "flood failed to evict the prefix"
+        assert all(idx.slab_store.get(f) is None for f in evicted)
+        res, dec = _serve_once(engine, q, toks)
+        assert res.resumed_chunks < 3
+        np.testing.assert_array_equal(dec_ref, dec)
+        audit = idx.slab_lockstep_report()
+        assert not audit["orphan_slabs"]
+    finally:
+        q.close()
+
+
+def test_engine_truncates_run_at_missing_slab(rng):
+    """A hit whose slab is gone (admitted slab-less) truncates the
+    resume run instead of serving garbage."""
+    idx = _mk_index()
+    engine = _mk_engine(idx)
+    q = AdmitQueue(idx)
+    try:
+        toks = rng.integers(1, 512, (1, 64)).astype(np.int32)
+        # admit WITHOUT slabs: index hits, store empty
+        q.submit_tokens(toks)
+        q.flush()
+        assert q.lookup(toks).all()
+        res, _ = _serve_once(engine, q, toks)
+        assert res.resumed_chunks == 0 and res.computed_chunks == 4
+        # second serving staged real slabs -> now it resumes
+        res2, _ = _serve_once(engine, q, toks)
+        assert res2.resumed_chunks == 3
+    finally:
+        q.close()
+
+
+# ---------------------------------------------------------------------------
+# Schedule replay: shard counts + the fan-out oracle stay in lockstep.
+# ---------------------------------------------------------------------------
+
+def _policy_state(idx):
+    return dict(
+        slot_of=dict(idx.slot_of),
+        valid=np.asarray(idx.valid).copy(),
+        fp_of=np.asarray(idx.fp_of).copy(),
+        writes=idx.write_distribution(),
+        window_writes=np.asarray(idx.wear_state.window_writes).copy(),
+        slabs=sorted(idx.slab_store.resident_fps()),
+        stats=(idx.stats.admissions, idx.stats.admission_skips,
+               idx.stats.evictions, idx.stats.chunk_hits,
+               idx.stats.chunk_misses),
+    )
+
+
+def _zipf_requests(n, rng):
+    """(1, 64) prompts: 2 zipf-shared prefix chunks + 2 fresh tail chunks."""
+    prefixes = [rng.integers(1, 512, (1, 2 * CHUNK_TOKENS))
+                for _ in range(2)]
+    out = []
+    for _ in range(n):
+        p = prefixes[min(int(rng.zipf(1.5)) - 1, 1)]
+        tail = rng.integers(1, 512, (1, 2 * CHUNK_TOKENS))
+        out.append(np.concatenate([p, tail], axis=1).astype(np.int32))
+    return out
+
+
+def _replay(idx, requests, cfg, params):
+    engine = PrefixResumeEngine(params, cfg, max_seq=72, index=idx,
+                                decode_tokens=2, jit=False)
+    q = AdmitQueue(idx)
+    decoded = []
+    _, base_decode = engine.request_fns()
+
+    def decode_fn(toks, result):
+        base_decode(toks, result)
+        decoded.append(result.state["decoded"])
+
+    try:
+        recs = run_request_loop(q, requests, prefill_fn=engine.prefill,
+                                decode_fn=decode_fn)
+        q.flush()
+    finally:
+        q.close()
+    return recs, decoded, idx
+
+
+def test_schedule_replay_shard_lockstep(rng):
+    """The ISSUE's replay pin: one randomized zipf schedule through the
+    REAL loop (read-your-writes lookups, submit-after-prefill, slab
+    commits off-thread) at every shard count and against the fan-out
+    oracle — identical hits, resumed counts, installs/planes/wear,
+    resident slabs, and decoded tokens."""
+    cfg = _arch("global")
+    params = transformer.init_params(jax.random.PRNGKey(1), cfg)
+    requests = _zipf_requests(8, rng)
+    runs = {}
+    for n in SHARD_COUNTS:
+        runs[n] = _replay(_mk_index(n_shards=n, admit_after_reads=1),
+                          requests, cfg, params)
+    oracle_idx = MonarchKVIndex(
+        KVIndexConfig(n_shards=4, n_sets=8, set_ways=8, admit_after_reads=1,
+                      rotate_every=1 << 30, fingerprint="prefix"),
+        dispatch="fanout", slab_store=KVSlabStore())
+    runs["fanout"] = _replay(oracle_idx, requests, cfg, params)
+
+    ref_recs, ref_dec, _ = runs[SHARD_COUNTS[0]]
+    assert sum(r.hit_chunks for r in ref_recs) > 0      # schedule hits
+    assert sum(r.resumed_chunks for r in ref_recs) > 0  # and resumes
+    for key, (recs, dec, _idx) in runs.items():
+        for a, b in zip(ref_recs, recs):
+            assert (a.chunks, a.hit_chunks, a.resumed_chunks) == \
+                   (b.chunks, b.hit_chunks, b.resumed_chunks), key
+        for da, db in zip(ref_dec, dec):
+            np.testing.assert_array_equal(da, db, err_msg=str(key))
+
+    # Shard-count runs share set geometry -> full policy state (installs,
+    # planes, wear, resident slabs) must be identical.  The fan-out
+    # oracle shares everything policy-visible too (same geometry, same
+    # admission semantics) and is compared on the same state dict.
+    ref_state = _policy_state(runs[SHARD_COUNTS[0]][2])
+    for key in list(SHARD_COUNTS[1:]) + ["fanout"]:
+        st = _policy_state(runs[key][2])
+        for k in ref_state:
+            if isinstance(ref_state[k], np.ndarray):
+                np.testing.assert_array_equal(ref_state[k], st[k],
+                                              err_msg=f"{key}: {k}")
+            else:
+                assert ref_state[k] == st[k], (key, k)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

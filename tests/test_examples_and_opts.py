@@ -57,11 +57,16 @@ def test_kv_store_example():
     assert "lookup" in out and "searches=" in out
 
 
-@pytest.mark.slow
 def test_serve_prefix_cache_example():
-    out = _run_example("serve_prefix_cache.py", "--requests", "6",
+    """Non-slow smoke of the resume-path example: hits must not just be
+    counted — prompt tokens must actually be SERVED from KV slabs (the
+    example itself asserts the index/slab-store lockstep audit)."""
+    out = _run_example("serve_prefix_cache.py", "--requests", "5",
                        "--decode-tokens", "2")
     assert "chunk hit rate" in out
+    assert "prefix KV resumed" in out
+    resumed = int(out.split("prefix KV resumed: ")[1].split("/")[0])
+    assert resumed > 0, out
 
 
 # ---------------------------------------------------------------------------
