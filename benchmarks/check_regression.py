@@ -28,8 +28,10 @@ Two extra ``kernels`` gates beyond the per-entry thresholds:
 A third coverage leg, ``serve`` (``BENCH_serve.json`` from
 ``serve_bench``): the Poisson p50/p99 latencies are timings (threshold
 plus ``BENCH_WARN_ONLY``, like the kernel medians), but the artifact's
-SHAPE — >=2 offered-rate legs, each with latency/goodput/shed/hit fields
-— is structural and always fatal, exactly like the roofline section.
+SHAPE — >=2 offered-rate legs, each with latency/goodput/shed/hit
+fields, plus the ``http`` network-edge leg with a sane
+``transport_overhead_ms`` — is structural and always fatal, exactly
+like the roofline section.
 
 A fourth leg, ``decode`` (``BENCH_decode.json`` from ``decode_bench``):
 the cached-vs-no-cache tokens/s are timings (threshold +
@@ -161,6 +163,25 @@ def serve_structural_gate(doc: dict) -> list[str]:
     if len(set(rates)) < 2:
         bad.append(f"  serve.poisson: offered rates {rates} are not "
                    ">=2 distinct points")
+    # HTTP leg: the network edge must actually have been driven — same
+    # field set as a Poisson leg plus the transport tax.
+    http = doc.get("http")
+    if not isinstance(http, dict):
+        bad.append(f"  serve.http: {http!r} (expected the HTTP-leg "
+                   "section — the socket path was not driven)")
+        return bad
+    for field in SERVE_REQUIRED + ("transport_overhead_ms",):
+        v = http.get(field)
+        if not isinstance(v, (int, float)):
+            bad.append(f"  serve.http.{field}: {v!r} (expected a number)")
+    ovh = http.get("transport_overhead_ms")
+    if isinstance(ovh, (int, float)) and ovh < 0:
+        bad.append(f"  serve.http.transport_overhead_ms: {ovh} (client "
+                   "wall time cannot undercut server handling time)")
+    p50, p99 = http.get("p50_ms"), http.get("p99_ms")
+    if (isinstance(p50, (int, float)) and isinstance(p99, (int, float))
+            and p50 > p99):
+        bad.append(f"  serve.http: p50 {p50} > p99 {p99}")
     return bad
 
 

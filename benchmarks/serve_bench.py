@@ -21,6 +21,13 @@ Per leg the bench reports, into ``BENCH_serve.json``:
   fingerprints accepted (``policy="shed"`` back-pressure).
 * ``hit_rate`` — index prefix-chunk hit rate for the leg.
 
+A fourth leg, ``http``, replays the burst/replayed-trace schedule
+through the REAL socket path (``repro.serve.http_frontend`` booted on a
+loopback port — or an external ``launch/httpd.py`` via
+``REPRO_SERVE_HTTP_URL``): same fields, plus ``transport_overhead_ms``
+(client wall time minus server-reported handling time, median) and
+``coalesced_requests`` (requests the router micro-batcher merged).
+
 The index runs ``clock="wall"`` (the t_MWW admission window is a real
 time budget — this is the latency-era serving configuration) behind a
 bounded ``AdmitQueue``.  The service proxy is a small jitted matmul
@@ -36,8 +43,12 @@ artifact (required fields, >=2 Poisson rates) is always fatal — see
 """
 from __future__ import annotations
 
+import http.client
 import json
 import os
+import threading
+import time
+import urllib.parse
 
 import numpy as np
 
@@ -47,6 +58,7 @@ import jax.numpy as jnp
 from repro.bench.emit import emit_json
 from repro.launch.serve import run_request_loop
 from repro.serve.admit_queue import AdmitQueue
+from repro.serve.http_frontend import HttpFrontend, ServeRouter
 from repro.serve.kv_index import CHUNK_TOKENS, KVIndexConfig, MonarchKVIndex
 
 #: Offered Poisson rates (requests/s): an underload point and a point
@@ -77,16 +89,67 @@ def _poisson_arrivals(n: int, rate_rps: float, seed: int) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate_rps, n))
 
 
+def _load_trace(path: str, n: int) -> np.ndarray:
+    """Validate + normalize a replayed ``REPRO_SERVE_TRACE`` file.
+
+    ``run_request_loop`` requires nondecreasing arrival offsets, one
+    per request — a short, unsorted, or negative trace used to slip
+    through silently and corrupt the backlog accounting.  Now:
+    non-numeric / non-finite / negative offsets raise with a one-line
+    actionable message; an unsorted trace is sorted (arrival ORDER is
+    what replay needs — wall-clock offsets already encode it); a trace
+    shorter than ``n`` is tiled periodically (each repeat shifted by
+    the trace makespan plus its mean gap), or errors when it has zero
+    makespan and therefore no period to tile by."""
+    with open(path) as f:
+        try:
+            raw = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"REPRO_SERVE_TRACE {path}: not valid JSON ({e}); "
+                "expected a JSON list of arrival offsets in seconds"
+            ) from None
+    try:
+        arr = np.asarray(raw, dtype=float)
+    except (TypeError, ValueError):
+        arr = None
+    if arr is None or arr.ndim != 1 or arr.size == 0:
+        raise ValueError(
+            f"REPRO_SERVE_TRACE {path}: expected a non-empty flat list "
+            "of arrival offsets in seconds, got "
+            f"{type(raw).__name__}") from None
+    if not np.all(np.isfinite(arr)):
+        raise ValueError(
+            f"REPRO_SERVE_TRACE {path}: non-finite arrival offsets "
+            "(NaN/inf) — every entry must be a finite second offset")
+    if (arr < 0).any():
+        raise ValueError(
+            f"REPRO_SERVE_TRACE {path}: negative arrival offset "
+            f"{arr.min():g}s — offsets are seconds from replay start "
+            "and must be >= 0")
+    arr = np.sort(arr)       # replay needs nondecreasing arrivals
+    if arr.size < n:
+        if arr[-1] <= 0:
+            raise ValueError(
+                f"REPRO_SERVE_TRACE {path}: {arr.size} arrivals < {n} "
+                "requested and the trace has zero makespan — nothing "
+                f"to tile; provide >= {n} offsets or a nonzero span")
+        gap = arr[-1] / max(arr.size - 1, 1)
+        period = arr[-1] + gap
+        reps = -(-n // arr.size)         # ceil division
+        arr = np.concatenate([arr + k * period for k in range(reps)])
+    return arr[:n]
+
+
 def _trace_arrivals(n: int) -> np.ndarray:
     """Replayed bursty trace: ``REPRO_SERVE_TRACE`` (a JSON list of
-    arrival offsets in seconds) when set, else the built-in burst
-    pattern — groups of 8 back-to-back requests (2 ms spacing) separated
-    by 60 ms idle gaps, the on/off shape Poisson cannot produce."""
+    arrival offsets in seconds, validated/sorted/tiled by
+    :func:`_load_trace`) when set, else the built-in burst pattern —
+    groups of 8 back-to-back requests (2 ms spacing) separated by
+    60 ms idle gaps, the on/off shape Poisson cannot produce."""
     path = os.environ.get("REPRO_SERVE_TRACE")
     if path:
-        with open(path) as f:
-            arr = np.asarray(json.load(f), dtype=float)[:n]
-        return arr
+        return _load_trace(path, n)
     burst, gap_s, step_s = 8, 0.060, 0.002
     t, out = 0.0, []
     while len(out) < n:
@@ -150,6 +213,106 @@ def _run_leg(requests, arrivals_s, *, label: str) -> dict:
     return leg
 
 
+def _run_http_leg(requests, arrivals_s, *, label: str) -> dict:
+    """The REAL socket path, open-loop: one client thread per request
+    fires ``POST /v1/generate`` at its scheduled arrival against a
+    loopback :class:`HttpFrontend` (same service proxy, same bounded
+    shed-policy front end as the in-process legs), so the leg measures
+    lookup + proxy + admission PLUS the transport: HTTP parse, router
+    queue, micro-batching, socket writes.
+
+    ``transport_overhead_ms`` is the median of (client-measured wall
+    time) - (server-reported ``server_ms``) per request — the pure
+    network-edge tax, directly comparable against the in-process legs'
+    latencies.  Set ``REPRO_SERVE_HTTP_URL=http://host:port`` to drive
+    an EXTERNALLY booted ``launch/httpd.py`` instead (the CI smoke does
+    this); shed/hit accounting then comes from its ``GET /stats``."""
+    url = os.environ.get("REPRO_SERVE_HTTP_URL")
+    own = None
+    if url:
+        parsed = urllib.parse.urlparse(url)
+        host, port = parsed.hostname, parsed.port
+    else:
+        q = _mk_frontend()
+        prefill, decode = _service_proxy()
+        router = ServeRouter(q, prefill_fn=prefill, decode_fn=decode,
+                             n_workers=2, max_queue=4 * MAX_PENDING,
+                             batch_window_s=0.001)
+        own = (HttpFrontend(router).start(), q)
+        host, port = own[0].address
+    n = len(requests)
+    results: list[dict | None] = [None] * n
+    t0 = time.monotonic()
+
+    def fire(i: int) -> None:
+        wait = float(arrivals_s[i]) - (time.monotonic() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        send = time.monotonic()
+        try:
+            conn = http.client.HTTPConnection(host, port, timeout=60)
+            conn.request("POST", "/v1/generate",
+                         body=json.dumps({"tokens": requests[i].tolist()}),
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            payload = json.loads(resp.read())
+            status = resp.status
+            conn.close()
+        except OSError as e:
+            payload, status = {"error": str(e)}, -1
+        results[i] = {"arrival": float(arrivals_s[i]),
+                      "send": send - t0, "done": time.monotonic() - t0,
+                      "status": status, "payload": payload}
+
+    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    def _stats_doc() -> dict:
+        conn = http.client.HTTPConnection(host, port, timeout=60)
+        conn.request("GET", "/stats")
+        doc = json.loads(conn.getresponse().read())
+        conn.close()
+        return doc
+
+    stats = _stats_doc()
+    if own is not None:
+        own[0].shutdown()
+        own[1].close()
+
+    ok = [r for r in results if r["status"] == 200]
+    if not ok:
+        raise RuntimeError(f"HTTP leg: 0/{n} requests succeeded "
+                           f"(last: {results[-1]})")
+    lat_ms = np.asarray([r["done"] - r["arrival"] for r in ok]) * 1e3
+    overhead_ms = np.asarray(
+        [(r["done"] - r["send"]) * 1e3 - r["payload"]["server_ms"]
+         for r in ok])
+    makespan = max(max(r["done"] for r in ok)
+                   - min(r["arrival"] for r in ok), 1e-9)
+    good = sum(1 for r in ok if not r["payload"].get("dropped"))
+    aq = stats["admit_queue"]
+    leg = {
+        "n_requests": len(ok),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "mean_ms": round(float(lat_ms.mean()), 3),
+        "goodput_rps": round(good / makespan, 2),
+        "shed_rate": round(aq["shed_fps"] / max(aq["submitted"], 1), 4),
+        "hit_rate": round(float(stats["index"]["hit_rate"]), 4),
+        "transport_overhead_ms": round(
+            float(np.percentile(overhead_ms, 50)), 3),
+        "coalesced_requests": int(stats["router"]["coalesced"]),
+    }
+    print(f"[serve_bench] {label}: p50 {leg['p50_ms']:.1f} ms, "
+          f"p99 {leg['p99_ms']:.1f} ms, transport "
+          f"{leg['transport_overhead_ms']:.2f} ms, goodput "
+          f"{leg['goodput_rps']:.0f} req/s, hit {leg['hit_rate']:.0%}")
+    return leg
+
+
 def _warmup(n: int) -> None:
     """Compile the index lookup/admit kernels and the service proxy on a
     throwaway front end, so no timed leg pays jit compilation (the jit
@@ -180,15 +343,21 @@ def run(csv_rows: list[str], quick: bool = False) -> dict:
         poisson.append(leg)
         csv_rows.append(f"serve_poisson_{rate:g}rps,{leg['p50_ms'] * 1e3:.1f}"
                         f",p99_ms={leg['p99_ms']}")
-    trace = _run_leg(_requests(n, seed=7), _trace_arrivals(n),
-                     label="burst trace")
-    trace["offered_rps"] = round(
-        len(_trace_arrivals(n)) / max(_trace_arrivals(n)[-1], 1e-9), 2)
+    arrivals = _trace_arrivals(n)
+    trace = _run_leg(_requests(n, seed=7), arrivals, label="burst trace")
+    trace["offered_rps"] = round(len(arrivals) / max(arrivals[-1], 1e-9), 2)
     csv_rows.append(f"serve_trace,{trace['p50_ms'] * 1e3:.1f}"
                     f",p99_ms={trace['p99_ms']}")
+    # HTTP leg: the SAME burst/replayed schedule through the real socket
+    http_leg = _run_http_leg(_requests(n, seed=7), arrivals,
+                             label="http burst trace")
+    http_leg["offered_rps"] = trace["offered_rps"]
+    csv_rows.append(f"serve_http,{http_leg['p50_ms'] * 1e3:.1f}"
+                    f",transport_ms={http_leg['transport_overhead_ms']}")
     payload = {
         "poisson": poisson,
         "trace": trace,
+        "http": http_leg,
         "config": {
             "max_pending": MAX_PENDING, "policy": "shed", "clock": "wall",
             "prefix_chunks": PREFIX_CHUNKS, "tail_chunks": TAIL_CHUNKS,

@@ -69,11 +69,12 @@ class RequestRecord:
     retried: bool               # defer policy: submit retried after decode
     dropped: bool               # retry rejected too — admission forgone
     resumed_chunks: int = 0     # chunks restored from KV slabs (resume path)
+    decoded: np.ndarray | None = None   # decode_fn's (B, T) greedy tokens
 
 
 def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
                      decode_fn=None, arrivals_s=None, now_fn=time.monotonic,
-                     sleep_fn=time.sleep, on_batch=None):
+                     sleep_fn=time.sleep, retry_wait_s=0.05, on_batch=None):
     """THE serving request loop: lookup -> prefill -> submit -> decode.
 
     Parameters
@@ -89,8 +90,11 @@ def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
         Called BEFORE the admission submit — chunks are offered as soon
         as their KV exists, the PR-4 submit-after-prefill hook.
     decode_fn : callable, optional
-        ``decode_fn(tokens, state) -> None``: the decode loop, run after
-        the submit so the admission worker overlaps it.
+        ``decode_fn(tokens, state) -> decoded | None``: the decode loop,
+        run after the submit so the admission worker overlaps it.  Its
+        return value (the ``(B, decode_tokens)`` greedy token array, or
+        ``None`` for decode-less stand-ins) is surfaced on the record as
+        ``RequestRecord.decoded`` — the loop never discards output.
     arrivals_s : sequence of float, optional
         OPEN-LOOP arrival offsets (seconds from loop start), one per
         request, nondecreasing.  The loop sleeps until each scheduled
@@ -100,6 +104,14 @@ def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
         finished).
     now_fn, sleep_fn : callables
         Clock/sleep injection for tests.
+    retry_wait_s : float
+        Bounded drain-wait before the ONE defer retry: when the first
+        submit is rejected (``policy="defer"``), the loop polls
+        ``admit_q.pending()`` via ``sleep_fn`` for at most this long
+        before retrying.  Without it, a decode-less caller (the bench's
+        service-proxy path) retries immediately into the still-full
+        queue and over-counts ``dropped``.  ``0`` restores the
+        immediate retry.
     on_batch : callable, optional
         ``on_batch(i, tokens, hits, record)`` after each batch (the
         launcher prints its per-batch report here).
@@ -140,11 +152,19 @@ def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
         submit = (lambda: admit_q.submit_tokens(toks, slabs=slabs)) \
             if slabs is not None else (lambda: admit_q.submit_tokens(toks))
         accepted = submit()
-        if decode_fn is not None:
-            decode_fn(toks, state)
+        decoded = decode_fn(toks, state) if decode_fn is not None else None
         retried = dropped = False
         if not accepted:               # defer: retry once after decode
             retried = True
+            # Bounded drain-wait before the single retry: give the
+            # admission worker a window to drain below the bound (a
+            # decode above usually provided one; a decode-less caller
+            # would otherwise race the still-full queue).
+            pending_fn = getattr(admit_q, "pending", None)
+            if pending_fn is not None and retry_wait_s > 0:
+                deadline = now_fn() + retry_wait_s
+                while pending_fn() > 0 and now_fn() < deadline:
+                    sleep_fn(retry_wait_s / 16)
             accepted = submit()
             dropped = not accepted
             if dropped and slabs:      # forgone admission: staged slabs
@@ -157,11 +177,50 @@ def run_request_loop(admit_q: AdmitQueue, requests, *, prefill_fn,
             latency_s=done - arrival,
             chunks=int(hits.size), hit_chunks=int(hits.sum()),
             admitted=bool(accepted), retried=retried, dropped=dropped,
-            resumed_chunks=resumed)
+            resumed_chunks=resumed, decoded=decoded)
         records.append(rec)
         if on_batch is not None:
             on_batch(i, toks, hits, rec)
     return records
+
+
+def build_model_fns(params, cfg, *, max_seq, decode_tokens, index=None,
+                    resume=False):
+    """(prefill_fn, decode_fn, engine) for :func:`run_request_loop`.
+
+    One construction shared by this launcher and the HTTP edge
+    (``launch/httpd.py``).  With ``resume=True`` the pair comes from a
+    :class:`PrefixResumeEngine` over ``index`` (which must carry a slab
+    store); otherwise it is the plain jitted prefill/greedy-decode pair.
+    Either way ``decode_fn`` RETURNS the ``(B, decode_tokens)`` greedy
+    token array — the request loop surfaces it as
+    ``RequestRecord.decoded`` (decoded output is never discarded).
+    ``engine`` is ``None`` on the non-resume path."""
+    if resume:
+        engine = PrefixResumeEngine(params, cfg, max_seq=max_seq,
+                                    index=index,
+                                    decode_tokens=decode_tokens)
+        prefill_fn, decode_fn = engine.request_fns()
+        return prefill_fn, decode_fn, engine
+
+    prefill_step = jax.jit(serve_step.make_prefill_step(cfg, max_seq))
+    decode_step = jax.jit(serve_step.make_decode_step(cfg))
+
+    def model_prefill(toks, hits):
+        logits, cache = prefill_step(params, {"tokens": jnp.asarray(toks)})
+        return logits, cache
+
+    def model_decode(toks, state):
+        logits, cache = state
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        outs = [np.asarray(nxt)]
+        for t in range(decode_tokens - 1):
+            pos = jnp.asarray(toks.shape[1] + t, jnp.int32)
+            nxt, logits, cache = decode_step(params, cache, nxt, pos)
+            outs.append(np.asarray(nxt))
+        return np.concatenate(outs, axis=1)
+
+    return model_prefill, model_decode, None
 
 
 def main(argv=None):
@@ -267,13 +326,9 @@ def main(argv=None):
         p_named = sharding.to_named(
             sharding.param_specs(jax.eval_shape(lambda: params), mesh), mesh)
         params = jax.tree.map(jax.device_put, params, p_named)
-        if resume:
-            engine = PrefixResumeEngine(params, cfg, max_seq=max_seq,
-                                        index=idx,
-                                        decode_tokens=args.decode_tokens)
-        else:
-            prefill_fn = jax.jit(serve_step.make_prefill_step(cfg, max_seq))
-            decode_fn = jax.jit(serve_step.make_decode_step(cfg))
+        model_prefill, model_decode, engine = build_model_fns(
+            params, cfg, max_seq=max_seq, decode_tokens=args.decode_tokens,
+            index=idx, resume=resume)
 
         # shared prefix -> index hits after the first batch
         prefix = rng.integers(1, cfg.vocab_size,
@@ -293,39 +348,22 @@ def main(argv=None):
         # (printing the empty-slice mean would be a NaN + RuntimeWarning)
         n_prefix_chunks = len(prefix) // CHUNK_TOKENS
 
-        if resume:
-            # Submit happens right after prefill returns: the worker
-            # commits the staged slabs while the decode loop runs, and
-            # the queue is (usually) empty again before the next batch's
-            # read-your-writes lookup.
-            model_prefill, model_decode = engine.request_fns()
-        else:
-            def model_prefill(toks, hits):
-                logits, cache = prefill_fn(params,
-                                           {"tokens": jnp.asarray(toks)})
-                return logits, cache
-
-            def model_decode(toks, state):
-                logits, cache = state
-                nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-                outs = [np.asarray(nxt)]
-                for t in range(args.decode_tokens - 1):
-                    pos = jnp.asarray(toks.shape[1] + t, jnp.int32)
-                    nxt, logits, cache = decode_fn(params, cache, nxt, pos)
-                    outs.append(np.asarray(nxt))
-
         def report(i, toks, hits, rec):
             cached = (f"{hits[:, :n_prefix_chunks].mean():.0%}"
                       if n_prefix_chunks else "n/a")
             extra = (f", resumed {rec.resumed_chunks}/{rec.chunks} chunks"
                      if resume else "")
+            # rec.decoded is the ACTUAL decode output (not the knob):
+            # a decode path that stopped returning tokens shows up here.
+            n_dec = (rec.decoded.shape[1] if rec.decoded is not None
+                     else 0)
             print(f"[serve] batch of {toks.shape[0]}: prefix chunks cached "
-                  f"{cached}{extra}, decoded {args.decode_tokens} tokens "
-                  "each")
+                  f"{cached}{extra}, decoded {n_dec} tokens each")
 
         t0 = time.time()
-        run_request_loop(admit_q, batches, prefill_fn=model_prefill,
-                         decode_fn=model_decode, on_batch=report)
+        records = run_request_loop(admit_q, batches,
+                                   prefill_fn=model_prefill,
+                                   decode_fn=model_decode, on_batch=report)
         admit_q.close()                   # drain barrier before reporting
         dt = time.time() - t0
     s = idx.stats
@@ -351,6 +389,7 @@ def main(argv=None):
           f"{w['rotations']} rotations, "
           f"{w['throttled_sets_now']} sets at window budget; "
           f"projected lifetime {lt.years:.1f}y (ideal {lt.ideal_years:.1f}y)")
+    return records
 
 
 if __name__ == "__main__":

@@ -230,13 +230,16 @@ class PrefixResumeEngine:
 
     def request_fns(self, n_tokens: int | None = None):
         """(prefill_fn, decode_fn) pair shaped for ``run_request_loop``.
-        The decode_fn stashes its tokens on the PrefillResult state as
-        ``state["decoded"]`` so callers can read them off the records'
-        side channel (the loop itself discards decode output)."""
+        The decode_fn RETURNS its (B, n_tokens) token array — the loop
+        surfaces it as ``RequestRecord.decoded`` — and also stashes it
+        on the PrefillResult state as ``state["decoded"]`` for callers
+        holding the prefill result."""
         def prefill_fn(toks, hits):
             return self.prefill(toks, hits)
 
         def decode_fn(toks, result):
-            result.state["decoded"] = self.decode(result, n_tokens)
+            decoded = self.decode(result, n_tokens)
+            result.state["decoded"] = decoded
+            return decoded
 
         return prefill_fn, decode_fn

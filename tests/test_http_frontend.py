@@ -1,0 +1,433 @@
+"""HTTP network edge: endpoint round-trips, back-pressure -> 429 with
+Retry-After, micro-batch coalescing, concurrent clients sharing ONE
+index (read-your-writes over the socket), graceful-shutdown drain with
+no lost admissions, and bounded==unbounded index-state equality.
+
+Most tests drive a real loopback ``HttpFrontend`` over toy prefill/
+decode fns (the router contract doesn't care); one end-to-end test
+boots the full ``launch/httpd.py`` stack (reduced model, resume path)
+and pins that a prefix hit resumes decode token-identically through
+the socket.  Parametrized over ``n_shards`` {1, 4} — on the forced-
+4-device CI leg the shards get real placement.
+"""
+from __future__ import annotations
+
+import contextlib
+import http.client
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.admit_queue import AdmitQueue
+from repro.serve.http_frontend import (HttpFrontend, RouterClosed,
+                                       ServeRouter)
+from repro.serve.kv_index import (CHUNK_TOKENS, KVIndexConfig,
+                                  MonarchKVIndex)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:                      # for `import benchmarks.*`
+    sys.path.insert(0, ROOT)
+
+
+def _mk_index(n_shards: int = 1, **kw) -> MonarchKVIndex:
+    cfg = dict(n_sets=8, set_ways=16, admit_after_reads=0,
+               rotate_every=1 << 30, n_shards=n_shards)
+    cfg.update(kw)
+    return MonarchKVIndex(KVIndexConfig(**cfg))
+
+
+def _toks(i: int, chunks: int = 2, rows: int = 1) -> np.ndarray:
+    base = 1 + i * 10_000
+    n = rows * chunks * CHUNK_TOKENS
+    return np.arange(base, base + n, dtype=np.int32).reshape(rows, -1)
+
+
+@contextlib.contextmanager
+def _frontend(n_shards: int = 1, *, prefill=None, decode="echo",
+              admit_kw=None, **router_kw):
+    """Loopback HttpFrontend over a toy router; always torn down."""
+    q = AdmitQueue(_mk_index(n_shards), **(admit_kw or {}))
+    router = ServeRouter(
+        q, prefill_fn=prefill or (lambda t, h: None),
+        decode_fn=(lambda t, s: t[:, -1:]) if decode == "echo" else decode,
+        batch_window_s=router_kw.pop("batch_window_s", 0.0), **router_kw)
+    fe = HttpFrontend(router).start()
+    try:
+        yield fe, q
+    finally:
+        with contextlib.suppress(Exception):
+            fe.shutdown()
+        with contextlib.suppress(RuntimeError):
+            q.close()
+
+
+def _req(fe: HttpFrontend, method: str, path: str, body=None,
+         timeout: float = 30.0):
+    host, port = fe.address
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    conn.request(method, path,
+                 body=None if body is None else json.dumps(body))
+    resp = conn.getresponse()
+    doc = json.loads(resp.read())
+    headers = dict(resp.getheaders())
+    conn.close()
+    return resp.status, doc, headers
+
+
+# ---------------------------------------------------------------------------
+# endpoint round-trips
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_generate_healthz_stats_round_trip(n_shards):
+    with _frontend(n_shards) as (fe, q):
+        status, doc, _ = _req(fe, "GET", "/healthz")
+        assert status == 200 and doc["status"] == "ok"
+
+        toks = _toks(0)
+        status, doc, _ = _req(fe, "POST", "/v1/generate",
+                              {"tokens": toks.tolist()})
+        assert status == 200
+        assert doc["tokens"] == [[int(toks[0, -1])]]   # echo decode
+        assert doc["chunks"] == 2 and doc["hit_chunks"] == 0
+        assert doc["admitted"] and not doc["dropped"]
+        assert doc["server_ms"] >= doc["service_ms"] >= 0
+
+        # read-your-writes through the shared index: the same prompt is
+        # fully cached on its second trip through the socket
+        status, doc, _ = _req(fe, "POST", "/v1/generate",
+                              {"tokens": toks.tolist()})
+        assert status == 200 and doc["hit_chunks"] == doc["chunks"] == 2
+
+        q.flush()                       # settle async admissions
+        status, doc, _ = _req(fe, "GET", "/stats")
+        assert status == 200
+        assert doc["index"]["hit_rate"] == pytest.approx(0.5)
+        assert doc["admit_queue"]["pending"] == 0
+        assert "installs_per_set_max" in doc["wear"]
+        assert doc["lifetime"]["years"] > 0
+        assert doc["router"]["completed"] == 2
+        assert doc["router"]["workers"] == 2
+
+
+def test_bad_requests():
+    with _frontend() as (fe, _):
+        assert _req(fe, "GET", "/nope")[0] == 404
+        assert _req(fe, "POST", "/nope")[0] == 404
+        host, port = fe.address
+        conn = http.client.HTTPConnection(host, port, timeout=10)
+        conn.request("POST", "/v1/generate", body=b"{not json")
+        assert conn.getresponse().status == 400
+        conn.close()
+        assert _req(fe, "POST", "/v1/generate",
+                    {"tokens": "strings"})[0] == 400
+        assert _req(fe, "POST", "/v1/generate",
+                    {"tokens": [[1, 2], [3]]})[0] == 400     # ragged
+        assert _req(fe, "POST", "/v1/generate", {"tokens": []})[0] == 400
+        assert _req(fe, "POST", "/v1/generate", {"wrong": 1})[0] == 400
+        # per-request token cap -> 400, not a wedged worker
+        big = np.ones((1, (1 << 16) + CHUNK_TOKENS), np.int32)
+        status, doc, _ = _req(fe, "POST", "/v1/generate",
+                              {"tokens": big.tolist()})
+        assert status == 400 and "cap" in doc["error"]
+
+
+# ---------------------------------------------------------------------------
+# back-pressure -> HTTP 429
+
+
+def test_429_on_full_router_queue_with_retry_after():
+    gate = threading.Event()
+
+    def prefill(toks, hits):
+        gate.wait(10)
+
+    with _frontend(prefill=prefill, n_workers=1, max_queue=1) as (fe, q):
+        done: list = []
+
+        def client(i):
+            done.append(_req(fe, "POST", "/v1/generate",
+                             {"tokens": _toks(i).tolist()})[0])
+
+        a = threading.Thread(target=client, args=(0,))
+        a.start()                       # occupies the single worker
+        deadline = time.monotonic() + 5
+        while fe.router.depth() < 1 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        b = threading.Thread(target=client, args=(1,))
+        b.start()                       # fills the queue (bound = 1)
+        while fe.router.depth() < 2 and time.monotonic() < deadline:
+            time.sleep(0.005)
+
+        status, doc, headers = _req(fe, "POST", "/v1/generate",
+                                    {"tokens": _toks(2).tolist()})
+        assert status == 429
+        assert int(headers["Retry-After"]) >= 1
+        assert doc["retry_after_s"] > 0
+        gate.set()
+        a.join(10)
+        b.join(10)
+        assert done == [200, 200]       # accepted work never shed
+        assert fe.router.stats.rejected_busy == 1
+
+
+def test_router_submit_validation_and_busy():
+    q = AdmitQueue(_mk_index())
+    router = ServeRouter(q, prefill_fn=lambda t, h: None,
+                         batch_window_s=0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        router.submit(np.arange(4, dtype=np.int32))        # 1-D
+    with pytest.raises(ValueError, match="cap"):
+        router.submit(np.ones((2, 1 << 16), np.int32))
+    with pytest.raises(ValueError, match="n_workers"):
+        ServeRouter(q, prefill_fn=lambda t, h: None, n_workers=0)
+    router.begin_close()
+    with pytest.raises(RouterClosed):
+        router.submit(_toks(0))
+    router.close()
+    q.close()
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+
+
+def test_micro_batcher_coalesces_same_shape_requests():
+    gate = threading.Event()
+    calls: list[tuple] = []
+
+    def prefill(toks, hits):
+        calls.append(toks.shape)
+        if len(calls) == 1:
+            gate.wait(10)               # hold the worker on request 0
+
+    with _frontend(prefill=prefill, n_workers=1, max_queue=16,
+                   batch_window_s=0.2, max_batch_rows=8) as (fe, q):
+        results: dict[int, dict] = {}
+
+        def client(i, chunks):
+            status, doc, _ = _req(fe, "POST", "/v1/generate",
+                                  {"tokens": _toks(i, chunks).tolist()})
+            results[i] = (status, doc)
+
+        t0 = threading.Thread(target=client, args=(0, 2))
+        t0.start()
+        deadline = time.monotonic() + 5
+        # wait until request 0 is IN prefill (dequeued), so the batch
+        # below can't swallow it
+        while not calls and time.monotonic() < deadline:
+            time.sleep(0.005)
+        # three same-shape requests queue up first ...
+        rest = [threading.Thread(target=client, args=(i, 2))
+                for i in (1, 2, 3)]
+        for t in rest:
+            t.start()
+        while fe.router.depth() < 4 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        # ... then one different-shape request lands BEHIND them (the
+        # coalescer preserves FIFO order: it stops at a shape mismatch)
+        t4 = threading.Thread(target=client, args=(4, 3))
+        t4.start()
+        rest.append(t4)
+        while fe.router.depth() < 5 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        gate.set()
+        for t in [t0] + rest:
+            t.join(10)
+
+        assert all(results[i][0] == 200 for i in range(5))
+        # requests 1-3 shared ONE prefill batch of 3 rows; request 4
+        # (different shape) was served alone
+        assert results[1][1]["batched_rows"] == 3
+        assert results[2][1]["batched_rows"] == 3
+        assert results[3][1]["batched_rows"] == 3
+        assert results[4][1]["batched_rows"] == 1
+        assert (3, 2 * CHUNK_TOKENS) in calls
+        assert fe.router.stats.coalesced == 2
+        # per-request accounting still splits correctly
+        for i in (1, 2, 3):
+            assert results[i][1]["chunks"] == 2
+            assert results[i][1]["tokens"] == [[int(_toks(i)[0, -1])]]
+
+
+# ---------------------------------------------------------------------------
+# concurrent clients over ONE shared index
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_concurrent_clients_read_your_writes(n_shards):
+    with _frontend(n_shards, n_workers=4, max_queue=64) as (fe, q):
+        failures: list = []
+
+        def client(i):
+            toks = _toks(i, chunks=3).tolist()
+            s1, d1, _ = _req(fe, "POST", "/v1/generate", {"tokens": toks})
+            s2, d2, _ = _req(fe, "POST", "/v1/generate", {"tokens": toks})
+            if s1 != 200 or s2 != 200:
+                failures.append((i, s1, s2))
+            elif d2["hit_chunks"] != d2["chunks"]:
+                failures.append((i, "second trip missed", d2))
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert not failures, failures
+        assert fe.router.stats.completed == 16
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_bounded_equals_unbounded_index_state(n_shards):
+    """The admission bound must only pace admissions, never change
+    them.  Sequentially (deterministic order) the bounded-queue index
+    is BIT-identical to the unbounded one; under concurrent clients
+    (order nondeterministic) the resident-fingerprint set and admission
+    totals still match exactly."""
+    def drive_sequential(admit_kw):
+        with _frontend(n_shards, admit_kw=admit_kw) as (fe, q):
+            for i in range(6):
+                s, _, _ = _req(fe, "POST", "/v1/generate",
+                               {"tokens": _toks(i, chunks=3).tolist()})
+                assert s == 200
+            q.flush()
+            idx = q.index
+            return (dict(idx.slot_of), np.asarray(idx.valid).copy(),
+                    np.asarray(idx.fp_of).copy(),
+                    idx.stats.admissions)
+
+    bounded = drive_sequential({"max_pending": 4, "policy": "block"})
+    unbounded = drive_sequential({})
+    assert bounded[0] == unbounded[0]
+    np.testing.assert_array_equal(bounded[1], unbounded[1])
+    np.testing.assert_array_equal(bounded[2], unbounded[2])
+    assert bounded[3] == unbounded[3]
+
+    def drive_concurrent(admit_kw):
+        with _frontend(n_shards, n_workers=4, max_queue=64,
+                       admit_kw=admit_kw) as (fe, q):
+            threads = [threading.Thread(
+                target=lambda i=i: _req(fe, "POST", "/v1/generate",
+                                        {"tokens": _toks(i, 3).tolist()}))
+                for i in range(8)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(30)
+            q.flush()
+            return (frozenset(int(f) for f in q.index.slot_of),
+                    q.index.stats.admissions)
+
+    con_b = drive_concurrent({"max_pending": 4, "policy": "block"})
+    con_u = drive_concurrent({})
+    assert con_b == con_u
+
+
+# ---------------------------------------------------------------------------
+# graceful shutdown
+
+
+def test_graceful_shutdown_drains_without_losing_admissions():
+    gate = threading.Event()
+
+    def prefill(toks, hits):
+        gate.wait(10)
+
+    with _frontend(prefill=prefill, n_workers=1, max_queue=8) as (fe, q):
+        done: list = []
+
+        def client(i):
+            done.append(_req(fe, "POST", "/v1/generate",
+                             {"tokens": _toks(i).tolist()})[0])
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        deadline = time.monotonic() + 5
+        while fe.router.depth() < 3 and time.monotonic() < deadline:
+            time.sleep(0.005)
+
+        fe.begin_shutdown()             # the SIGTERM half
+        status, _, _ = _req(fe, "POST", "/v1/generate",
+                            {"tokens": _toks(9).tolist()})
+        assert status == 503
+        h_status, h_doc, _ = _req(fe, "GET", "/healthz")
+        assert h_status == 503 and h_doc["status"] == "draining"
+
+        gate.set()
+        fe.shutdown()                   # drains router + admit queue
+        for t in threads:
+            t.join(10)
+        assert done == [200, 200, 200]  # accepted requests all served
+        # ... and none of their admissions were lost in the drain
+        assert q.index.stats.admissions == 3 * 2
+        assert fe.router.stats.rejected_closed == 1
+
+
+# ---------------------------------------------------------------------------
+# the serve_bench HTTP leg
+
+
+def test_serve_bench_http_leg_fields():
+    from benchmarks import serve_bench
+    reqs = serve_bench._requests(6, seed=3)
+    arrivals = np.linspace(0.0, 0.05, 6)
+    leg = serve_bench._run_http_leg(reqs, arrivals, label="test http")
+    for field in ("n_requests", "p50_ms", "p99_ms", "mean_ms",
+                  "goodput_rps", "shed_rate", "hit_rate",
+                  "transport_overhead_ms"):
+        assert isinstance(leg[field], (int, float)), field
+    assert leg["n_requests"] == 6
+    assert leg["transport_overhead_ms"] >= 0
+    assert 0.0 <= leg["hit_rate"] <= 1.0
+    assert leg["p50_ms"] <= leg["p99_ms"]
+
+
+# ---------------------------------------------------------------------------
+# the full stack: launch/httpd.py end-to-end (reduced model, resume)
+
+
+def test_httpd_end_to_end_prefix_hit_resumes_decode():
+    from repro.launch import httpd
+    args = httpd.build_parser().parse_args(
+        ["--arch", "yi-9b", "--reduced", "--port", "0",
+         "--prompt-len", "48", "--decode-tokens", "3",
+         "--batch-window-ms", "0", "--n-workers", "2",
+         "--admit-after-reads", "0"])
+    fe, q = httpd.build_frontend(args)
+    fe.start()
+    try:
+        toks = np.arange(1, 49, dtype=np.int32).reshape(1, 48) % 500 + 1
+        status, first, _ = _req(fe, "POST", "/v1/generate",
+                                {"tokens": toks.tolist()}, timeout=120)
+        assert status == 200
+        assert np.asarray(first["tokens"]).shape == (1, 3)
+        assert first["chunks"] == 3 and first["hit_chunks"] == 0
+
+        status, second, _ = _req(fe, "POST", "/v1/generate",
+                                 {"tokens": toks.tolist()}, timeout=120)
+        assert status == 200
+        assert second["hit_chunks"] == 3          # fully cached prompt
+        # the resume path actually restored KV slabs (capped at
+        # (S-1)//16 = 2 of the 3 chunks)...
+        assert second["resumed_chunks"] == 2
+        # ...and decode is token-identical to the full prefill
+        assert second["tokens"] == first["tokens"]
+
+        fe.begin_shutdown()
+        assert _req(fe, "POST", "/v1/generate",
+                    {"tokens": toks.tolist()})[0] == 503
+    finally:
+        fe.shutdown()
+        q.close()
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -267,6 +267,45 @@ def test_request_loop_defer_retry_and_drop():
     assert recs[0].retried and recs[0].dropped and not recs[0].admitted
 
 
+class _DrainingQueue(_ScriptedQueue):
+    """Defer-rejecting queue whose backlog drains at a known FakeClock
+    time: ``submit_tokens`` succeeds iff nothing is pending."""
+
+    def __init__(self, clk: FakeClock, drain_at: float):
+        super().__init__([])
+        self._clk, self._drain_at = clk, drain_at
+
+    def pending(self) -> int:
+        return 0 if self._clk.t >= self._drain_at else 3
+
+    def submit_tokens(self, tokens):
+        return self.pending() == 0
+
+
+def test_request_loop_defer_retry_waits_for_drain():
+    """The decode-less defer retry must NOT race the still-full queue:
+    with a bounded drain-wait it polls ``pending()`` (via the injected
+    sleep) until the backlog clears, then the ONE retry lands — no
+    over-counted drop.  ``retry_wait_s=0`` restores the immediate
+    retry, which loses the race and drops."""
+    toks = np.arange(1, 1 + 2 * CHUNK_TOKENS, dtype=np.int32).reshape(1, -1)
+
+    clk = FakeClock()
+    q = _DrainingQueue(clk, drain_at=0.02)   # drains within the wait
+    recs = run_request_loop(q, [toks], prefill_fn=lambda t, h: None,
+                            now_fn=clk, sleep_fn=clk.advance,
+                            retry_wait_s=0.1)
+    assert recs[0].retried and recs[0].admitted and not recs[0].dropped
+    assert clk.t < 0.1 + 1e-9               # stopped as soon as it drained
+
+    clk = FakeClock()
+    q = _DrainingQueue(clk, drain_at=0.02)
+    recs = run_request_loop(q, [toks], prefill_fn=lambda t, h: None,
+                            now_fn=clk, sleep_fn=clk.advance,
+                            retry_wait_s=0.0)   # old behavior: no wait
+    assert recs[0].retried and recs[0].dropped and not recs[0].admitted
+
+
 # ---------------------------------------------------------------------------
 # launcher report (the empty-slice NaN regression)
 
@@ -277,12 +316,85 @@ def test_serve_main_tiny_prompt_reports_na(capsys):
     from repro.launch import serve
     with warnings.catch_warnings():
         warnings.simplefilter("error", RuntimeWarning)
-        serve.main(argv=["--arch", "yi-9b", "--reduced", "--requests", "1",
-                         "--batch", "1", "--prompt-len", "16",
-                         "--decode-tokens", "2"])
+        records = serve.main(
+            argv=["--arch", "yi-9b", "--reduced", "--requests", "1",
+                  "--batch", "1", "--prompt-len", "16",
+                  "--decode-tokens", "2"])
     out = capsys.readouterr().out
     assert "prefix chunks cached n/a" in out
     assert "nan" not in out.lower()
+    assert records[0].decoded is not None
+    assert records[0].decoded.shape == (1, 2)
+
+
+def test_serve_main_non_resume_decode_returns_tokens():
+    """The non-resume ``model_decode`` used to accumulate greedy tokens
+    in ``outs`` and throw them away — the launcher must surface the
+    ``(B, decode_tokens)`` array on every record."""
+    from repro.launch import serve
+    records = serve.main(
+        argv=["--arch", "yi-9b", "--reduced", "--no-resume",
+              "--requests", "2", "--batch", "1", "--prompt-len", "32",
+              "--decode-tokens", "3"])
+    assert len(records) == 2
+    for rec in records:
+        assert rec.decoded is not None
+        assert rec.decoded.shape == (1, 3)
+        assert rec.decoded.dtype.kind in "iu"
+
+
+# ---------------------------------------------------------------------------
+# trace replay validation (REPRO_SERVE_TRACE)
+
+
+def _trace_file(tmp_path, payload: str):
+    p = tmp_path / "trace.json"
+    p.write_text(payload)
+    return str(p)
+
+
+def test_trace_replay_rejects_malformed_traces(tmp_path, monkeypatch):
+    """A short/unsorted/negative trace used to slip through
+    ``_trace_arrivals`` silently and corrupt backlog accounting — every
+    malformed shape must die with a one-line actionable message."""
+    from benchmarks import serve_bench as sb
+    cases = [
+        ("{not json", "not valid JSON"),
+        ('{"a": 1}', "non-empty flat list"),
+        ("[]", "non-empty flat list"),
+        ("[[0.0, 0.1]]", "non-empty flat list"),
+        ("[0.0, NaN, 0.2]", "non-finite"),
+        ("[0.0, -0.5, 0.2]", "negative arrival offset"),
+        ("[0.0, 0.0, 0.0]", "zero makespan"),    # short + nothing to tile
+    ]
+    for payload, msg in cases:
+        path = _trace_file(tmp_path, payload)
+        monkeypatch.setenv("REPRO_SERVE_TRACE", path)
+        with pytest.raises(ValueError, match=msg):
+            sb._trace_arrivals(6)
+        assert path in str(pytest.raises(
+            ValueError, sb._trace_arrivals, 6).value)   # names the file
+
+
+def test_trace_replay_sorts_and_tiles(tmp_path, monkeypatch):
+    from benchmarks import serve_bench as sb
+    # unsorted -> sorted (replay needs nondecreasing arrivals)
+    monkeypatch.setenv("REPRO_SERVE_TRACE",
+                       _trace_file(tmp_path, "[0.3, 0.0, 0.1]"))
+    arr = sb._trace_arrivals(3)
+    np.testing.assert_allclose(arr, [0.0, 0.1, 0.3])
+    # short trace -> tiled periodically, still nondecreasing, exactly n
+    monkeypatch.setenv("REPRO_SERVE_TRACE",
+                       _trace_file(tmp_path, "[0.0, 0.1, 0.2]"))
+    arr = sb._trace_arrivals(8)
+    assert arr.shape == (8,)
+    assert np.all(np.diff(arr) >= 0)
+    np.testing.assert_allclose(arr[:3], [0.0, 0.1, 0.2])
+    assert arr[3] > 0.2                     # repeats shift past makespan
+    # exact-length trace passes through untouched
+    monkeypatch.setenv("REPRO_SERVE_TRACE",
+                       _trace_file(tmp_path, "[0.0, 0.05, 0.1]"))
+    np.testing.assert_allclose(sb._trace_arrivals(3), [0.0, 0.05, 0.1])
 
 
 # ---------------------------------------------------------------------------
@@ -308,26 +420,54 @@ def _serve_leg(rate, **kw):
     return leg
 
 
+def _http_leg(**kw):
+    return _serve_leg(120.0, **{"transport_overhead_ms": 0.8, **kw})
+
+
 def test_serve_structural_gate():
     from benchmarks import check_regression as cr
-    good = {"poisson": [_serve_leg(50.0), _serve_leg(400.0)]}
+    good = {"poisson": [_serve_leg(50.0), _serve_leg(400.0)],
+            "http": _http_leg()}
     assert cr.serve_structural_gate(good) == []
     assert cr.serve_structural_gate({"poisson": [_serve_leg(50.0)]})
     assert cr.serve_structural_gate({})
-    missing = {"poisson": [_serve_leg(50.0),
-                           {k: v for k, v in _serve_leg(400.0).items()
-                            if k != "p99_ms"}]}
+    missing = dict(good, poisson=[_serve_leg(50.0),
+                                  {k: v for k, v in _serve_leg(400.0).items()
+                                   if k != "p99_ms"}])
     assert any("p99_ms" in line for line in cr.serve_structural_gate(missing))
-    bad_frac = {"poisson": [_serve_leg(50.0),
-                            _serve_leg(400.0, shed_rate=1.5)]}
+    bad_frac = dict(good, poisson=[_serve_leg(50.0),
+                                   _serve_leg(400.0, shed_rate=1.5)])
     assert any("shed_rate" in line
                for line in cr.serve_structural_gate(bad_frac))
-    same_rate = {"poisson": [_serve_leg(50.0), _serve_leg(50.0)]}
+    same_rate = dict(good, poisson=[_serve_leg(50.0), _serve_leg(50.0)])
     assert any("distinct" in line
                for line in cr.serve_structural_gate(same_rate))
-    inverted = {"poisson": [_serve_leg(50.0),
-                            _serve_leg(400.0, p50_ms=20.0, p99_ms=5.0)]}
+    inverted = dict(good, poisson=[_serve_leg(50.0),
+                                   _serve_leg(400.0, p50_ms=20.0,
+                                              p99_ms=5.0)])
     assert any("p50" in line for line in cr.serve_structural_gate(inverted))
+
+
+def test_serve_structural_gate_requires_http_leg():
+    """The socket path must actually have been driven: a serve artifact
+    without the HTTP leg (or with an impossible transport tax) fails
+    the always-fatal structural gate."""
+    from benchmarks import check_regression as cr
+    poisson = [_serve_leg(50.0), _serve_leg(400.0)]
+    no_http = {"poisson": poisson}
+    assert any("socket path was not driven" in line
+               for line in cr.serve_structural_gate(no_http))
+    no_overhead = {"poisson": poisson,
+                   "http": {k: v for k, v in _http_leg().items()
+                            if k != "transport_overhead_ms"}}
+    assert any("transport_overhead_ms" in line
+               for line in cr.serve_structural_gate(no_overhead))
+    negative = {"poisson": poisson,
+                "http": _http_leg(transport_overhead_ms=-0.2)}
+    assert any("undercut" in line
+               for line in cr.serve_structural_gate(negative))
+    assert cr.serve_structural_gate({"poisson": poisson,
+                                     "http": _http_leg()}) == []
 
 
 def test_serve_latency_keys_for_timing_compare():

@@ -39,6 +39,7 @@ DOCTEST_MODULES = [
     "repro.kernels.xam_search.ops",
     "repro.serve.kv_index",
     "repro.serve.admit_queue",
+    "repro.serve.http_frontend",
 ]
 
 _LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
